@@ -1,0 +1,40 @@
+"""Paper Fig 2: Anderson for async Jacobi — fails at every (m, E)."""
+
+from repro.core import AndersonConfig, RunConfig, run_fixed_point
+from repro.problems import JacobiProblem
+
+from .common import COMPUTE_S, SYNC_OVERHEAD_S, row
+
+
+def run(fast: bool = False):
+    grid = 50 if fast else 100
+    tol = 1e-5 if fast else 1e-6
+    prob = JacobiProblem(grid=grid, sweeps=10)
+    rows = []
+    base_kw = dict(tol=tol, max_updates=300_000, compute_time=COMPUTE_S)
+    sync_plain = run_fixed_point(prob, RunConfig(
+        mode="sync", sync_overhead=SYNC_OVERHEAD_S, **base_kw))
+    sync_aa = run_fixed_point(prob, RunConfig(
+        mode="sync", sync_overhead=SYNC_OVERHEAD_S,
+        accel=AndersonConfig(m=20), **base_kw))
+    rows.append(row("anderson_jacobi/sync/plain", sync_plain.wall_time * 1e6,
+                    f"rounds={sync_plain.rounds}"))
+    rows.append(row("anderson_jacobi/sync/AA20", sync_aa.wall_time * 1e6,
+                    f"rounds={sync_aa.rounds};"
+                    f"reduction={sync_plain.rounds/max(sync_aa.rounds,1):.1f}x"))
+    async_plain = run_fixed_point(prob, RunConfig(mode="async", **base_kw))
+    rows.append(row("anderson_jacobi/async/plain",
+                    async_plain.wall_time * 1e6,
+                    f"WU={async_plain.worker_updates}"))
+    combos = [(5, 8), (20, 8)] if fast else [(5, 2), (5, 8), (5, 32),
+                                             (20, 8), (20, 32)]
+    for m, E in combos:
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", accel=AndersonConfig(m=m), fire_every=E, **base_kw))
+        ratio = r.worker_updates / max(async_plain.worker_updates, 1)
+        rows.append(row(f"anderson_jacobi/async/AA{m}_E{E}",
+                        r.wall_time * 1e6,
+                        f"WU={r.worker_updates};vs_plain={ratio:.2f}x;"
+                        f"conv={r.converged};"
+                        f"hurts={'yes' if ratio > 1.0 or not r.converged else 'no'}"))
+    return rows

@@ -1,0 +1,49 @@
+"""Beyond-paper: the coupling-density criterion on LM training.
+
+Full-gradient workers (evaluation-level staleness) vs multi-step
+block-coordinate workers (iterate-level corruption), +- coordinator
+Anderson, on a tiny transformer (EXPERIMENTS.md §Beyond-paper).
+"""
+
+from repro.configs import get_config
+from repro.core import AndersonConfig, FaultProfile, RunConfig, run_fixed_point
+from repro.training.async_dp import (
+    BlockGradientWorkersProblem,
+    GradientWorkersProblem,
+)
+
+from .common import row
+
+
+def _tiny_cfg():
+    return get_config("gemma_2b").reduced(
+        n_layers=1, d_model=32, vocab_size=64, d_ff=64, n_heads=2,
+        n_kv_heads=1, head_dim=16)
+
+
+def run(fast: bool = False):
+    rows = []
+    budget = 120 if fast else 320
+    faults = {0: FaultProfile(delay_mean=0.05)}
+    for name, cls, kw in [
+        ("full_grad", GradientWorkersProblem, dict(lr=0.25)),
+        ("block_grad", BlockGradientWorkersProblem,
+         dict(lr=0.25, local_steps=4)),
+    ]:
+        prob = cls(_tiny_cfg(), batch=4, seq=16, **kw)
+        l0 = prob.loss(prob.initial())
+        plain = run_fixed_point(prob, RunConfig(
+            mode="async", tol=1e-9, max_updates=budget, compute_time=5e-3,
+            faults=faults, record_every=10**9, seed=0))
+        l_plain = prob.loss(plain.x)
+        prob2 = cls(_tiny_cfg(), batch=4, seq=16, **kw)
+        acc = run_fixed_point(prob2, RunConfig(
+            mode="async", tol=1e-9, max_updates=budget, compute_time=5e-3,
+            accel=AndersonConfig(m=5), fire_every=8, faults=faults,
+            record_every=10**9, seed=0))
+        l_acc = prob2.loss(acc.x)
+        rows.append(row(f"async_dp/{name}", plain.wall_time * 1e6,
+                        f"loss0={l0:.3f};plain={l_plain:.3f};"
+                        f"anderson={l_acc:.3f};"
+                        f"anderson_helps={'yes' if l_acc < l_plain else 'no'}"))
+    return rows

@@ -1,0 +1,16 @@
+"""Shared benchmark utilities: calibration constants + row schema.
+
+Wall-clock calibration (EXPERIMENTS.md §Paper-repro): per-update compute
+4.5 ms and sync barrier overhead 2.7 ms reproduce the paper's Table 2 sync
+column to <2% (23.4s/87.8s/348s) — these constants are the paper's own
+implied infrastructure costs on ACES, and all virtual-time benchmarks use
+them so sync/async ratios are comparable with the paper's.
+"""
+
+COMPUTE_S = 4.5e-3
+SYNC_OVERHEAD_S = 2.7e-3
+
+
+def row(name: str, us_per_call: float, derived) -> dict:
+    return {"name": name, "us_per_call": round(float(us_per_call), 3),
+            "derived": derived}

@@ -1,0 +1,30 @@
+"""Paper Fig 3: multi-sweep local solves need ~90% block internal coupling."""
+
+from repro.core import RunConfig, block_internal_coupling, run_fixed_point
+from repro.problems import JacobiProblem
+
+from .common import COMPUTE_S, row
+
+
+def run(fast: bool = False):
+    grid = 40
+    tol = 1e-5
+    rows = []
+    for rows_per_block in ([1, 5] if fast else [1, 2, 4, 8, 20]):
+        p = grid // rows_per_block  # workers
+        single = JacobiProblem(grid=grid, sweeps=1)
+        multi = JacobiProblem(grid=grid, sweeps=10)
+        blocks = single.default_blocks(p)
+        coup = block_internal_coupling(single, blocks)
+        kw = dict(n_workers=p, mode="async", tol=tol, max_updates=2_000_000,
+                  compute_time=COMPUTE_S, record_every=4 * p)
+        r1 = run_fixed_point(single, RunConfig(**kw))
+        r10 = run_fixed_point(multi, RunConfig(**kw))
+        # benefit: sweep-normalized work ratio (10-sweep does 10x sweeps/WU)
+        benefit = r1.worker_updates / max(r10.worker_updates, 1)
+        rows.append(row(
+            f"coupling_threshold/rows{rows_per_block}",
+            r10.wall_time * 1e6,
+            f"coupling={coup:.3f};WU1={r1.worker_updates};"
+            f"WU10={r10.worker_updates};benefit={benefit:.1f}x"))
+    return rows

@@ -1,0 +1,72 @@
+"""Per-kernel micro-bench: jnp-reference timing + kernel/oracle agreement.
+
+interpret-mode Pallas timing is NOT a perf claim (it executes the kernel
+body in Python); us_per_call reports the jitted jnp ORACLE timing as the
+CPU-side cost anchor, and derived records the kernel-vs-oracle max error.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import row
+
+
+def _time(fn, *a, reps=5, **kw):
+    fn(*a, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*a, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run(fast: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    # flash attention
+    B, S, nq, nkv, hd = 2, 256, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, nq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, nkv, hd)), jnp.float32)
+    ref_fn = jax.jit(lambda q, k, v: ref.ref_attention(q, k, v, causal=True))
+    us, want = _time(ref_fn, q, k, v)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    err = float(jnp.max(jnp.abs(got - want)))
+    rows.append(row("kernels/flash_attention_gqa", us, f"maxerr={err:.2e}"))
+    # jacobi
+    g = 100
+    x = jnp.asarray(rng.standard_normal(g * g))
+    b = jnp.asarray(rng.standard_normal(g * g))
+    ref_j = jax.jit(lambda x, b: ref.ref_jacobi_sweep(x, b, g))
+    us, want = _time(ref_j, x, b)
+    got = ops.jacobi_sweep(x, b, g)
+    rows.append(row("kernels/jacobi_stencil", us,
+                    f"maxerr={float(jnp.max(jnp.abs(got-want))):.2e}"))
+    # bellman
+    S_, A, bb = 500, 4, 5
+    idx = jnp.asarray(rng.integers(0, S_, (S_, A, bb)), jnp.int32)
+    probs = jnp.asarray(rng.dirichlet(np.ones(bb), (S_, A)), jnp.float32)
+    R = jnp.asarray(rng.uniform(size=(S_, A)), jnp.float32)
+    V = jnp.asarray(rng.standard_normal(S_), jnp.float32)
+    ref_b = jax.jit(lambda i, p, r, v: ref.ref_bellman(i, p, r, v, gamma=0.95))
+    us, want = _time(ref_b, idx, probs, R, V)
+    got = ops.bellman(idx, probs, R, V, gamma=0.95, block_s=100)
+    rows.append(row("kernels/bellman", us,
+                    f"maxerr={float(jnp.max(jnp.abs(got-want))):.2e}"))
+    # anderson mix
+    h, N = 6, 1 << 16
+    X = jnp.asarray(rng.standard_normal((h, N)), jnp.float32)
+    G = jnp.asarray(rng.standard_normal((h, N)), jnp.float32)
+    al = rng.standard_normal(h)
+    al = jnp.asarray(al / al.sum(), jnp.float32)
+    ref_m = jax.jit(lambda X, G, a: ref.ref_anderson_mix(X, G, a, beta=1.0))
+    us, want = _time(ref_m, X, G, al)
+    got = ops.anderson_mix(X, G, al, beta=1.0, block_n=8192)
+    rows.append(row("kernels/anderson_mix", us,
+                    f"maxerr={float(jnp.max(jnp.abs(got-want))):.2e}"))
+    return rows

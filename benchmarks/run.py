@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes JSON to
+experiments/bench/.  ``--fast`` runs reduced problem sizes; ``--only``
+selects one module.
+"""
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import time
+
+MODULES = [
+    "straggler_jacobi",   # Table 2 / Fig 1
+    "anderson_jacobi",    # Fig 2
+    "coupling_threshold", # Fig 3
+    "vi_anderson",        # Figs 4-5
+    "vi_selection",       # Fig 6
+    "vi_straggler",       # Fig 7 / Table 3
+    "scf_async",          # Figs 8-9
+    "async_dp_lm",        # beyond-paper (EXPERIMENTS §Beyond-paper)
+    "kernels_bench",      # kernel micro-bench + agreement
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    mods = [m for m in MODULES if args.only in (None, m)]
+    if not mods:
+        raise SystemExit(f"unknown --only {args.only}; choices: {MODULES}")
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=args.fast)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump({"rows": rows, "seconds": time.time() - t0}, f, indent=1)
+        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Paper Figs 8-9: SCF under asynchrony.
+
+(a) U/|t|=2, 8 atoms: sync DIIS converges in ~28 rounds; plain async finds
+    a *wrong* fixed point; coordinator DIIS corrects the bias.
+(b) U/|t|=2.5, 8 atoms, damped: multistability — fraction of seeds finding
+    the correct energy vs straggler delay (moderate delay helps).
+(c) U/|t|=4, 20 atoms: straggler throughput tolerance (paper: 16.9x).
+"""
+
+import numpy as np
+
+from repro.core import AndersonConfig, FaultProfile, RunConfig, run_fixed_point
+from repro.problems import PPPChain, SCFProblem
+
+from .common import COMPUTE_S, SYNC_OVERHEAD_S, row
+
+
+def run(fast: bool = False):
+    rows = []
+    # ---------------- (a) weak correlation: DIIS corrects async bias ----
+    chain = PPPChain(n_atoms=8, U=2.0)
+    prob = SCFProblem(chain)
+    e_ref = prob.energy(prob.reference_solution())
+    kw = dict(tol=1e-9, max_updates=120_000, compute_time=COMPUTE_S)
+    sd = run_fixed_point(prob, RunConfig(
+        mode="sync", sync_overhead=SYNC_OVERHEAD_S,
+        accel=AndersonConfig(m=8), **kw))
+    rows.append(row("scf/U2/sync_diis", sd.wall_time * 1e6,
+                    f"rounds={sd.rounds};E_err={abs(prob.energy(sd.x)-e_ref):.2e}"))
+    faults = {0: FaultProfile(delay_mean=0.02)}
+    ap = run_fixed_point(prob, RunConfig(mode="async", faults=faults, seed=5,
+                                         **kw))
+    rows.append(row("scf/U2/async_plain", ap.wall_time * 1e6,
+                    f"E_err={abs(prob.energy(ap.x)-e_ref):.2e}"))
+    ad = run_fixed_point(prob, RunConfig(
+        mode="async", accel=AndersonConfig(m=8), fire_every=4, faults=faults,
+        seed=5, **kw))
+    rows.append(row("scf/U2/async_diis", ad.wall_time * 1e6,
+                    f"WU={ad.worker_updates};"
+                    f"E_err={abs(prob.energy(ad.x)-e_ref):.2e};"
+                    f"corrected={abs(prob.energy(ad.x)-e_ref) < 1e-5}"))
+
+    # ---------------- (b) multistability (UHF: PM saddle vs SDW) ---------
+    # Our lattice-unit Ohno parameterization has a single RHF basin up to
+    # U/|t|=4 (EXPERIMENTS.md §Paper-repro discussion), so the paper's Fig 8
+    # stochasticity is probed in the UHF landscape: a paramagnetic saddle
+    # ("wrong" fixed point, energy gap ~0.11 eV at U=3 — inside the paper's
+    # 0.05-0.48 eV spread) competing with the spin-density-wave ground
+    # state.  Whether an async run reaches the correct FP depends on
+    # whether scheduling/noise breaks spin symmetry — the paper's "which
+    # fixed point you get depends on the realization" mechanism.
+    from repro.problems import UHFSCFProblem
+
+    chain3 = PPPChain(n_atoms=8, U=3.0)
+    prob_pm = UHFSCFProblem(chain3, spin_seed=0.0)  # symmetric start
+    prob_sdw = UHFSCFProblem(chain3, spin_seed=0.05)
+    e_sdw = prob_sdw.reference_energy()
+    x = prob_pm.initial()
+    for _ in range(100):
+        x = prob_pm.full_map(x)
+    e_pm = prob_pm.energy(x)
+    rows.append(row("scf/U3_uhf/basin_gap", 0.0,
+                    f"E_PM={e_pm:.5f};E_SDW={e_sdw:.5f};gap={e_pm-e_sdw:.4f}"))
+    n_seeds = 2 if fast else 6
+    budget = 4000 if fast else 10000
+    for noise, delay_ms in [(0.0, 0), (1e-4, 0), (1e-4, 20)]:
+        faults = {i: FaultProfile(noise_std=noise,
+                                  delay_mean=(delay_ms / 1e3 if i == 0 else 0))
+                  for i in range(4)}
+        esc = 0
+        for seed in range(n_seeds):
+            r = run_fixed_point(prob_pm, RunConfig(
+                mode="async", block_damping=0.3, tol=1e-6,
+                max_updates=budget, compute_time=COMPUTE_S, faults=faults,
+                seed=seed, record_every=40))
+            if prob_pm.energy(r.x) < e_pm - 1e-3:
+                esc += 1
+        rows.append(row(
+            f"scf/U3_uhf/escape_n{noise:g}_d{delay_ms}ms", 0.0,
+            f"reached_ground_state={esc}/{n_seeds}"))
+
+    # ---------------- (c) strong correlation straggler tolerance ---------
+    chain4 = PPPChain(n_atoms=8 if fast else 20, U=4.0)
+    prob4 = SCFProblem(chain4)
+    faults = {0: FaultProfile(delay_mean=0.1)}
+    budget = 4000 if fast else 12000
+    kw4 = dict(tol=1e-12, compute_time=COMPUTE_S, faults=faults,
+               max_updates=budget)
+    s4 = run_fixed_point(prob4, RunConfig(
+        mode="sync", sync_overhead=SYNC_OVERHEAD_S, **kw4))
+    a4 = run_fixed_point(prob4, RunConfig(mode="async", **kw4))
+    # throughput speedup at equal work budget (incomplete convergence, as
+    # in the paper's Fig 9b)
+    tput = (s4.wall_time / max(s4.worker_updates, 1)) / \
+        (a4.wall_time / max(a4.worker_updates, 1))
+    rows.append(row("scf/U4/straggler_throughput", a4.wall_time * 1e6,
+                    f"speedup={tput:.1f}x"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Table 2: sync vs async Jacobi under a delayed worker."""
+
+import numpy as np
+
+from repro.core import FaultProfile, RunConfig, run_fixed_point
+from repro.problems import JacobiProblem
+
+from .common import COMPUTE_S, SYNC_OVERHEAD_S, row
+
+
+def run(fast: bool = False):
+    grid = 50 if fast else 100
+    tol = 1e-5 if fast else 1e-6
+    prob = JacobiProblem(grid=grid, sweeps=10)
+    rows = []
+    for delay_ms in ([0, 100] if fast else [0, 5, 20, 100]):
+        faults = ({0: FaultProfile(delay_mean=delay_ms / 1e3)}
+                  if delay_ms else None)
+        s = run_fixed_point(prob, RunConfig(
+            mode="sync", tol=tol, max_updates=10**6, compute_time=COMPUTE_S,
+            sync_overhead=SYNC_OVERHEAD_S, faults=faults))
+        a = run_fixed_point(prob, RunConfig(
+            mode="async", tol=tol, max_updates=10**6, compute_time=COMPUTE_S,
+            faults=faults))
+        assert s.converged and a.converged
+        sp = s.wall_time / a.wall_time
+        rows.append(row(f"jacobi_straggler/d{delay_ms}ms/sync",
+                        s.wall_time * 1e6 / max(s.worker_updates, 1),
+                        f"WU={s.worker_updates};T={s.wall_time:.1f}s"))
+        rows.append(row(f"jacobi_straggler/d{delay_ms}ms/async",
+                        a.wall_time * 1e6 / max(a.worker_updates, 1),
+                        f"WU={a.worker_updates};T={a.wall_time:.1f}s;"
+                        f"speedup={sp:.2f}x"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Fig 7 / Table 3: VI straggler tolerance (paper: 7.7x at 100 ms)."""
+
+from repro.core import FaultProfile, RunConfig, run_fixed_point
+from repro.problems import GarnetMDP, ValueIterationProblem
+
+from .common import COMPUTE_S, SYNC_OVERHEAD_S, row
+
+
+def run(fast: bool = False):
+    S = 200 if fast else 500
+    mdp = GarnetMDP(S=S, A=4, b=5, gamma=0.95, seed=0)
+    prob = ValueIterationProblem(mdp)
+    rows = []
+    for delay_ms in ([100] if fast else [0, 20, 100]):
+        faults = ({0: FaultProfile(delay_mean=delay_ms / 1e3)}
+                  if delay_ms else None)
+        kw = dict(tol=1e-6, max_updates=10**6, compute_time=COMPUTE_S,
+                  faults=faults)
+        s = run_fixed_point(prob, RunConfig(
+            mode="sync", sync_overhead=SYNC_OVERHEAD_S, **kw))
+        a = run_fixed_point(prob, RunConfig(mode="async", **kw))
+        rows.append(row(f"vi_straggler/d{delay_ms}ms",
+                        a.wall_time * 1e6,
+                        f"syncT={s.wall_time:.1f}s;asyncT={a.wall_time:.1f}s;"
+                        f"speedup={s.wall_time/a.wall_time:.2f}x;"
+                        f"work_inflation="
+                        f"{a.worker_updates/max(s.worker_updates,1):.2f}x"))
+    return rows

@@ -1,0 +1,51 @@
+"""Serve a small model: batched prefill + token-by-token decode with the
+ring-buffer KV cache, verifying decode equals teacher forcing.
+
+Usage:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, forward_train, init_params, prefill
+
+
+def main():
+    cfg = get_config("gemma2_2b").reduced(
+        n_layers=4, d_model=128, d_ff=256, vocab_size=512, n_heads=4,
+        n_kv_heads=2, head_dim=32, window=16)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, S0, steps = 4, 24, 24
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S0)))
+
+    logits, caches = prefill(cfg, params, {"tokens": prompt}, max_len=S0 + steps)
+    dstep = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    generated = [toks]
+    t0 = time.time()
+    for t in range(steps - 1):
+        logits, caches = dstep(params, caches, toks,
+                               jnp.asarray(S0 + t, jnp.int32))
+        toks = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        generated.append(toks)
+    dt = (time.time() - t0) / (steps - 1)
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"generated {gen.shape} tokens, {dt*1e3:.1f} ms/step/batch")
+    print("sample row:", np.asarray(gen[0])[:16])
+
+    # verify: greedy decode == teacher-forced argmax over the same prefix
+    full = jnp.concatenate([prompt, gen], axis=1)
+    ref_logits, _ = forward_train(cfg, params, {"tokens": full})
+    ref_next = jnp.argmax(ref_logits[:, S0 - 1 : S0 + steps - 1], axis=-1)
+    match = float(jnp.mean((ref_next == gen).astype(jnp.float32)))
+    print(f"decode/teacher-forcing agreement: {match*100:.1f}%")
+    assert match > 0.99
+
+
+if __name__ == "__main__":
+    main()

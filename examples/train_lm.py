@@ -1,0 +1,42 @@
+"""End-to-end driver: train a small LM with checkpoint/restart fault
+tolerance on synthetic bigram data, then resume after a simulated crash.
+
+Usage:  PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+
+import argparse
+import shutil
+
+from repro.configs import get_config
+from repro.training.train_loop import SimulatedCrash, TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    cfg = get_config("gemma_2b").reduced(
+        n_layers=2, d_model=128, d_ff=256, vocab_size=512, n_heads=4,
+        n_kv_heads=1, head_dim=32)
+    tcfg = TrainConfig(steps=args.steps, batch=8, seq=64, lr=3e-3,
+                       checkpoint_dir=args.ckpt, checkpoint_every=20,
+                       log_every=10, crash_at_step=args.steps // 2)
+    print(f"[1] training with an injected crash at step {tcfg.crash_at_step}")
+    try:
+        train(cfg, tcfg)
+    except SimulatedCrash as e:
+        print(f"    CRASH: {e}")
+    print("[2] restarting — resumes from the last atomic checkpoint")
+    out = train(cfg, TrainConfig(steps=args.steps, batch=8, seq=64, lr=3e-3,
+                                 checkpoint_dir=args.ckpt,
+                                 checkpoint_every=20, log_every=10))
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"done. loss {first:.3f} -> {last:.3f} (resumed run)")
+    assert last < 5.0, "loss should be well below uniform (ln 512 = 6.24)"
+
+
+if __name__ == "__main__":
+    main()

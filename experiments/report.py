@@ -1,0 +1,53 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+Usage: python experiments/report.py [--dir experiments/dryrun]
+Prints GitHub-markdown tables (baselines + variants).
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | peak GiB/dev | fits | compute s | "
+          "memory s | collective s | bottleneck | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "OK":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                  f"| — | — | — | — | — | {reason} | — |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | OK "
+              f"| {r['peak_bytes']/2**30:.2f} "
+              f"| {'Y' if r['fits_hbm'] else 'N'} "
+              f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+              f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+              f"| {r['useful_fraction']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    recs = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    for mesh in ("16x16", "2x16x16"):
+        base = [r for r in recs
+                if r["mesh"] == mesh and r["variant"] == "baseline"]
+        if base:
+            fmt(base, f"Baseline, mesh {mesh}")
+    variants = sorted(set(r["variant"] for r in recs) - {"baseline"})
+    for v in variants:
+        vr = [r for r in recs if r["variant"] == v]
+        if vr:
+            fmt(vr, f"Variant: {v}")
+
+
+if __name__ == "__main__":
+    main()

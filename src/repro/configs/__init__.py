@@ -1,0 +1,5 @@
+"""One config module per assigned architecture (+ registry in base)."""
+
+from .base import ARCH_IDS, MambaConfig, ModelConfig, MoEConfig, all_configs, get_config
+
+__all__ = ["ARCH_IDS", "MambaConfig", "ModelConfig", "MoEConfig", "all_configs", "get_config"]

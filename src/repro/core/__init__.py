@@ -1,0 +1,32 @@
+"""Core library: the paper's contribution as composable JAX-backed modules.
+
+- :mod:`repro.core.fixedpoint`   — partitioned fixed-point problem interface
+- :mod:`repro.core.anderson`     — Anderson/DIIS with Eq. 5 safeguard
+- :mod:`repro.core.async_engine` — virtual-time coordinator/worker engine
+  with per-worker fault injection (delay / noise / drop / staleness cap)
+- :mod:`repro.core.coupling`     — coupling-density analysis (paper §3.5)
+"""
+
+from .anderson import AndersonConfig, AndersonState, diis_solve
+from .async_engine import FaultProfile, RunConfig, RunResult, run_fixed_point
+from .coupling import (
+    block_internal_coupling,
+    coupling_density,
+    predict_acceleration_survives,
+)
+from .fixedpoint import FixedPointProblem, contiguous_blocks
+
+__all__ = [
+    "AndersonConfig",
+    "AndersonState",
+    "diis_solve",
+    "FaultProfile",
+    "RunConfig",
+    "RunResult",
+    "run_fixed_point",
+    "FixedPointProblem",
+    "contiguous_blocks",
+    "coupling_density",
+    "block_internal_coupling",
+    "predict_acceleration_survives",
+]

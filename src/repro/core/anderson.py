@@ -1,0 +1,155 @@
+"""Anderson acceleration / DIIS with the paper's residual-decrease safeguard.
+
+Implements the coordinator-level accelerator of paper §3.2/§3.4: keep a window
+of the last ``m+1`` iterates ``x_j``, their map values ``g_j = G(x_j)`` and
+residuals ``f_j`` (default ``g_j - x_j``; SCF overrides with the DIIS
+commutator ``F P S - S P F``), and solve the paper's Eq. (2)
+
+    min_alpha || sum_j alpha_j f_j ||_2   s.t.  sum_j alpha_j = 1,
+
+via the classic DIIS/KKT system with relative Tikhonov regularization.  The
+extrapolated iterate is
+
+    x_acc = sum_j alpha_j * ((1 - beta) * x_j + beta * g_j)
+
+so ``beta=1`` is undamped Anderson(m) (x_acc = sum alpha_j G(x_j), the paper's
+form after Eq. (2)) and ``beta=0`` is classic iterate-space DIIS mixing.
+
+The safeguard (paper Eq. 5) is applied by the *caller* (the coordinator in
+``async_engine``), because it requires an extra residual evaluation:
+accept ``x_acc`` only if ``res(x_acc) < res(x)``; otherwise fall back to the
+un-extrapolated map value ``G(x)``.  Without it, Anderson on value iteration
+diverges catastrophically (residual -> 1e68 in the paper; reproduced in
+``tests/test_anderson.py``).
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["AndersonConfig", "AndersonState", "diis_solve"]
+
+
+@dataclass
+class AndersonConfig:
+    """Configuration of the coordinator-level accelerator.
+
+    Attributes:
+      m: window size; the history keeps the last ``m + 1`` (x, g, f) triples.
+      beta: mixing parameter in [0, 1]; 1.0 = undamped AA-II / Anderson form.
+      reg: relative Tikhonov regularization of the DIIS normal matrix; guards
+        against the near-rank-deficient histories produced by asynchronous
+        composite iterates (paper §3.4).
+      safeguard: enforce paper Eq. 5 (performed by the caller).
+      restart_on_reject: drop the history window when the safeguard rejects
+        an extrapolation (fresh subspace after iterate corruption).
+      max_coeff: conditioning guard — reject proposals with ||alpha||_1
+        above this (used in addition to, not instead of, Eq. 5).
+    """
+
+    m: int = 5
+    beta: float = 1.0
+    reg: float = 1e-10
+    safeguard: bool = True
+    restart_on_reject: bool = False
+    max_coeff: float = 1e8
+
+
+def diis_solve(F: np.ndarray, reg: float) -> np.ndarray:
+    """Solve Eq. (2): min ||alpha @ F|| s.t. sum(alpha) = 1.
+
+    Args:
+      F: (h, n) residual history, oldest first.
+      reg: relative Tikhonov regularization.
+
+    Returns:
+      alpha: (h,) simplex-constrained coefficients.
+    """
+    h = F.shape[0]
+    B = F @ F.T  # (h, h) Gram matrix (the classic DIIS "B matrix")
+    scale = max(np.trace(B) / h, 1e-300)
+    # KKT system [[B + reg*I, 1], [1^T, 0]] [alpha; lam] = [0; 1]
+    A = np.zeros((h + 1, h + 1))
+    A[:h, :h] = B + (reg * scale) * np.eye(h)
+    A[:h, h] = 1.0
+    A[h, :h] = 1.0
+    rhs = np.zeros(h + 1)
+    rhs[h] = 1.0
+    try:
+        sol = np.linalg.solve(A, rhs)
+    except np.linalg.LinAlgError:
+        sol, *_ = np.linalg.lstsq(A, rhs, rcond=None)
+    return sol[:h]
+
+
+@dataclass
+class AndersonState:
+    """Mutable coordinator-side accelerator state (history window)."""
+
+    config: AndersonConfig
+    xs: Deque[np.ndarray] = field(default_factory=collections.deque)
+    gs: Deque[np.ndarray] = field(default_factory=collections.deque)
+    fs: Deque[np.ndarray] = field(default_factory=collections.deque)
+    n_accept: int = 0
+    n_reject: int = 0
+    n_fire: int = 0
+    last_alpha: Optional[np.ndarray] = None
+
+    def push(
+        self, x: np.ndarray, g: np.ndarray, f: Optional[np.ndarray] = None
+    ) -> None:
+        """Record an (iterate, map value, residual) triple; keeps last m+1.
+
+        ``f`` defaults to ``g - x`` (Anderson residual); SCF passes the DIIS
+        commutator instead.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        g = np.asarray(g, dtype=np.float64)
+        self.xs.append(x.copy())
+        self.gs.append(g.copy())
+        self.fs.append((g - x).copy() if f is None else np.asarray(f, np.float64).copy())
+        while len(self.xs) > self.config.m + 1:
+            self.xs.popleft()
+            self.gs.popleft()
+            self.fs.popleft()
+
+    def reset(self) -> None:
+        self.xs.clear()
+        self.gs.clear()
+        self.fs.clear()
+
+    @property
+    def depth(self) -> int:
+        return len(self.xs)
+
+    def propose(self) -> Optional[np.ndarray]:
+        """Extrapolate from the current window; None if degenerate."""
+        self.n_fire += 1
+        if not self.xs:
+            return None
+        beta = self.config.beta
+        if len(self.xs) == 1:
+            return (1.0 - beta) * self.xs[0] + beta * self.gs[0]
+        F = np.stack(self.fs)
+        alpha = diis_solve(F, self.config.reg)
+        if not np.all(np.isfinite(alpha)) or np.abs(alpha).sum() > self.config.max_coeff:
+            return None
+        self.last_alpha = alpha
+        X = np.stack(self.xs)
+        G = np.stack(self.gs)
+        x_acc = alpha @ ((1.0 - beta) * X + beta * G)
+        if not np.all(np.isfinite(x_acc)):
+            return None
+        return x_acc
+
+    def record_accept(self) -> None:
+        self.n_accept += 1
+
+    def record_reject(self) -> None:
+        self.n_reject += 1
+        if self.config.restart_on_reject:
+            self.reset()

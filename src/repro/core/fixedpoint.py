@@ -1,0 +1,117 @@
+"""Fixed-point problem interface for the async coordinator/worker engine.
+
+A problem exposes the partitioned Frommer–Szyld model of paper §3.1: the
+global state is a flat float64 vector ``x`` of length ``n``; worker ``l``
+computes new values for an index block from a (possibly stale) snapshot of
+the full state.  Two return modes matter for the paper's central finding:
+
+  * ``block``   — the worker returns only its owned components (partial
+                  update; this is what the paper's systems do, and what
+                  produces *iterate-level corruption* for low-coupling maps);
+  * ``full_map``— the worker returns a full map evaluation (the paper's
+                  §6 future-work redesign; staleness then enters only as an
+                  *evaluation-level perturbation*).
+
+All numerically heavy evaluations inside concrete problems are jitted JAX;
+the flat numpy view here is the coordinator-side contract.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["FixedPointProblem", "contiguous_blocks"]
+
+
+def contiguous_blocks(n: int, p: int) -> List[np.ndarray]:
+    """Split ``range(n)`` into ``p`` contiguous, near-equal index blocks."""
+    bounds = np.linspace(0, n, p + 1).astype(np.int64)
+    return [np.arange(bounds[i], bounds[i + 1]) for i in range(p)]
+
+
+class FixedPointProblem(abc.ABC):
+    """A fixed-point iteration ``x <- G(x)`` with block partitioning."""
+
+    #: flattened state size
+    n: int
+
+    # ------------------------------------------------------------------ #
+    # Required interface
+    # ------------------------------------------------------------------ #
+    @abc.abstractmethod
+    def initial(self) -> np.ndarray:
+        """Initial iterate (flat, float64)."""
+
+    @abc.abstractmethod
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        """One application of G to the full state."""
+
+    @abc.abstractmethod
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        """New values at ``indices`` computed from the full snapshot ``x``.
+
+        This is the worker computation.  Problems may do more work per call
+        than a strict ``G`` restriction (e.g. Jacobi multi-sweep local
+        solves, paper §5.1) — that is part of the studied design space.
+        """
+
+    # ------------------------------------------------------------------ #
+    # Residuals
+    # ------------------------------------------------------------------ #
+    def residual(self, x: np.ndarray) -> np.ndarray:
+        """Natural problem residual (default: fixed-point residual)."""
+        return self.full_map(x) - x
+
+    def residual_norm(self, x: np.ndarray) -> float:
+        """Scalar convergence measure (default: 2-norm of residual)."""
+        return float(np.linalg.norm(self.residual(x)))
+
+    def component_residual(self, x: np.ndarray) -> np.ndarray:
+        """Per-component |residual| for greedy (Gauss–Southwell) selection."""
+        return np.abs(self.residual(x))
+
+    def accel_residual(self, x: np.ndarray, g: np.ndarray) -> np.ndarray:
+        """Residual fed to Anderson/DIIS (default g - x; SCF: commutator)."""
+        return g - x
+
+    def project(self, x: np.ndarray) -> np.ndarray:
+        """Coordinator-side projection after each application (default: id).
+
+        SCF symmetrizes the assembled density matrix here (paper §3.3.3);
+        self-stabilizing ABFT-style state projections also plug in here.
+        """
+        return x
+
+    # ------------------------------------------------------------------ #
+    # Partitioning / reference
+    # ------------------------------------------------------------------ #
+    def default_blocks(self, p: int) -> List[np.ndarray]:
+        return contiguous_blocks(self.n, p)
+
+    def exact_solution(self) -> Optional[np.ndarray]:
+        """Known solution for validation, if available."""
+        return None
+
+    def error_norm(self, x: np.ndarray) -> Optional[float]:
+        sol = self.exact_solution()
+        if sol is None:
+            return None
+        return float(np.linalg.norm(x - sol))
+
+    # ------------------------------------------------------------------ #
+    # Structure (coupling density, paper §3.5)
+    # ------------------------------------------------------------------ #
+    def dependency_counts(self) -> Optional[np.ndarray]:
+        """Number of components each component's update reads (or None).
+
+        Used by :mod:`repro.core.coupling` to compute coupling density and
+        block internal coupling; dense maps (SCF) return ``n`` for all.
+        """
+        return None
+
+    def dependency_indices(self, i: int) -> Optional[np.ndarray]:
+        """Indices read by component ``i``'s update (or None if dense)."""
+        return None

@@ -1,0 +1,123 @@
+"""Logical-axis sharding rules for the production meshes (DP/FSDP/TP/EP/SP).
+
+A rule table maps logical axis names (used by ParamSpec declarations and
+``shard()`` activation constraints) to mesh axes.  ``resolve_tree`` turns a
+ParamSpec tree into a NamedSharding tree, dropping mesh axes that don't
+divide a dimension (e.g. 8 KV heads on a 16-way "model" axis -> replicated,
+as designed for GQA; see DESIGN.md §5).
+
+Baseline rule set (hillclimbed variants live in launch/dryrun.py):
+  batch        -> ("pod", "data")     data parallel across pods
+  embed        -> "data"              FSDP / ZeRO-3 weight sharding
+  vocab/heads/ffn/experts/inner -> "model"   tensor / expert parallel
+  cache_seq    -> "model" (+ "data" when batch can't fill the data axis —
+                  sequence parallelism for long-context decode)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+Rules = Dict[str, Any]
+
+BASE_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "embed": "data",  # FSDP
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "ffn_act": "model",
+    "experts": "model",  # EP
+    "expert_ffn": None,
+    "expert_ffn_act": None,
+    "expert_capacity": None,  # "data" = capacity-sharded EP (variant)
+    "inner": "model",  # mamba/xlstm inner dim
+    "layers": None,
+    "cache_seq": "model",
+    "enc_seq": "model",
+}
+
+
+def long_decode_rules() -> Rules:
+    """Sequence parallelism for batch-1 long decode: KV over data+model."""
+    r = dict(BASE_RULES)
+    r["cache_seq"] = ("data", "model")
+    return r
+
+
+def resolve_axes(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Logical axes + shape -> PartitionSpec.
+
+    Drops a mesh axis if (a) it isn't in the mesh, (b) it was already used
+    by an earlier dimension of this tensor, or (c) it doesn't divide the
+    dimension (predictable replication instead of GSPMD padding).
+    """
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        rule = rules.get(ax) if ax is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        cand = rule if isinstance(rule, tuple) else (rule,)
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        # greedy prefix that divides the dimension
+        keep = []
+        size = 1
+        for a in cand:
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            used.add(keep[0])
+            parts.append(keep[0])
+        else:
+            used.update(keep)
+            parts.append(tuple(keep))
+    return P(*parts)
+
+
+def spec_tree_to_shardings(spec_tree, rules: Rules, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree."""
+
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, resolve_axes(s.axes, s.shape, rules, mesh))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def sharding_for(shape: Tuple[int, ...], axes, rules: Rules, mesh: Mesh):
+    return NamedSharding(mesh, resolve_axes(tuple(axes), shape, rules, mesh))
+
+
+def bytes_per_device(spec_tree, rules: Rules, mesh: Mesh) -> int:
+    """Estimated per-device bytes of a ParamSpec tree under the rules."""
+    total = 0
+    for s in jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, ParamSpec)):
+        p = resolve_axes(s.axes, s.shape, rules, mesh)
+        shards = 1
+        for part in p:
+            if part is None:
+                continue
+            axs = part if isinstance(part, tuple) else (part,)
+            for a in axs:
+                shards *= mesh.shape[a]
+        total += int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize // shards
+    return total

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash_attention — LM attention hot spot (GQA/causal/window/softcap)
+jacobi_stencil  — paper §3.3.1 five-point sweep
+bellman         — paper §3.3.2 Bellman operator
+anderson_mix    — paper Eq. 2 fused extrapolation over large states
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+interpret=True execution validates them on CPU (tests/test_kernels.py).
+"""
+
+from . import ops as kernel_ops  # noqa: F401
+from . import ops as jacobi_ops  # noqa: F401  (JacobiProblem backend alias)

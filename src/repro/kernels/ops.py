@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels execute their bodies in Python for validation) and False on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import anderson_mix as _mix
+from . import bellman as _bellman
+from . import flash_attention as _flash
+from . import jacobi_stencil as _jacobi
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, q_offset: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError("expected (B, S, heads, head_dim) inputs")
+    if k.shape != v.shape:
+        raise ValueError(f"k/v mismatch: {k.shape} vs {v.shape}")
+    if q.shape[2] % k.shape[2]:
+        raise ValueError(f"q heads {q.shape[2]} not a multiple of kv heads "
+                         f"{k.shape[2]}")
+    interp = _interpret_default() if interpret is None else interpret
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+        interpret=interp)
+
+
+def jacobi_sweep(x, b, g: int, *, block_rows: int = 8,
+                 interpret: Optional[bool] = None):
+    if x.shape != (g * g,) or b.shape != (g * g,):
+        raise ValueError(f"expected flat ({g*g},) arrays")
+    interp = _interpret_default() if interpret is None else interpret
+    return _jacobi.jacobi_sweep(x, b, g, block_rows=block_rows,
+                                interpret=interp)
+
+
+def bellman(idx, probs, rewards, v, *, gamma: float, block_s: int = 128,
+            interpret: Optional[bool] = None):
+    S, A, b = idx.shape
+    if probs.shape != (S, A, b) or rewards.shape != (S, A) or v.shape != (S,):
+        raise ValueError("inconsistent MDP shapes")
+    interp = _interpret_default() if interpret is None else interpret
+    return _bellman.bellman(idx, probs, rewards, v, gamma=gamma,
+                            block_s=block_s, interpret=interp)
+
+
+def anderson_mix(X, G, alpha, *, beta: float = 1.0, block_n: int = 4096,
+                 interpret: Optional[bool] = None):
+    if X.shape != G.shape or alpha.shape != (X.shape[0],):
+        raise ValueError("inconsistent history shapes")
+    interp = _interpret_default() if interpret is None else interpret
+    return _mix.anderson_mix(X, G, alpha, beta=beta, block_n=block_n,
+                             interpret=interp)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+
+def ref_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                  softcap: Optional[float] = None, q_offset: int = 0):
+    """q: (B,Sq,nq,hd); k,v: (B,Skv,nkv,hd) — grouped-query attention."""
+    B, Sq, nq, hd = q.shape
+    _, Skv, nkv, _ = k.shape
+    g = nq // nkv
+    qg = q.reshape(B, Sq, nkv, g, hd).astype(f32)
+    scale = hd ** -0.5
+    s = jnp.einsum("bsngh,btnh->bngst", qg * scale, k.astype(f32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: zero output (matches kernel convention)
+    any_valid = jnp.any(mask, axis=-1)[None, None, None, :, None]
+    out = jnp.einsum("bngst,btnh->bsngh", w, v.astype(f32))
+    out = jnp.where(any_valid.transpose(0, 3, 1, 2, 4), out, 0.0)
+    return out.reshape(B, Sq, nq, hd).astype(q.dtype)
+
+
+def ref_jacobi_sweep(x, b, g: int):
+    xg = x.reshape(g, g)
+    p = jnp.pad(xg, 1)
+    nb = p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+    return ((b.reshape(g, g) + nb) / 4.0).reshape(-1)
+
+
+def ref_bellman(idx, probs, rewards, v, *, gamma: float):
+    ev = jnp.einsum("sab,sab->sa", probs, v[idx])
+    return jnp.max(rewards + gamma * ev, axis=-1)
+
+
+def ref_anderson_mix(X, G, alpha, *, beta: float = 1.0):
+    combined = (1.0 - beta) * X + beta * G
+    return jnp.einsum("h,hn->n", alpha.astype(combined.dtype), combined)

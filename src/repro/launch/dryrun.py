@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (JAX locks the device
+count at first init); 512 host devices back the (2,16,16) production mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma_2b --shape train_4k
+  python -m repro.launch.dryrun --arch gemma_2b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] --out experiments/dryrun
+  python -m repro.launch.dryrun --all --subprocess   # isolation per cell
+
+Each cell prints ``memory_analysis()`` (fits-in-HBM proof) and
+``cost_analysis()`` FLOPs/bytes, derives the three roofline terms
+(launch/roofline.py), and appends a JSON record to the --out directory.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gc  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.sharding import resolve_axes  # noqa: E402
+from repro.launch import hloparse  # noqa: E402
+from repro.launch import inputs as inp  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_from_stats  # noqa: E402
+from repro.models.common import ParamSpec  # noqa: E402
+from repro.models.transformer import model_spec  # noqa: E402
+
+
+def _local_bytes_of_spec_tree(cfg, rules, mesh) -> int:
+    from repro.distributed.sharding import bytes_per_device
+
+    return bytes_per_device(model_spec(cfg), rules, mesh)
+
+
+def _local_cache_bytes(cfg, shape, rules, mesh) -> int:
+    caches = inp.cache_abstract(cfg, shape.batch, shape.seq)
+    axes = inp.cache_axes(cfg, caches)
+    total = 0
+    # NB: NamedTuple states ARE tuples — align axes leaves to the cache
+    # treedef with flatten_up_to instead of an is_leaf=tuple heuristic.
+    axes_leaves = jax.tree.structure(caches).flatten_up_to(axes)
+    for leaf, ax in zip(jax.tree.leaves(caches), axes_leaves):
+        spec = resolve_axes(tuple(ax), leaf.shape, rules, mesh)
+        shards = 1
+        for part in spec:
+            if part is None:
+                continue
+            axs = part if isinstance(part, tuple) else (part,)
+            for a in axs:
+                shards *= mesh.shape[a]
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize // shards
+    return total
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def apply_variant(cfg, rules, shape, variant: str):
+    """Named perf-hillclimb variants (EXPERIMENTS.md §Perf)."""
+    if variant == "baseline":
+        return cfg, rules
+    if variant == "seq_shard_prefill":
+        # shard long prefill activations over data axis (sequence parallel)
+        rules = dict(rules)
+        rules["act_seq"] = "data"
+        return cfg, rules
+    if variant == "no_fsdp":
+        rules = dict(rules)
+        rules["embed"] = None
+        return cfg, rules
+    if variant == "fsdp_pod":
+        rules = dict(rules)
+        rules["embed"] = ("pod", "data")
+        return cfg, rules
+    if variant == "chunk512":
+        return dataclasses.replace(cfg, attn_chunk=512), rules
+    if variant == "chunk2048":
+        return dataclasses.replace(cfg, attn_chunk=2048), rules
+    if variant == "kv_seq_data":
+        rules = dict(rules)
+        rules["cache_seq"] = ("data", "model")
+        return cfg, rules
+    if variant == "expert_fsdp":
+        rules = dict(rules)
+        rules["expert_ffn"] = "data"
+        return cfg, rules
+    if variant in ("moe_cap_shard", "opt1", "opt_all"):
+        rules = dict(rules)
+        rules["expert_capacity"] = "data"
+        return cfg, rules
+    if variant == "moe_a2a":
+        moe = dataclasses.replace(cfg.moe, a2a=True)
+        return dataclasses.replace(cfg, moe=moe), rules
+    if variant == "grad_rs":
+        return cfg, rules  # handled via constrain_grads below
+    if variant.startswith("accum"):
+        return cfg, rules  # handled via accum_override below
+    if variant == "tp_only":
+        # ZeRO-1: tensor-parallel weights (no FSDP gathers in the loss) +
+        # fully-sharded Adam moments, resharded only in the update.
+        rules = dict(rules)
+        rules["embed"] = None
+        return cfg, rules
+    if variant.startswith("fsdp_all"):
+        # No tensor parallelism: fully-sharded weights over (data x model),
+        # activations pure-DP.  For narrow models where TP activation
+        # all-reduces dominate the roofline (gemma-2b finding, §Perf).
+        rules = dict(rules)
+        rules.update(embed=("data", "model"), ffn=None, ffn_act=None,
+                     heads=None, kv_heads=None, inner=None,
+                     batch=("pod", "data", "model"))  # DP over all axes
+        return cfg, rules
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline", verbose: bool = True) -> dict:
+    shape = inp.SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = inp.cell_is_runnable(cfg0, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+    }
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    t0 = time.time()
+    cfg = inp.adjusted_config(cfg0, shape)
+    rules = inp.rules_for(cfg, shape)
+    cfg, rules = apply_variant(cfg, rules, shape, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    constrain_grads = variant in ("grad_rs", "opt_all", "tp_only")
+    opt_rules = None
+    if variant == "tp_only":
+        opt_rules = dict(rules)
+        opt_rules["embed"] = "data"
+        opt_rules["expert_ffn"] = "data"
+    accum_override = None
+    if variant.startswith("accum"):
+        accum_override = int(variant[len("accum"):])
+    if variant.startswith("fsdp_all") and len(variant) > len("fsdp_all"):
+        accum_override = int(variant[len("fsdp_all"):])
+    fn, in_sh, out_sh, args, meta = steps_mod.build_cell(
+        cfg, shape, mesh, rules, constrain_grads=constrain_grads,
+        accum_override=accum_override, opt_rules=opt_rules)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        st = hloparse.analyze(compiled.as_text(), world=n_dev)
+        pbytes = _local_bytes_of_spec_tree(cfg, rules, mesh)
+        cbytes = (_local_cache_bytes(cfg, shape, rules, mesh)
+                  if shape.kind == "decode" else 0)
+        rep = roofline_from_stats(
+            st, cfg, shape, shape.kind, meta.get("accum", 1) or 1, n_dev,
+            float(pbytes), float(cbytes),
+            cost_flops=float(cost.get("flops", 0.0)))
+    arg_b = mem.argument_size_in_bytes
+    out_b = mem.output_size_in_bytes
+    tmp_b = mem.temp_size_in_bytes
+    alias_b = mem.alias_size_in_bytes
+    peak = arg_b + out_b + tmp_b - alias_b
+    rec.update(
+        status="OK",
+        n_devices=n_dev,
+        accum=meta.get("accum"),
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        argument_bytes=arg_b,
+        output_bytes=out_b,
+        temp_bytes=tmp_b,
+        alias_bytes=alias_b,
+        peak_bytes=peak,
+        fits_hbm=bool(peak <= HBM_PER_CHIP),
+        flops_per_dev=rep.flops_per_dev,
+        mem_bytes_per_dev=rep.mem_bytes_per_dev,
+        wire_bytes_per_dev=rep.wire_bytes_per_dev,
+        hlo_traffic_proxy=rep.hlo_traffic_proxy,
+        cost_analysis_flops=rep.cost_analysis_flops,
+        param_bytes_local=pbytes,
+        cache_bytes_local=cbytes,
+        while_trips=st.while_trips,
+        compute_s=rep.compute_s,
+        memory_s=rep.memory_s,
+        collective_s=rep.collective_s,
+        bottleneck=rep.bottleneck,
+        model_flops=rep.model_flops_total,
+        useful_fraction=rep.useful_fraction,
+        collectives=rep.collectives,
+    )
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']} x {variant}] OK "
+              f"compile={t_compile:.0f}s peak={peak/2**30:.2f}GiB/dev "
+              f"fits={rec['fits_hbm']} bottleneck={rep.bottleneck} "
+              f"terms=(c={rep.compute_s:.4f}s m={rep.memory_s:.4f}s "
+              f"coll={rep.collective_s:.4f}s) useful={rep.useful_fraction:.2f}",
+              flush=True)
+        print(f"  memory_analysis: args={arg_b/2**30:.2f}GiB "
+              f"out={out_b/2**30:.2f}GiB temp={tmp_b/2**30:.2f}GiB "
+              f"alias={alias_b/2**30:.2f}GiB", flush=True)
+        print(f"  parsed: dot_flops/dev={rep.flops_per_dev:.3e} "
+              f"mem_model/dev={rep.mem_bytes_per_dev:.3e} "
+              f"wire/dev={rep.wire_bytes_per_dev:.3e} "
+              f"(xla body-once flops={rep.cost_analysis_flops:.3e})",
+              flush=True)
+        for op, d in rep.collectives.items():
+            print(f"    {op}: n={d['count']} operand={d['operand_bytes']:.3e} "
+                  f"wire={d['wire_bytes']:.3e}", flush=True)
+    del compiled, lowered
+    gc.collect()
+    return rec
+
+
+def cell_list(multi_pod: bool):
+    for arch in ARCH_IDS:
+        for shape_name in inp.SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(inp.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in its own process (isolation)")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    def record(rec):
+        name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+                f"__{rec['variant']}.json").replace("/", "_")
+        with open(os.path.join(args.out, name), "w") as f:
+            json.dump(rec, f, indent=1)
+
+    if args.all:
+        fails = 0
+        for arch, shape_name in cell_list(args.multi_pod):
+            out_name = (f"{arch}__{shape_name}__"
+                        f"{'2x16x16' if args.multi_pod else '16x16'}"
+                        f"__{args.variant}.json")
+            if os.path.exists(os.path.join(args.out, out_name)):
+                print(f"[{arch} x {shape_name}] cached, skipping", flush=True)
+                continue
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--variant", args.variant, "--out", args.out]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                try:
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    fails += int(r.returncode != 0)
+                except subprocess.TimeoutExpired:
+                    print(f"[{arch} x {shape_name}] TIMEOUT", flush=True)
+                    record({"arch": arch, "shape": shape_name,
+                            "mesh": "2x16x16" if args.multi_pod else "16x16",
+                            "variant": args.variant, "status": "TIMEOUT"})
+                    fails += 1
+            else:
+                try:
+                    rec = run_cell(arch, shape_name, args.multi_pod,
+                                   args.variant)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if args.multi_pod else "16x16",
+                           "variant": args.variant, "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}"}
+                    fails += 1
+                record(rec)
+        sys.exit(1 if fails else 0)
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.variant)
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "variant": args.variant, "status": "FAIL",
+               "error": f"{type(e).__name__}: {e}"}
+        record(rec)
+        sys.exit(1)
+    record(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Trip-count-aware HLO text analysis.
+
+XLA's ``HloCostAnalysis`` (and hence ``compiled.cost_analysis()``) visits a
+while-loop body ONCE — under scan-over-layers + gradient-accumulation scans
+that undercounts FLOPs/bytes/collectives by orders of magnitude (verified
+empirically; see EXPERIMENTS.md §Dry-run methodology).
+
+This module re-derives totals from ``compiled.as_text()``:
+
+  1. symbol table: instruction name -> result type,
+  2. computations: name -> instruction lines,
+  3. while trip counts: the integer constant in each loop's condition
+     computation (JAX lowers scans to counted whiles: compare(iter, C)),
+  4. effective multiplicity: product of trip counts along the call chain
+     from ENTRY (while bodies/conditions multiply, fusions/reducers don't),
+  5. totals: dot FLOPs (2 * prod(out) * prod(contract)), per-collective
+     operand/result bytes and ring-model wire bytes, and a fusion-level
+     HBM-traffic proxy (operand + output bytes of top-level instructions).
+
+Cross-checked against cost_analysis() at multiplicity 1 in tests.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*)$")
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_WHILE = re.compile(r"\bwhile\(")
+_OPERAND_REF = re.compile(r"%([\w\.\-]+)")
+_GROUPS = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONSTANT_INT = re.compile(r"=\s+s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        sz = _DTYPE_BYTES.get(dt)
+        if sz is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * sz
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    is_entry: bool = False
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    coll_operand_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_wire_bytes: Dict[str, float] = field(default_factory=dict)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.coll_wire_bytes.values())
+
+    @property
+    def total_coll_operand(self) -> float:
+        return sum(self.coll_operand_bytes.values())
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line)
+    return comps, entry
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS.search(line)
+    if not m:
+        return world
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    dims = [int(d) for d in g[1:].split("]")[0].split(",") if d]
+    return dims[-1] if dims else world
+
+
+def analyze(text: str, world: int = 1) -> HloStats:
+    comps, entry = parse_computations(text)
+
+    # symbol table: instruction -> result type string
+    types: Dict[str, str] = {}
+    for c in comps.values():
+        for line in c.lines:
+            m = _INSTR.match(line)
+            if m:
+                types[m.group(1)] = m.group(2).split(" ")[0]
+
+    # call graph with while multipliers
+    # For each computation, list (callee, kind) where kind in {while, call}
+    calls: Dict[str, List[Tuple[str, str, str]]] = {c: [] for c in comps}
+    cond_of_body: Dict[str, str] = {}
+    for c in comps.values():
+        for line in c.lines:
+            if _WHILE.search(line):
+                body = cond = None
+                m = re.search(r"body=%?([\w\.\-]+)", line)
+                if m:
+                    body = m.group(1)
+                m = re.search(r"condition=%?([\w\.\-]+)", line)
+                if m:
+                    cond = m.group(1)
+                if body:
+                    calls[c.name].append((body, "while", cond or ""))
+                    if cond:
+                        cond_of_body[body] = cond
+            else:
+                for callee in _CALLED.findall(line):
+                    if callee in comps:
+                        calls[c.name].append((callee, "call", ""))
+
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        if cond is None:
+            return 1
+        consts = []
+        for line in cond.lines:
+            consts += [int(x) for x in _CONSTANT_INT.findall(line)]
+        return max(consts) if consts else 1
+
+    # callers map: callee -> [(caller, trip_factor)]
+    callers: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    while_comps = set()
+    for cname, clist in calls.items():
+        for callee, kind, cond in clist:
+            factor = float(trip_count(cond)) if kind == "while" else 1.0
+            callers[callee].append((cname, factor))
+            if kind == "while":
+                while_comps.add(callee)
+
+    # effective multiplicity: sum over call sites of caller_mult * trip
+    memo: Dict[str, float] = {}
+
+    def total_mult(name: str, _depth=0) -> float:
+        if name == entry:
+            return 1.0
+        if name in memo:
+            return memo[name]
+        if _depth > 64:  # cycle guard (call graphs are DAGs in practice)
+            return 0.0
+        memo[name] = 0.0
+        total = sum(total_mult(cal, _depth + 1) * f
+                    for cal, f in callers.get(name, []))
+        memo[name] = total
+        return total
+
+    mult = {name: total_mult(name) for name in comps}
+
+    st = HloStats()
+    for cname, comp in comps.items():
+        w = mult.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        # computations reached only through calls= / to_apply= are fusion
+        # bodies or reducers: their internal lines are not HBM traffic
+        fusion_like = not comp.is_entry and cname not in while_comps
+        for line in comp.lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            rest = m.group(2)
+            rtype = rest.split(" ")[0]
+            opname = rest[len(rtype):].strip().split("(")[0].strip()
+            # ---- dot flops ------------------------------------------- #
+            if opname == "dot":
+                out_dims = _shape_dims(rtype)
+                cm = _CONTRACT.search(rest)
+                contract = 1
+                refs = _OPERAND_REF.findall(rest.split("(", 1)[1])
+                if cm and refs:
+                    lhs_t = types.get(refs[0], "")
+                    lhs_dims = _shape_dims(lhs_t)
+                    for idx in cm.group(1).split(","):
+                        if idx and lhs_dims:
+                            contract *= lhs_dims[int(idx)]
+                st.dot_flops += w * 2.0 * float(np.prod(out_dims) if out_dims
+                                                else 0) * contract
+                st.traffic_bytes += w * (_type_bytes(rtype) + sum(
+                    _type_bytes(types.get(r, "")) for r in refs[:2]))
+                continue
+            # ---- collectives ------------------------------------------ #
+            matched = None
+            for op in COLLECTIVES:
+                if opname == op or opname == op + "-start":
+                    matched = op
+                    break
+            if matched:
+                refs = _OPERAND_REF.findall(rest.split("(", 1)[1].split(")")[0])
+                operand_b = sum(_type_bytes(types.get(r, "")) for r in refs)
+                result_b = _type_bytes(rtype)
+                g = _group_size(line, world)
+                if matched == "all-reduce":
+                    wire = 2.0 * operand_b * (g - 1) / max(g, 1)
+                elif matched == "all-gather":
+                    wire = result_b * (g - 1) / max(g, 1)
+                elif matched == "reduce-scatter":
+                    wire = operand_b * (g - 1) / max(g, 1)
+                elif matched == "all-to-all":
+                    wire = operand_b * (g - 1) / max(g, 1)
+                else:
+                    wire = operand_b
+                st.coll_counts[matched] = st.coll_counts.get(matched, 0) + w
+                st.coll_operand_bytes[matched] = (
+                    st.coll_operand_bytes.get(matched, 0) + w * operand_b)
+                st.coll_wire_bytes[matched] = (
+                    st.coll_wire_bytes.get(matched, 0) + w * wire)
+                st.traffic_bytes += w * (operand_b + result_b)
+                continue
+            # ---- generic HBM-traffic proxy ----------------------------- #
+            if fusion_like or opname in _FREE_OPS or opname.endswith("-done"):
+                continue
+            refs = _OPERAND_REF.findall(rest.split("(", 1)[1].split(")")[0]) \
+                if "(" in rest else []
+            operand_b = sum(_type_bytes(types.get(r, "")) for r in refs)
+            st.traffic_bytes += w * (_type_bytes(rtype) + operand_b)
+    # record trip counts for diagnostics
+    for body, cond in cond_of_body.items():
+        st.while_trips[body] = trip_count(cond)
+    return st

@@ -1,0 +1,177 @@
+"""Per-(architecture x input-shape) cell planning for the dry-run.
+
+A *cell* = (arch config adjusted for the shape, abstract inputs, sharding
+rules, step kind).  The four assigned shapes:
+
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill_step
+  decode_32k   seq 32768,   global_batch 128  -> decode_step (KV = seq)
+  long_500k    seq 524288,  global_batch 1    -> decode_step, sub-quadratic
+                                                 archs only (DESIGN.md §4)
+
+Modality stubs (DESIGN.md §4): whisper gets post-conv frame embeddings at
+seq/4 and 448 decoder tokens; qwen2-vl gets vision patch embeddings for the
+first seq/4 positions plus M-RoPE position ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import BASE_RULES, Rules, long_decode_rules
+from repro.models import transformer as tf
+
+WHISPER_DEC_LEN = 448
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN §4)"
+    return True, ""
+
+
+def adjusted_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Chunking knobs for long sequences (exact, memory-bounded paths)."""
+    changes: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        seq = shape.seq if cfg.kind != "encdec" else shape.seq // 4
+        if seq > 4096:
+            changes["attn_chunk"] = 1024
+            changes["ssm_chunk"] = 1024
+        elif seq > 1024:
+            changes["ssm_chunk"] = 1024
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def grad_accum_for(cfg: ModelConfig, shape: ShapeSpec, dp_total: int) -> int:
+    """Pick accumulation so the per-device microbatch is ~1 sample for wide
+    models (bounds activation memory; recorded per cell in EXPERIMENTS)."""
+    per_dev = max(shape.batch // dp_total, 1)
+    if cfg.d_model >= 2048 or shape.seq >= 8192:
+        return per_dev  # 1 sample / device / microstep
+    return max(per_dev // 4, 1)
+
+
+def _i32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, Tuple]]:
+    """Abstract batch + logical axes per input."""
+    B, S = shape.batch, shape.seq
+    act = jnp.bfloat16
+    if shape.kind == "decode":
+        specs = {"tokens": _i32((B, 1))}
+        axes = {"tokens": ("batch", None)}
+        if cfg.mrope_sections:
+            specs["mrope_positions"] = _i32((B, 3, 1))
+            axes["mrope_positions"] = ("batch", None, None)
+        return specs, axes
+    if cfg.kind == "encdec":
+        enc = S // 4  # post-conv frame stub
+        dec = WHISPER_DEC_LEN
+        specs = {
+            "audio_embeds": jax.ShapeDtypeStruct((B, enc, cfg.d_model), act),
+            "tokens": _i32((B, dec)),
+        }
+        axes = {
+            "audio_embeds": ("batch", "enc_seq", None),
+            "tokens": ("batch", None),
+        }
+        return specs, axes
+    specs = {"tokens": _i32((B, S))}
+    axes = {"tokens": ("batch", None)}
+    if cfg.vision_stub:
+        nv = S // 4
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((B, nv, cfg.d_model), act)
+        specs["positions"] = _i32((B, 3, S))
+        axes["vision_embeds"] = ("batch", None, None)
+        axes["positions"] = ("batch", None, None)
+    return specs, axes
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract decode-cache tree (ShapeDtypeStructs, no allocation)."""
+    fn = lambda: tf.init_caches(cfg, batch, max_len, dtype)
+    caches = jax.eval_shape(fn)
+    if cfg.kind == "encdec":
+        # Cross-KV specs matching transformer._precompute_cross_kv_all
+        nkv, hd = cfg.n_kv_heads, cfg.hd
+        Se = max_len // 4
+        cross: Dict[str, Any] = {}
+        if cfg.n_periods > 0:
+            cross["stack"] = {
+                str(i): {
+                    "k": jax.ShapeDtypeStruct((cfg.n_periods, batch, Se, nkv, hd), dtype),
+                    "v": jax.ShapeDtypeStruct((cfg.n_periods, batch, Se, nkv, hd), dtype),
+                }
+                for i in range(len(cfg.period))
+            }
+        cross["rest"] = {
+            str(i): {
+                "k": jax.ShapeDtypeStruct((batch, Se, nkv, hd), dtype),
+                "v": jax.ShapeDtypeStruct((batch, Se, nkv, hd), dtype),
+            }
+            for i in range(len(cfg.remainder))
+        }
+        caches = dict(caches)
+        caches["cross"] = cross
+    return caches
+
+
+def cache_axes(cfg: ModelConfig, caches) -> Any:
+    """Logical axes tree matching the cache pytree structure."""
+
+    def leaf_axes(path, leaf) -> Tuple[Optional[str], ...]:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        stacked = keys[0] == "stack" or (keys[0] == "cross" and keys[1] == "stack")
+        name = keys[-1]
+        rank = len(leaf.shape)
+        if "cross" in keys:
+            base = ("batch", "enc_seq", "kv_heads", None)
+        elif name in ("k", "v"):
+            base = ("batch", "cache_seq", "kv_heads", None)
+        else:
+            # recurrent state: batch first, then greedily try "model" via
+            # the "inner" rule on remaining dims (resolve_axes keeps the
+            # first dim it divides)
+            base = ("batch",) + ("inner",) * (rank - 1 - (1 if stacked else 0))
+        if stacked:
+            base = ("layers",) + base
+        # pad/trim to rank
+        if len(base) < rank:
+            base = base + (None,) * (rank - len(base))
+        return base[:rank]
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, caches)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec) -> Rules:
+    if shape.kind == "decode" and shape.batch < 16:
+        return long_decode_rules()
+    return dict(BASE_RULES)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches JAX device state.  Shapes:
+
+  single-pod:  (16, 16)    -> ("data", "model")        256 chips (v5e pod)
+  multi-pod :  (2, 16, 16) -> ("pod", "data", "model") 512 chips
+
+The dry-run (and only the dry-run) raises the host platform device count
+to 512 — see launch/dryrun.py's first two lines.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for in-process distributed tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

@@ -1,0 +1,263 @@
+"""Roofline-term derivation from a compiled SPMD executable.
+
+Three terms per (arch x shape x mesh) cell, in seconds (TPU v5e):
+
+  compute    = HLO_FLOPs_per_device / 197e12
+  memory     = HLO_bytes_per_device / 819e9
+  collective = wire_bytes_per_device / 50e9      (ICI, per-link model)
+
+``cost_analysis()`` on a pjit-compiled module reports per-device FLOPs and
+bytes post-partitioning (verified empirically — DESIGN.md §8.5).
+Collective bytes are NOT in cost_analysis: we parse the post-optimization
+HLO text, summing operand bytes per collective op, plus a ring-model "wire
+bytes" estimate using each op's replica-group size g:
+
+  all-reduce      2 * B * (g-1)/g          all-gather    B_out * (g-1)/g
+  reduce-scatter  B_in * (g-1)/g           all-to-all    B * (g-1)/g
+  collective-permute  B
+
+MODEL_FLOPS uses the 6ND convention (+ logits matmul term), with MoE
+parameters scaled by top_k / n_experts (active fraction).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^)]*?\}|\[[0-9,]+\]<=\[[0-9]+\])")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dt)
+        if size is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    # iota form [a,b]<=[n] : groups of size b (a groups)
+    dims = g[1:].split("]")[0].split(",")
+    if len(dims) >= 2:
+        return int(dims[-1])
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    operand_bytes: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_operand(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        # operand types are printed inline inside the call parens
+        call = line[m.end() - 1:]
+        operands = call[: call.rfind(")")] if ")" in call else call
+        # strip control metadata after the operand list
+        operand_bytes = _shape_bytes(operands.split("), ")[0])
+        result_bytes = _shape_bytes(m.group("rtype"))
+        g = _group_size(line, default_group)
+        if op == "all-reduce":
+            wire = 2.0 * operand_bytes * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = operand_bytes * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            wire = operand_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = operand_bytes
+        st.counts[op] = st.counts.get(op, 0) + 1
+        st.operand_bytes[op] = st.operand_bytes.get(op, 0) + operand_bytes
+        st.wire_bytes[op] = st.wire_bytes.get(op, 0) + wire
+    return st
+
+
+# --------------------------------------------------------------------- #
+# MODEL_FLOPS (6ND convention)
+# --------------------------------------------------------------------- #
+def active_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total_params, active_params_excl_embeddings)."""
+    import jax
+
+    from repro.models.common import ParamSpec
+    from repro.models.transformer import model_spec
+
+    spec = model_spec(cfg)
+    total = 0
+    active = 0
+    moe = cfg.moe
+
+    def visit(path, s):
+        nonlocal total, active
+        n = int(np.prod(s.shape))
+        total += n
+        if "vocab" in (s.axes or ()):  # embedding / unembedding
+            return
+        if moe is not None and "experts" in (s.axes or ()):
+            if "router" in str(path):
+                active_frac = 1.0
+            else:
+                e_idx = s.axes.index("experts")
+                n_real = moe.n_experts
+                # padded experts carry no activation
+                n_eff = n * moe.n_experts // s.shape[e_idx]
+                total += n_eff - n  # correct total for padding
+                active += int(n_eff * moe.top_k / n_real)
+                return
+        active += n
+
+    import jax.tree_util as jtu
+
+    jtu.tree_map_with_path(visit, spec,
+                           is_leaf=lambda x: isinstance(x, ParamSpec))
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape, kind: str) -> float:
+    """6*N_active*D (+ logits term) for train; 2*... for inference."""
+    _, active = active_params(cfg)
+    if kind == "train":
+        tokens = shape.batch * (shape.seq if cfg.kind != "encdec"
+                                else shape.seq // 4 + 448)
+        mult = 6.0
+    elif kind == "prefill":
+        tokens = shape.batch * (shape.seq if cfg.kind != "encdec"
+                                else shape.seq // 4 + 448)
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.batch
+        mult = 2.0
+    logits_flops = mult * tokens * cfg.d_model * cfg.vocab_size
+    return mult * active * tokens + logits_flops
+
+
+@dataclass
+class RooflineReport:
+    flops_per_dev: float
+    mem_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_fraction: float  # MODEL_FLOPS / (parsed dot FLOPs * n_dev)
+    hlo_traffic_proxy: float = 0.0  # fusion-level HLO operand+output bytes
+    cost_analysis_flops: float = 0.0  # XLA body-once figure (diagnostic)
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape, kind: str, accum: int,
+                          n_dev: int, param_bytes_local: float,
+                          cache_bytes_local: float = 0.0) -> float:
+    """Per-device HBM traffic model (documented in EXPERIMENTS.md §Roofline).
+
+    train:   weights read twice per microbatch (fwd+bwd under FSDP) + one
+             optimizer read-modify-write pass (m, v, p read + write), plus
+             activation traffic ~C_act bytes per token per layer per d_model
+             (C_act ~ 28: fwd writes/reads, remat recompute, bwd reads).
+    prefill: weights once + activations (C_act ~ 10).
+    decode:  weights + full KV/state cache read per emitted token.
+    """
+    if kind == "decode":
+        return param_bytes_local + cache_bytes_local * 1.5  # read + partial write
+    act_bytes = 2.0  # bf16
+    if cfg.kind == "encdec":
+        tokens_local = shape.batch * (shape.seq // 4 + 448) / n_dev
+    else:
+        tokens_local = shape.batch * shape.seq / n_dev
+    # d_ff activations dominate d_model ones; fold into C_act multiplier
+    c_act = 28.0 if kind == "train" else 10.0
+    act_traffic = tokens_local * cfg.d_model * act_bytes * cfg.n_layers * c_act
+    if kind == "train":
+        w = param_bytes_local * (2.0 * accum + 6.0)
+    else:
+        w = param_bytes_local
+    return w + act_traffic
+
+
+def roofline_from_stats(
+    st, cfg: ModelConfig, shape, kind: str, accum: int, n_dev: int,
+    param_bytes_local: float, cache_bytes_local: float,
+    cost_flops: float = 0.0,
+) -> RooflineReport:
+    mflops = model_flops(cfg, shape, kind)
+    mem_bytes = analytic_memory_bytes(cfg, shape, kind, accum, n_dev,
+                                      param_bytes_local, cache_bytes_local)
+    compute_s = st.dot_flops / PEAK_FLOPS_BF16
+    memory_s = mem_bytes / HBM_BW
+    collective_s = st.total_wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = mflops / max(st.dot_flops * n_dev, 1.0)
+    return RooflineReport(
+        flops_per_dev=st.dot_flops,
+        mem_bytes_per_dev=mem_bytes,
+        wire_bytes_per_dev=st.total_wire,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_total=mflops,
+        useful_fraction=useful,
+        hlo_traffic_proxy=st.traffic_bytes,
+        cost_analysis_flops=cost_flops,
+        collectives={
+            op: {
+                "count": st.coll_counts[op],
+                "operand_bytes": st.coll_operand_bytes[op],
+                "wire_bytes": st.coll_wire_bytes[op],
+            }
+            for op in st.coll_counts
+        },
+    )

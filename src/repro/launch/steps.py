@@ -1,0 +1,233 @@
+"""Jitted step builders (train / prefill / decode) with mesh shardings.
+
+Each builder returns ``(fn, in_shardings, out_shardings, abstract_args)``
+ready for ``jax.jit(...).lower(*abstract_args).compile()`` — the multi-pod
+dry-run path — and equally usable with real arrays for the examples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    Rules,
+    resolve_axes,
+    sharding_for,
+    spec_tree_to_shardings,
+)
+from repro.launch import inputs as inp
+from repro.models import transformer as tf
+from repro.models.common import abstract, axis_rules, logical_axes
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+f32 = jnp.float32
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules: Rules):
+    spec = tf.model_spec(cfg)
+    return spec_tree_to_shardings(spec, rules, mesh)
+
+
+def opt_shardings(cfg: ModelConfig, mesh, rules: Rules, p_shard,
+                  opt_rules: Optional[Rules] = None):
+    """Optimizer-state shardings; ``opt_rules`` decouples them from the
+    parameter layout (ZeRO-1: TP weights + fully-sharded Adam moments)."""
+    if opt_rules is not None:
+        m_shard = param_shardings(cfg, mesh, opt_rules)
+    else:
+        m_shard = p_shard
+    return AdamWState(step=_replicated(mesh), m=m_shard, v=m_shard)
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = tf.abstract_params(cfg)
+    dt = getattr(jnp, opt_cfg.state_dtype)
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(mk, params),
+        v=jax.tree.map(mk, params),
+    )
+
+
+def batch_shardings(cfg, shape, mesh, rules):
+    specs, axes = inp.batch_specs(cfg, shape)
+    return {
+        k: sharding_for(specs[k].shape, axes[k], rules, mesh) for k in specs
+    }, specs
+
+
+# --------------------------------------------------------------------- #
+# Train
+# --------------------------------------------------------------------- #
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, accum: int,
+                    mesh=None, rules: Optional[Rules] = None,
+                    constrain_grads: bool = False):
+    """Gradient-accumulated train step; grads accumulate in state_dtype.
+
+    ``constrain_grads`` pins the accumulated gradients to the parameter
+    sharding inside the accumulation scan so XLA reduce-scatters per
+    microbatch instead of all-reducing the full gradient (§Perf)."""
+
+    acc_dt = getattr(jnp, opt_cfg.state_dtype)
+    gshard = None
+    if constrain_grads and mesh is not None:
+        gshard = param_shardings(cfg, mesh, rules)
+
+    def loss_fn(params, micro):
+        loss, aux = tf.lm_loss(cfg, params, micro)
+        return loss, aux
+
+    def train_step(params, opt_state, batch):
+        def run():
+            if accum == 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                return loss, grads
+
+            def split(x):
+                return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+            micros = jax.tree.map(split, batch)
+
+            def body(carry, micro):
+                gsum, lsum = carry
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, micro)
+                if gshard is not None:
+                    grads = jax.tree.map(
+                        lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+                        grads, gshard)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), micros)
+            inv = 1.0 / accum
+            return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+        loss, grads = run()
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    if mesh is None:
+        return train_step
+
+    def wrapped(params, opt_state, batch):
+        with axis_rules(rules, mesh):
+            return train_step(params, opt_state, batch)
+
+    return wrapped
+
+
+def build_train(cfg: ModelConfig, shape, mesh, rules: Rules,
+                opt_cfg: Optional[AdamWConfig] = None,
+                constrain_grads: bool = False,
+                accum_override: Optional[int] = None,
+                opt_rules: Optional[Rules] = None):
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.shape]))
+    accum = accum_override or inp.grad_accum_for(cfg, shape, dp)
+    fn = make_train_step(cfg, opt_cfg, accum, mesh, rules,
+                         constrain_grads=constrain_grads)
+    p_shard = param_shardings(cfg, mesh, rules)
+    o_shard = opt_shardings(cfg, mesh, rules, p_shard, opt_rules=opt_rules)
+    b_shard, b_specs = batch_shardings(cfg, shape, mesh, rules)
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (p_shard, o_shard,
+                     jax.tree.map(lambda _: _replicated(mesh),
+                                  {"grad_norm": 0, "lr": 0, "loss": 0}))
+    args = (tf.abstract_params(cfg), abstract_opt_state(cfg, opt_cfg), b_specs)
+    meta = {"accum": accum, "dp": dp}
+    return fn, in_shardings, out_shardings, args, meta
+
+
+# --------------------------------------------------------------------- #
+# Prefill
+# --------------------------------------------------------------------- #
+def build_prefill(cfg: ModelConfig, shape, mesh, rules: Rules):
+    max_len = shape.seq if cfg.kind != "encdec" else shape.seq
+
+    def fn(params, batch):
+        with axis_rules(rules, mesh):
+            logits, caches = tf.prefill(cfg, params, batch, max_len=max_len,
+                                        cache_dtype=jnp.bfloat16)
+            return logits, caches
+
+    p_shard = param_shardings(cfg, mesh, rules)
+    b_shard, b_specs = batch_shardings(cfg, shape, mesh, rules)
+    # cache output shardings from abstract structure + logical axes
+    # (for encdec the decoder self-cache length is max_len)
+    caches_abs = inp.cache_abstract(cfg, shape.batch, max_len)
+    c_axes = inp.cache_axes(cfg, caches_abs)
+    c_shard = jax.tree.map(
+        lambda leaf, ax: sharding_for(leaf.shape, ax, rules, mesh),
+        caches_abs, c_axes)
+    logits_shard = sharding_for((shape.batch, 1, cfg.vocab_size),
+                                ("batch", None, "vocab"), rules, mesh)
+    in_shardings = (p_shard, b_shard)
+    out_shardings = (logits_shard, c_shard)
+    args = (tf.abstract_params(cfg), b_specs)
+    return fn, in_shardings, out_shardings, args, {}
+
+
+# --------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------- #
+def build_decode(cfg: ModelConfig, shape, mesh, rules: Rules):
+    def fn(params, caches, tokens, pos, mrope_positions=None):
+        with axis_rules(rules, mesh):
+            return tf.decode_step(cfg, params, caches, tokens, pos,
+                                  mrope_positions=mrope_positions)
+
+    p_shard = param_shardings(cfg, mesh, rules)
+    caches_abs = inp.cache_abstract(cfg, shape.batch, shape.seq)
+    c_axes = inp.cache_axes(cfg, caches_abs)
+    c_shard = jax.tree.map(
+        lambda leaf, ax: sharding_for(leaf.shape, ax, rules, mesh),
+        caches_abs, c_axes)
+    b_specs, b_axes = inp.batch_specs(cfg, shape)
+    tok_shard = sharding_for(b_specs["tokens"].shape, b_axes["tokens"],
+                             rules, mesh)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_shard = sharding_for((shape.batch, 1, cfg.vocab_size),
+                                ("batch", None, "vocab"), rules, mesh)
+    in_shardings = [p_shard, c_shard, tok_shard, _replicated(mesh)]
+    args = [tf.abstract_params(cfg), caches_abs, b_specs["tokens"], pos_spec]
+    if "mrope_positions" in b_specs:
+        in_shardings.append(sharding_for(
+            b_specs["mrope_positions"].shape, b_axes["mrope_positions"],
+            rules, mesh))
+        args.append(b_specs["mrope_positions"])
+    out_shardings = (logits_shard, c_shard)
+    return fn, tuple(in_shardings), out_shardings, tuple(args), {}
+
+
+def build_cell(cfg: ModelConfig, shape, mesh, rules: Rules,
+               constrain_grads: bool = False,
+               accum_override: Optional[int] = None,
+               opt_rules: Optional[Rules] = None):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, rules,
+                           constrain_grads=constrain_grads,
+                           accum_override=accum_override,
+                           opt_rules=opt_rules)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, rules)
+    return build_decode(cfg, shape, mesh, rules)

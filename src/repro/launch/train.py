@@ -1,0 +1,36 @@
+"""Training launcher: single-host driver or production-mesh AOT check.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma_2b --reduced \
+      --steps 50 --ckpt /tmp/ckpt
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = train(cfg, TrainConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr,
+        accum=args.accum, checkpoint_dir=args.ckpt))
+    print(f"final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""LM model substrate: layers, attention, MoE, Mamba, xLSTM, stack builder."""
+
+from .transformer import (
+    abstract_params,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_params,
+    lm_loss,
+    model_spec,
+    prefill,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "forward_train",
+    "init_caches",
+    "init_params",
+    "lm_loss",
+    "model_spec",
+    "prefill",
+]

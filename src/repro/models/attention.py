@@ -1,0 +1,244 @@
+"""GQA attention with RoPE / M-RoPE, softcap, sliding window, and KV caches.
+
+Grouped-query attention is computed without materializing repeated KV heads
+(grouped einsum).  Sliding-window ("local") layers use a ring-buffer KV
+cache of ``window`` slots so long-context decode memory is O(window), not
+O(seq) — this is what makes gemma2/gemma3 long_500k-eligible (DESIGN.md §4).
+
+The jnp path here doubles as the oracle for the Pallas flash_attention
+kernel (repro/kernels); the stack can route prefill through the kernel via
+``cfg_use_flash`` in ops.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .common import ParamSpec, shard
+from .layers import apply_mrope, apply_rope, rmsnorm, rmsnorm_spec
+
+f32 = jnp.float32
+NEG_INF = -2.0e38
+
+
+def attn_spec(cfg: ModelConfig) -> Dict:
+    d, nq, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": ParamSpec((d, nq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((nq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": ParamSpec((hd,), (None,), init="zeros")}
+        s["k_norm"] = {"scale": ParamSpec((hd,), (None,), init="zeros")}
+    return s
+
+
+def cross_attn_spec(cfg: ModelConfig) -> Dict:
+    return attn_spec(cfg)
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache.
+
+    k, v: (B, S_cache, n_kv, hd).  For global layers S_cache = max_len and
+    slot i holds position i.  For local layers S_cache = window and slot
+    ``pos % window`` holds position pos (older entries are overwritten).
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: Optional[int], dtype) -> KVCache:
+    S = max_len if window is None else min(window, max_len)
+    shape = (batch, S, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _qk_normed(cfg: ModelConfig, params, q, k):
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return q, k
+
+
+def _scores_mask(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, scores, NEG_INF)
+
+
+def _softcap(scores: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return scores
+    c = jnp.asarray(cap, scores.dtype)
+    return c * jnp.tanh(scores / c)
+
+
+def _grouped_attn(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """q: (B,S,nq,hd); k,v: (B,T,nkv,hd); mask: (B,1,1,S,T) or (S,T)."""
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    g = nq // nkv
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    qg = q.reshape(B, S, nkv, g, cfg.hd)
+    scale = jnp.asarray(cfg.hd ** -0.5, q.dtype)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg * scale, k)
+    scores = _softcap(scores.astype(f32), cfg.attn_softcap)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    scores = _scores_mask(scores, mask)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", w, v)
+    return out.reshape(B, S, nq, cfg.hd)
+
+
+def attention(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S) or (B, 3, S) for M-RoPE
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attention
+    pos_offset: int = 0,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    else:
+        ctx_k, ctx_v = kv
+        k = jnp.einsum("bsd,dnh->bsnh", ctx_k, params["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", ctx_v, params["wv"])
+    q, k = _qk_normed(cfg, params, q, k)
+    if cfg.pos_embed == "rope" and kv is None:
+        if cfg.mrope_sections is not None and positions.ndim == 3:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos = positions if positions.ndim == 2 else positions[:, 0]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "kv_heads", None))
+    T = k.shape[1]
+    chunk = cfg.attn_chunk
+    if chunk is not None and S > chunk and S % chunk == 0:
+        out = _chunked_attn(cfg, q, k, v, chunk, causal=causal and kv is None,
+                            window=window, pos_offset=pos_offset)
+    else:
+        if kv is not None or not causal:
+            mask = jnp.ones((S, T), bool)
+        else:
+            qp = jnp.arange(S)[:, None] + pos_offset
+            kp = jnp.arange(T)[None, :] + (pos_offset if kv is None else 0)
+            mask = qp >= kp
+            if window is not None:
+                mask &= qp - kp < window
+        out = _grouped_attn(cfg, q, k, v, mask)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+
+
+def _chunked_attn(cfg: ModelConfig, q, k, v, chunk: int, *, causal: bool,
+                  window: Optional[int], pos_offset: int) -> jax.Array:
+    """Exact attention in query chunks: bounds score temps to (chunk x T).
+
+    The memory profile matches the Pallas flash kernel's HBM traffic; on
+    TPU the kernel replaces this path (repro/kernels/flash_attention).
+    """
+    B, S, nq, hd = q.shape
+    T = k.shape[1]
+    n_chunks = S // chunk
+    qc = q.reshape(B, n_chunks, chunk, nq, hd).transpose(1, 0, 2, 3, 4)
+    kp = jnp.arange(T)[None, :]
+
+    def one(carry, xs):
+        qi, idx = xs
+        qp = idx * chunk + jnp.arange(chunk)[:, None] + pos_offset
+        if causal:
+            mask = qp >= kp
+            if window is not None:
+                mask &= qp - kp < window
+        else:
+            mask = jnp.ones((chunk, T), bool)
+        out = _grouped_attn(cfg, qi, k, v, mask)
+        return carry, out
+
+    _, outs = jax.lax.scan(one, None, (qc, jnp.arange(n_chunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, nq, hd)
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    pos: jax.Array,  # scalar int32: index of the new token
+    *,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,  # (B, 3, 1) for M-RoPE decode
+) -> Tuple[jax.Array, KVCache]:
+    """One-token decode against a (ring-buffer) KV cache."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q, k = _qk_normed(cfg, params, q, k)
+    if cfg.pos_embed == "rope":
+        if cfg.mrope_sections is not None and positions is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            p = jnp.full((B, 1), pos, jnp.int32)
+            q = apply_rope(q, p, cfg.rope_theta)
+            k = apply_rope(k, p, cfg.rope_theta)
+    S_cache = cache.k.shape[1]
+    slot = pos % S_cache if window is not None else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    # Valid slots: global cache -> positions <= pos; ring cache -> the
+    # window positions (pos-window, pos], which is every written slot.
+    idx = jnp.arange(S_cache)
+    if window is None:
+        mask = idx <= pos
+    else:
+        age = (pos - idx + S_cache) % S_cache if False else None  # doc only
+        # slot j holds position p_j = pos - ((slot - j) % S_cache)
+        back = (slot - idx) % S_cache
+        p_j = pos - back
+        mask = (p_j >= 0) & (pos - p_j < S_cache)
+    mask = mask[None, None, None, None, :]  # (1,1,1,1,T)
+    out = _grouped_attn(cfg, q, new_k, new_v, mask)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, KVCache(new_k, new_v)
+
+
+def decode_cross_attention(
+    cfg: ModelConfig, params: Dict, x: jax.Array,
+    cross_k: jax.Array, cross_v: jax.Array,
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    q, _ = _qk_normed(cfg, params, q, q)[0], None
+    T = cross_k.shape[1]
+    mask = jnp.ones((x.shape[1], T), bool)
+    out = _grouped_attn(cfg, q, cross_k, cross_v, mask)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: Dict, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, params["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v

@@ -1,0 +1,166 @@
+"""Shared model-construction machinery.
+
+Single-source-of-truth parameter declaration: builders produce trees of
+:class:`ParamSpec` (shape + logical axes + initializer).  The same tree
+materializes as
+
+  * real parameters        (``materialize``) for smoke tests / examples,
+  * ``jax.ShapeDtypeStruct``(``abstract``) for the multi-pod dry-run,
+  * logical-axis trees     (``logical_axes``) for sharding-rule resolution.
+
+Logical activation sharding uses a context-managed rule table so model code
+stays mesh-agnostic: ``shard(x, ("batch", None, None))`` is a no-op outside
+a mesh context and a ``with_sharding_constraint`` inside one.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes  # logical axis names, len == len(shape)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed" | "scaled"
+    dtype: Any = jnp.float32
+
+    def scale(self) -> float:
+        if self.init == "normal":
+            # fan-in scaled truncated-normal-ish init
+            fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[-1], 1)
+            return 1.0 / np.sqrt(max(fan_in, 1))
+        if self.init == "embed":
+            return 1.0
+        if self.init == "scaled":
+            fan_in = int(np.prod(self.shape[:-1]))
+            return 1.0 / np.sqrt(max(fan_in, 1))
+        return 0.0
+
+
+def materialize(tree, key: jax.Array, dtype=None):
+    """Instantiate a ParamSpec tree as real arrays (tiny models only)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        d = dtype or spec.dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, d))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, d))
+        else:
+            # float() keeps the scale weakly-typed: an np.float64 scalar
+            # would promote f32 params to f64 when jax x64 mode is on
+            # (enabled by repro.problems for the paper's numerics).
+            out.append(jax.random.normal(k, spec.shape, d)
+                       * float(spec.scale()))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree, dtype=None):
+    """ParamSpec tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes(tree):
+    return jax.tree.map(
+        lambda s: s.axes, tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def stack_specs(tree, n: int):
+    """Add a leading stacked-layer dimension to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# --------------------------------------------------------------------- #
+# Logical -> mesh axis rules (context-managed)
+# --------------------------------------------------------------------- #
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any], mesh: Optional[Mesh] = None):
+    """Activate a logical->mesh axis rule table (and optional mesh)."""
+    prev = getattr(_ctx, "rules", None), getattr(_ctx, "mesh", None)
+    _ctx.rules, _ctx.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _ctx.rules, _ctx.mesh = prev
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_ctx, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def resolve_spec(axes: Axes, rules: Dict[str, Any], mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec, dropping mesh axes that don't divide.
+
+    ``rules`` maps a logical name to a mesh axis, a tuple of mesh axes, or
+    None.  A mesh axis already used by an earlier dimension of the same
+    tensor is dropped (GSPMD requires each mesh axis at most once per spec).
+    """
+    used: set = set()
+    parts = []
+    for ax in axes:
+        rule = rules.get(ax) if ax is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        cand = rule if isinstance(rule, tuple) else (rule,)
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        if not cand:
+            parts.append(None)
+        elif len(cand) == 1:
+            used.add(cand[0])
+            parts.append(cand[0])
+        else:
+            used.update(cand)
+            parts.append(cand)
+    return P(*parts)
+
+
+def shard(x: jax.Array, axes: Axes) -> jax.Array:
+    """Logical activation sharding constraint (no-op outside a context)."""
+    rules, mesh = current_rules(), getattr(_ctx, "mesh", None)
+    if rules is None or mesh is None:
+        return x
+    spec = resolve_spec(axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_divides(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    for dim, part in zip(shape, spec):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            return False
+    return True

@@ -1,0 +1,153 @@
+"""Shared layers: norms, MLPs (incl. gated + squared-ReLU), embeddings, RoPE.
+
+All computation helpers take explicit params (pure functions); parameter
+declaration uses :class:`repro.models.common.ParamSpec`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .common import ParamSpec, shard
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------- #
+def rmsnorm_spec(d: int) -> Dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(f32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # Gemma-style (1 + scale): zeros-init scale == identity at init.
+    return (x * (1.0 + params["scale"].astype(f32))).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------- #
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        return {
+            "wi": ParamSpec((d, 2, f), ("embed", None, "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    return {  # 2-matrix MLP (gelu / relu2)
+        "wi": ParamSpec((d, f), ("embed", "ffn")),
+        "wo": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array, act: str) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        h = jnp.einsum("...d,dgf->...gf", x, params["wi"])
+        gate, up = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        h = g * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        if act == "gelu":
+            h = jax.nn.gelu(h)
+        elif act == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            raise ValueError(act)
+    h = shard(h, ("batch",) + (None,) * (h.ndim - 2) + ("ffn_act",))
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# --------------------------------------------------------------------- #
+# Embeddings / logits
+# --------------------------------------------------------------------- #
+def embed_spec(cfg: ModelConfig) -> Dict:
+    s: Dict = {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                      ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    return s
+
+
+def embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embedding"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = jnp.einsum("...d,vd->...v", x, params["embedding"])
+    else:
+        out = jnp.einsum("...d,dv->...v", x, params["unembed"])
+    if cfg.logit_softcap:
+        c = jnp.asarray(cfg.logit_softcap, out.dtype)
+        out = c * jnp.tanh(out / c)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Positions
+# --------------------------------------------------------------------- #
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, heads, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), f32)  # (hd/2,)
+    ang = positions[..., None].astype(f32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (B, 3, S) — temporal/height/width position ids.  The hd/2
+    frequency slots are split into ``sections`` (summing to hd/2); each
+    section rotates with its own position stream.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta), f32)
+    # Pick per-frequency position stream: section 0 -> t, 1 -> h, 2 -> w.
+    sec_id = np.repeat(np.arange(3), sections)  # (hd/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(f32),  # (B, 3, S)
+        jnp.asarray(sec_id)[None, :, None].repeat(positions.shape[0], 0),
+        axis=1,
+    )  # -> (B, hd/2, S)
+    ang = jnp.einsum("bfs,f->bsf", pos, freqs)  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int, offset: int = 0) -> np.ndarray:
+    pos = np.arange(offset, offset + S, dtype=np.float64)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float64)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = np.zeros((S, d))
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

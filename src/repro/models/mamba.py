@@ -1,0 +1,186 @@
+"""Mamba (selective SSM) block: parallel associative-scan for train/prefill,
+O(1)-state recurrence for decode.  [arXiv:2312.00752]
+
+Sequence form:  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;
+                y_t = C_t . h_t + D x_t
+with input-dependent (selective) dt, B, C.  The parallel form uses
+``jax.lax.associative_scan`` over (decay, increment) pairs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import ParamSpec, shard
+
+f32 = jnp.float32
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, d_inner) trailing inputs
+    ssm: jax.Array  # (B, d_inner, d_state)
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or max(cfg.d_model // 16, 1)
+    return d_inner, mc.d_state, mc.d_conv, dt_rank
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2, d_inner), ("embed", None, "inner")),
+        "conv_w": ParamSpec((d_conv, d_inner), (None, "inner")),
+        "conv_b": ParamSpec((d_inner,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * d_state), ("inner", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "inner")),
+        "dt_bias": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "A_log": ParamSpec((d_inner, d_state), ("inner", None), init="ones"),
+        "D": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("inner", "embed")),
+    }
+
+
+def _ssm_inputs(cfg, params, xc):
+    """Selective parameters from the (conv'd, activated) inner stream."""
+    _, d_state, _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("...i,ir->...r", xc, params["x_proj"])
+    dt_r, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_r, params["dt_proj"])
+        + params["dt_bias"].astype(proj.dtype)
+    )
+    A = -jnp.exp(params["A_log"].astype(f32))  # (d_inner, d_state)
+    return dt, A, Bmat, Cmat
+
+
+def mamba_block(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    """Training / prefill: full-sequence parallel scan.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    h = jnp.einsum("bsd,dgi->bsgi", x, params["in_proj"])
+    xi, z = h[..., 0, :], h[..., 1, :]  # (B, S, d_inner)
+    xi = shard(xi, ("batch", None, "inner"))
+    # causal depthwise conv
+    pad = jnp.zeros((B, d_conv - 1, d_inner), xi.dtype)
+    xpad = jnp.concatenate([pad, xi], axis=1)
+    xc = sum(
+        xpad[:, i : i + S, :] * params["conv_w"][i][None, None, :]
+        for i in range(d_conv)
+    ) + params["conv_b"][None, None, :]
+    xc = jax.nn.silu(xc)
+
+    dt, A, Bm, Cm = _ssm_inputs(cfg, params, xc)
+    y = _ssm_apply(cfg, dt, A, Bm, Cm, xc)
+    y = y + params["D"].astype(f32)[None, None] * xc.astype(f32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+
+
+def _combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, ar * bl + br
+
+
+def _ssm_apply(cfg, dt, A, Bm, Cm, xc) -> jax.Array:
+    """Selective scan over the sequence; chunk-recurrent when configured.
+
+    Chunking bounds the associative-scan temp to (B, chunk, d_inner,
+    d_state): the unchunked temp at 32k prefill is ~1 MB per (batch,
+    position) for jamba and would OOM (see DESIGN.md long-context paths).
+    """
+    B, S = dt.shape[0], dt.shape[1]
+    di = dt.shape[-1]
+    ds = A.shape[-1]
+    chunk = cfg.ssm_chunk
+    if chunk is None or S <= chunk or S % chunk:
+        a = jnp.exp(dt.astype(f32)[..., None] * A[None, None])
+        b = (dt * xc).astype(f32)[..., None] * Bm.astype(f32)[..., None, :]
+        _, hs = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        return jnp.einsum("bsin,bsn->bsi", hs, Cm.astype(f32))
+    n_chunks = S // chunk
+
+    # Chunk the *inputs* (d_inner-sized) and build the (chunk, d_inner,
+    # d_state) decay/increment tensors INSIDE the scan body, so the big
+    # (B, S, d_inner, d_state) intermediate never exists (83 GiB/dev at
+    # 32k prefill otherwise — EXPERIMENTS.md §Dry-run fixes).
+    def cs(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    dtc, xcc, Bc = cs(dt), cs(xc), cs(Bm)
+    Cc = Cm.astype(f32).reshape(B, n_chunks, chunk, ds).transpose(1, 0, 2, 3)
+
+    def one(h0, xs):
+        dti, xci, Bi, ci = xs
+        ai = jnp.exp(dti.astype(f32)[..., None] * A[None, None])
+        bi = (dti * xci).astype(f32)[..., None] * Bi.astype(f32)[..., None, :]
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+        hs = b_cum + a_cum * h0[:, None]  # inject carried state
+        y = jnp.einsum("bcin,bcn->bci", hs, ci)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), f32)
+    _, ys = jax.lax.scan(one, h0, (dtc, xcc, Bc, Cc))
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+
+
+def ssm_final_state(cfg, dt, A, Bm, xc) -> jax.Array:
+    """Final hidden state h_S (for prefill -> decode handoff), chunked."""
+    B, S = dt.shape[0], dt.shape[1]
+    di = dt.shape[-1]
+    ds = A.shape[-1]
+    chunk = cfg.ssm_chunk if (cfg.ssm_chunk and S % cfg.ssm_chunk == 0) else S
+    n_chunks = S // chunk
+
+    def cs(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    def one(h0, xs):
+        dti, xci, Bi = xs
+        ai = jnp.exp(dti.astype(f32)[..., None] * A[None, None])
+        bi = (dti * xci).astype(f32)[..., None] * Bi.astype(f32)[..., None, :]
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+        return b_cum[:, -1] + a_cum[:, -1] * h0, None
+
+    h0 = jnp.zeros((B, di, ds), f32)
+    h_fin, _ = jax.lax.scan(one, h0, (cs(dt), cs(xc), cs(Bm)))
+    return h_fin
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), f32),
+    )
+
+
+def mamba_decode(
+    cfg: ModelConfig, params: Dict, x: jax.Array, state: MambaState
+) -> Tuple[jax.Array, MambaState]:
+    """One-token recurrent step.  x: (B, 1, d)."""
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    h = jnp.einsum("bsd,dgi->bsgi", x, params["in_proj"])
+    xi, z = h[:, 0, 0, :], h[:, 0, 1, :]  # (B, d_inner)
+    window = jnp.concatenate([state.conv, xi[:, None, :]], axis=1)  # (B,dc,di)
+    xc = jnp.einsum("bci,ci->bi", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _ssm_inputs(cfg, params, xc)
+    a = jnp.exp(dt.astype(f32)[..., None] * A[None])  # (B, d_inner, d_state)
+    b = (dt * xc).astype(f32)[..., None] * Bm.astype(f32)[:, None, :]
+    new_ssm = a * state.ssm + b
+    y = jnp.einsum("bin,bn->bi", new_ssm, Cm.astype(f32))
+    y = y + params["D"].astype(f32)[None] * xc.astype(f32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None, :]
+    return out, MambaState(conv=window[:, 1:, :], ssm=new_ssm)

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts with gather-based dispatch (no one-hot matmul FLOPs).
+
+Top-k routing with capacity dropping, GShard-style, but token movement is
+expressed as gathers/scatters of *indices* (sort + searchsorted slotting)
+instead of a (T, E, C) one-hot einsum — the classic dispatch einsum costs
+T*E*C*d MAC flops, which would dwarf the expert compute itself (~1700x for
+olmoe) and wreck the roofline.  Gathers cost bytes, not FLOPs, and GSPMD
+turns the token<->expert shard exchange into the expected all-to-alls when
+experts are sharded over the "model" axis (EP).
+
+Shared (always-on) experts are fused into a single wide MLP.  Architectures
+whose expert count does not divide the EP axis (qwen2-moe: 60) pad experts
+to ``moe.pad_to`` multiples; the router assigns -inf logits to padding.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import ParamSpec, shard
+from .layers import mlp, mlp_spec
+
+f32 = jnp.float32
+
+
+def moe_spec(cfg: ModelConfig) -> Dict:
+    moe = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, moe.padded_experts
+    gated = cfg.ffn_act in ("swiglu", "geglu")
+    s: Dict = {
+        "router": ParamSpec((d, E), ("embed", "experts")),
+        "wi": ParamSpec((E, d, 2, f) if gated else (E, d, f),
+                        ("experts", "embed", None, "expert_ffn") if gated
+                        else ("experts", "embed", "expert_ffn")),
+        "wo": ParamSpec((E, f, d), ("experts", "expert_ffn", "embed")),
+    }
+    if moe.n_shared:
+        s["shared"] = mlp_spec(cfg, d_ff=moe.n_shared * f)
+    return s
+
+
+def _expert_ffn(cfg: ModelConfig, params, xin: jax.Array) -> jax.Array:
+    """xin: (E, C, d) -> (E, C, d) through per-expert (gated) MLP."""
+    gated = cfg.ffn_act in ("swiglu", "geglu")
+    if gated:
+        h = jnp.einsum("ecd,edgf->ecgf", xin, params["wi"])
+        gate, up = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(gate) if cfg.ffn_act == "swiglu" else jax.nn.gelu(gate)
+        h = g * up
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xin, params["wi"])
+        h = jax.nn.gelu(h) if cfg.ffn_act == "gelu" else jnp.square(jax.nn.relu(h))
+    h = shard(h, ("experts", "expert_capacity", "expert_ffn_act"))
+    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+def moe_ffn(cfg: ModelConfig, params: Dict, x: jax.Array,
+            dropless: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (out, aux) with load-balance / router-z losses.
+
+    ``dropless=True`` (decode path) sizes capacity so no assignment can be
+    dropped (C = T covers the worst case of every token picking the same
+    expert) — serving must not silently drop tokens."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k, C_f = moe.padded_experts, moe.top_k, moe.capacity_factor
+    C = T if dropless else max(int(T * k * C_f / E), 1)
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(f32), params["router"].astype(f32))
+    if E != moe.n_experts:  # mask EP padding experts
+        pad_mask = jnp.arange(E) >= moe.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- slotting: stable sort by expert, position within expert ------- #
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    token_of = order // k
+    ok = pos_in_e < C
+    # gather table: (E, C) -> source token (T = padding row)
+    table = jnp.full((E, C), T, jnp.int32)
+    table = table.at[sorted_e, jnp.where(ok, pos_in_e, C - 1)].set(
+        jnp.where(ok, token_of, T).astype(jnp.int32), mode="drop"
+    )
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xin = xpad[table]  # (E, C, d) — pure gather
+    # capacity axis shardable over "data" (rules["expert_capacity"]), else
+    # expert compute replicates across the data axis — 16x overcompute
+    # found in the qwen2-moe baseline dry-run (EXPERIMENTS.md §Perf).
+    xin = shard(xin, ("experts", "expert_capacity", None))
+
+    out_e = _expert_ffn(cfg, params, xin)  # (E, C, d)
+    out_e = shard(out_e, ("experts", "expert_capacity", None))
+
+    # ---- combine: invert the slotting ---------------------------------- #
+    inv_pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_in_e.astype(jnp.int32))
+    valid = (inv_pos < C)[..., None]
+    slot = jnp.clip(inv_pos, 0, C - 1)
+    picked = out_e[flat_e, slot]  # (T*k, d) gather
+    picked = jnp.where(valid, picked, 0.0)
+    combined = jnp.einsum(
+        "tkd,tk->td", picked.reshape(T, k, d), top_p.astype(picked.dtype)
+    )
+
+    if moe.n_shared:
+        combined = combined + mlp(params["shared"], xt, cfg.ffn_act)
+
+    # ---- aux losses (Switch-style load balance + router z) -------------- #
+    me = jnp.mean(probs, axis=0)  # (E,)
+    one_hot = jax.nn.one_hot(top_e, E, dtype=f32)  # (T, k, E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)  # fraction routed
+    aux_lb = moe.n_experts * jnp.sum(me * ce) * moe.aux_loss_coef
+    aux_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * moe.router_z_coef
+    aux = {"moe_load_balance": aux_lb, "moe_router_z": aux_z}
+    return combined.reshape(B, S, d), aux

@@ -1,0 +1,172 @@
+"""Expert-parallel MoE with explicit shard_map + all-to-all dispatch.
+
+GSPMD cannot partition the gather-based token<->expert exchange across a
+2-D (data x model) mesh: it falls back to masked all-reduces of the full
+(E, C, d) buffer (+150 GiB temps, ~200 s collective term measured on the
+jamba prefill cell — EXPERIMENTS.md §Perf).  This module writes the
+communication pattern the hardware wants explicitly:
+
+  per device (d, m):   tokens:  local T/|data| rows (replicated over model)
+                       experts: local E/|model| slice (replicated over data)
+
+  1. local router logits for the E/|model| local experts,
+     all_gather over "model"  ->  full (T_loc, E) logits      (tiny)
+  2. top-k locally; destination model-rank = expert // E_loc
+  3. pack per-destination send buffers (n_model, cap, d) via the
+     sort/searchsorted slotting trick (no one-hot matmul FLOPs)
+  4. lax.all_to_all over "model" (the only bulk exchange; bytes =
+     T_loc * k * cf * d * 2 per device, the information-theoretic floor)
+  5. local (E_loc, C, d) expert FFN — compute sharded over BOTH axes
+  6. all_to_all back, unpack, weighted combine.
+
+Capacity is enforced per (source-rank, destination-rank) pair:
+cap = ceil(T_loc * k * cf / n_model).  With ample cf this is dropless and
+matches moe_ffn exactly (tests/test_distributed.py, 8 host devices).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+f32 = jnp.float32
+
+
+def _shard_map_available(mesh) -> bool:
+    return mesh is not None and "model" in mesh.shape
+
+
+def moe_ffn_a2a(cfg: ModelConfig, params: Dict, x: jax.Array, mesh,
+                data_axes: Tuple[str, ...] = ("data",),
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Drop-in replacement for moe_ffn under an active mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k, cf = moe.padded_experts, moe.top_k, moe.capacity_factor
+    n_model = mesh.shape["model"]
+    E_loc = E // n_model
+    gated = cfg.ffn_act in ("swiglu", "geglu")
+
+    # tokens sub-sharded over the model axis too: otherwise all 16 model
+    # ranks in a data row route/dispatch the SAME tokens (16x duplicated
+    # expert compute, measured on jamba prefill — EXPERIMENTS.md §Perf)
+    tok_spec = P(data_axes + ("model",), None)
+    # each rank routes ITS OWN token slice, so it needs the full (tiny)
+    # router matrix: gathering per-rank logits would mix different ranks'
+    # tokens along the expert axis (bug caught by the 8-device test)
+    router_spec = P(None, None)
+    wi_spec = P("model", None, None, None) if gated else P("model", None, None)
+    wo_spec = P("model", None, None)
+
+    def body(xt, router, wi, wo):
+        # xt: (T_loc, d); router: (d, E_loc); wi: (E_loc, d, [2,] f)
+        T_loc = xt.shape[0]
+        cap = max(int(np.ceil(T_loc * k * cf / n_model)), 1)
+        logits = jnp.einsum("td,de->te", xt.astype(f32),
+                            router.astype(f32))  # (T_loc, E) full-E local
+        if E != moe.n_experts:
+            pad = jnp.arange(E) >= moe.n_experts
+            logits = jnp.where(pad[None], -1e30, logits)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        flat_e = top_e.reshape(-1)  # (T_loc*k,)
+        dest = flat_e // E_loc
+        order = jnp.argsort(dest, stable=True)
+        sorted_dest = dest[order]
+        pos = jnp.arange(T_loc * k) - jnp.searchsorted(sorted_dest,
+                                                       sorted_dest, "left")
+        ok = pos < cap
+        # send buffers
+        token_of = order // k
+        send_x = jnp.zeros((n_model, cap, d), xt.dtype)
+        send_x = send_x.at[sorted_dest, jnp.where(ok, pos, cap - 1)].set(
+            jnp.where(ok[:, None], xt[token_of], 0.0), mode="drop")
+        send_eloc = jnp.full((n_model, cap), E_loc, jnp.int32)  # E_loc = pad
+        send_eloc = send_eloc.at[sorted_dest, jnp.where(ok, pos, cap - 1)].set(
+            jnp.where(ok, (flat_e % E_loc)[order], E_loc).astype(jnp.int32),
+            mode="drop")
+
+        recv_x = jax.lax.all_to_all(send_x, "model", 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_eloc, "model", 0, 0, tiled=False)
+        # recv_x: (n_model, cap, d) — slot (r, c) came from model-rank r
+        rx = recv_x.reshape(n_model * cap, d)
+        re = recv_e.reshape(n_model * cap)
+
+        # local expert compute via capacity slotting over E_loc experts
+        C2 = max(int(np.ceil(n_model * cap * cf / max(E_loc, 1))), 1)
+        order2 = jnp.argsort(re, stable=True)
+        se = re[order2]
+        pos2 = jnp.arange(rx.shape[0]) - jnp.searchsorted(se, se, "left")
+        ok2 = (pos2 < C2) & (se < E_loc)
+        table = jnp.full((E_loc, C2), rx.shape[0], jnp.int32)
+        table = table.at[jnp.where(ok2, se, 0),
+                         jnp.where(ok2, pos2, C2 - 1)].set(
+            jnp.where(ok2, order2, rx.shape[0]).astype(jnp.int32),
+            mode="drop")
+        xpad = jnp.concatenate([rx, jnp.zeros((1, d), rx.dtype)], axis=0)
+        xin = xpad[table]  # (E_loc, C2, d)
+        if gated:
+            h = jnp.einsum("ecd,edgf->ecgf", xin, wi)
+            gate, up = h[..., 0, :], h[..., 1, :]
+            g = jax.nn.silu(gate) if cfg.ffn_act == "swiglu" else jax.nn.gelu(gate)
+            h = g * up
+        else:
+            h = jnp.einsum("ecd,edf->ecf", xin, wi)
+            h = jax.nn.gelu(h) if cfg.ffn_act == "gelu" else \
+                jnp.square(jax.nn.relu(h))
+        out_e = jnp.einsum("ecf,efd->ecd", h, wo)
+
+        # back to recv slots
+        inv2 = jnp.zeros((rx.shape[0],), jnp.int32).at[order2].set(
+            pos2.astype(jnp.int32))
+        v2 = (inv2 < C2) & (re < E_loc)
+        ret = out_e[jnp.clip(re, 0, E_loc - 1), jnp.clip(inv2, 0, C2 - 1)]
+        ret = jnp.where(v2[:, None], ret, 0.0).reshape(n_model, cap, d)
+        back = jax.lax.all_to_all(ret, "model", 0, 0, tiled=False)
+        # back: (n_model, cap, d) slot (dest_rank, pos) -> original sends
+        inv = jnp.zeros((T_loc * k,), jnp.int32).at[order].set(
+            pos.astype(jnp.int32))
+        valid = inv < cap
+        picked = back[dest, jnp.clip(inv, 0, cap - 1)]
+        picked = jnp.where(valid[:, None], picked, 0.0)
+        combined = jnp.einsum("tkd,tk->td", picked.reshape(T_loc, k, d),
+                              top_p.astype(picked.dtype))
+
+        # aux losses (identical across model ranks; mean over data)
+        me = jnp.mean(probs, axis=0)
+        one_hot = jax.nn.one_hot(top_e, E, dtype=f32)
+        ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+        aux_lb = moe.n_experts * jnp.sum(me * ce) * moe.aux_loss_coef
+        aux_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) \
+            * moe.router_z_coef
+        for ax in data_axes + ("model",):
+            aux_lb = jax.lax.pmean(aux_lb, ax)
+            aux_z = jax.lax.pmean(aux_z, ax)
+        return combined, aux_lb, aux_z
+
+    xt = x.reshape(B * S, d)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    fn = _sm(body, mesh=mesh,
+             in_specs=(tok_spec, router_spec, wi_spec, wo_spec),
+             out_specs=(tok_spec, P(), P()),
+             check_rep=False)
+    combined, aux_lb, aux_z = fn(xt, params["router"], params["wi"],
+                                 params["wo"])
+    out = combined.reshape(B, S, d)
+    if moe.n_shared:
+        from .layers import mlp
+
+        out = out + mlp(params["shared"], x, cfg.ffn_act)
+    return out, {"moe_load_balance": aux_lb, "moe_router_z": aux_z}

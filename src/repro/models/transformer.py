@@ -1,0 +1,589 @@
+"""Decoder / encoder-decoder stack builder.
+
+Layer stacks are a repeating *period* of (mixer, ffn) sublayers scanned over
+stacked parameters (bounded HLO size and compile time — one CPU core
+compiles 68 dry-run cells), plus an unscanned remainder.  Mixers: global
+attention, sliding-window attention (ring cache), Mamba, mLSTM, sLSTM.
+FFNs: dense (SwiGLU/GeGLU/GELU/ReLU²) or MoE.
+
+Three entry modes share one sublayer implementation:
+  * ``forward_train`` — full-sequence teacher forcing (returns logits+aux),
+  * ``prefill``       — full-sequence forward that also emits decode caches,
+  * ``decode_step``   — one token against the caches.
+
+Whisper (kind="encdec") adds a bidirectional encoder and cross-attention
+in every decoder sublayer; Qwen2-VL merges precomputed vision patch
+embeddings into the token stream and uses M-RoPE position ids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, Sublayer
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import xlstm as xlstm_mod
+from .attention import KVCache
+from .common import ParamSpec, shard, stack_specs
+from .layers import (
+    embed,
+    embed_spec,
+    logits as compute_logits,
+    mlp,
+    mlp_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    sinusoidal_positions,
+)
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------- #
+def _mixer_spec(cfg: ModelConfig, mixer: str) -> Dict:
+    if mixer in ("attn", "local"):
+        return attn_mod.attn_spec(cfg)
+    if mixer == "mamba":
+        return mamba_mod.mamba_spec(cfg)
+    if mixer == "mlstm":
+        return xlstm_mod.mlstm_spec(cfg)
+    if mixer == "slstm":
+        return xlstm_mod.slstm_spec(cfg)
+    raise ValueError(mixer)
+
+
+def sublayer_spec(cfg: ModelConfig, sub: Sublayer, cross: bool = False) -> Dict:
+    mixer, ffn = sub
+    s: Dict = {
+        "norm1": rmsnorm_spec(cfg.d_model),
+        "mixer": _mixer_spec(cfg, mixer),
+    }
+    if cross:
+        s["norm_x"] = rmsnorm_spec(cfg.d_model)
+        s["cross"] = attn_mod.cross_attn_spec(cfg)
+    if ffn == "mlp":
+        s["norm2"] = rmsnorm_spec(cfg.d_model)
+        s["ffn"] = mlp_spec(cfg)
+    elif ffn == "moe":
+        s["norm2"] = rmsnorm_spec(cfg.d_model)
+        s["ffn"] = moe_mod.moe_spec(cfg)
+    return s
+
+
+def period_spec(cfg: ModelConfig, cross: bool = False) -> Dict:
+    return {
+        str(i): sublayer_spec(cfg, sub, cross)
+        for i, sub in enumerate(cfg.period)
+    }
+
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    s: Dict = {"embed": embed_spec(cfg), "final_norm": rmsnorm_spec(cfg.d_model)}
+    cross = cfg.kind == "encdec"
+    if cfg.n_periods > 0:
+        s["stack"] = stack_specs(period_spec(cfg, cross), cfg.n_periods)
+    s["rest"] = {
+        str(i): sublayer_spec(cfg, sub, cross)
+        for i, sub in enumerate(cfg.remainder)
+    }
+    if cross:
+        enc_period = {"0": sublayer_spec(cfg, ("attn", "mlp"), cross=False)}
+        s["encoder"] = {
+            "stack": stack_specs(enc_period, cfg.n_enc_layers),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    from .common import materialize
+
+    dt = dtype or getattr(jnp, cfg.param_dtype)
+    return materialize(model_spec(cfg), key, dtype=dt)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    from .common import abstract
+
+    dt = dtype or getattr(jnp, cfg.param_dtype)
+    return abstract(model_spec(cfg), dtype=dt)
+
+
+# --------------------------------------------------------------------- #
+# Caches
+# --------------------------------------------------------------------- #
+def _sublayer_cache(cfg: ModelConfig, sub: Sublayer, batch: int,
+                    max_len: int, dtype) -> Any:
+    mixer, _ = sub
+    if mixer == "attn":
+        return attn_mod.init_cache(cfg, batch, max_len, None, dtype)
+    if mixer == "local":
+        return attn_mod.init_cache(cfg, batch, max_len, cfg.window, dtype)
+    if mixer == "mamba":
+        return mamba_mod.init_mamba_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if mixer == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    caches: Dict = {}
+    if cfg.n_periods > 0:
+        per = {
+            str(i): _sublayer_cache(cfg, sub, batch, max_len, dtype)
+            for i, sub in enumerate(cfg.period)
+        }
+        caches["stack"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), per
+        )
+    caches["rest"] = {
+        str(i): _sublayer_cache(cfg, sub, batch, max_len, dtype)
+        for i, sub in enumerate(cfg.remainder)
+    }
+    if cfg.kind == "encdec":
+        nkv, hd = cfg.n_kv_heads, cfg.hd
+        # cross-attention K/V per decoder layer, filled by prefill
+        def ckv(n):
+            return {
+                "k": jnp.zeros((n, batch, 1, nkv, hd), dtype),
+                "v": jnp.zeros((n, batch, 1, nkv, hd), dtype),
+            }
+        # encoder length is dynamic at prefill; use placeholder length 1 and
+        # let prefill rebuild with the real length.
+        caches["cross"] = None
+    return caches
+
+
+# --------------------------------------------------------------------- #
+# Sublayer application
+# --------------------------------------------------------------------- #
+ZERO_AUX = ("moe_load_balance", "moe_router_z")
+
+
+def _zero_aux() -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((), f32) for k in ZERO_AUX}
+
+
+def _apply_ffn(cfg, params, sub, x, aux, decode=False):
+    mixer, ffn = sub
+    if ffn == "none":
+        return x, aux
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if ffn == "moe":
+        from .common import current_mesh
+
+        mesh = current_mesh()
+        if (cfg.moe.a2a and mesh is not None and "model" in mesh.shape
+                and not decode):
+            from .moe_shard_map import moe_ffn_a2a
+
+            data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            out, a = moe_ffn_a2a(cfg, params["ffn"], h, mesh,
+                                 data_axes=data_axes)
+        else:
+            out, a = moe_mod.moe_ffn(cfg, params["ffn"], h, dropless=decode)
+        aux = {k: aux[k] + a.get(k, 0.0) for k in aux}
+    else:
+        out = mlp(params["ffn"], h, cfg.ffn_act)
+    return x + out, aux
+
+
+def apply_sublayer_full(
+    cfg: ModelConfig, params: Dict, sub: Sublayer, x: jax.Array,
+    positions: jax.Array, aux: Dict, *, causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    collect_cache: bool = False, max_len: int = 0, cache_dtype=None,
+) -> Tuple[jax.Array, Dict, Any]:
+    """Full-sequence sublayer (train / prefill / encoder)."""
+    mixer, _ = sub
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if mixer in ("attn", "local"):
+        window = cfg.window if mixer == "local" else None
+        out = attn_mod.attention(cfg, params["mixer"], h, positions,
+                                 causal=causal, window=window)
+        if collect_cache:
+            new_cache = _prefill_kv_cache(cfg, params["mixer"], h, positions,
+                                          window, max_len, cache_dtype)
+    elif mixer == "mamba":
+        out = mamba_mod.mamba_block(cfg, params["mixer"], h)
+        if collect_cache:
+            new_cache = _prefill_mamba_state(cfg, params["mixer"], h)
+    elif mixer == "mlstm":
+        out = xlstm_mod.mlstm_block(cfg, params["mixer"], h)
+        if collect_cache:
+            new_cache = _prefill_mlstm_state(cfg, params["mixer"], h)
+    elif mixer == "slstm":
+        if collect_cache:
+            out, new_cache = _slstm_block_with_state(cfg, params["mixer"], h)
+        else:
+            out = xlstm_mod.slstm_block(cfg, params["mixer"], h)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    x = shard(x, ("batch", None, None))
+    if cross_kv is not None:
+        hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        out = attn_mod.attention(cfg, params["cross"], hx, positions,
+                                 causal=False, kv=cross_kv)
+        x = x + out
+    x, aux = _apply_ffn(cfg, params, sub, x, aux)
+    return x, aux, new_cache
+
+
+def apply_sublayer_decode(
+    cfg: ModelConfig, params: Dict, sub: Sublayer, x: jax.Array,
+    cache: Any, pos: jax.Array, aux: Dict,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, Any]:
+    """One-token sublayer against its cache."""
+    mixer, _ = sub
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        window = cfg.window if mixer == "local" else None
+        out, new_cache = attn_mod.decode_attention(
+            cfg, params["mixer"], h, cache, pos, window=window,
+            positions=mrope_positions)
+    elif mixer == "mamba":
+        out, new_cache = mamba_mod.mamba_decode(cfg, params["mixer"], h, cache)
+    elif mixer == "mlstm":
+        out, new_cache = xlstm_mod.mlstm_decode(cfg, params["mixer"], h, cache)
+    elif mixer == "slstm":
+        out, new_cache = xlstm_mod.slstm_decode(cfg, params["mixer"], h, cache)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if cross_kv is not None:
+        hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        out = attn_mod.decode_cross_attention(cfg, params["cross"], hx, *cross_kv)
+        x = x + out
+    x, aux = _apply_ffn(cfg, params, sub, x, aux, decode=True)
+    return x, aux, new_cache
+
+
+# --------------------------------------------------------------------- #
+# Prefill cache construction helpers
+# --------------------------------------------------------------------- #
+def _prefill_kv_cache(cfg, params, h, positions, window, max_len, dtype):
+    k = jnp.einsum("bsd,dnh->bsnh", h, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", h, params["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        if cfg.mrope_sections is not None and positions.ndim == 3:
+            from .layers import apply_mrope
+
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            from .layers import apply_rope
+
+            pos = positions if positions.ndim == 2 else positions[:, 0]
+            k = apply_rope(k, pos, cfg.rope_theta)
+    B, S = k.shape[0], k.shape[1]
+    S_c = max_len if window is None else min(window, max_len)
+    cache = attn_mod.init_cache(cfg, B, max_len, window, dtype or k.dtype)
+    if window is None or S <= S_c:
+        nk = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), 0, axis=1)
+        if window is not None and S == S_c:
+            pass  # ring aligned: slot i == position i (mod window)
+        return KVCache(nk, nv)
+    # ring: keep last S_c positions at slots pos % S_c
+    last_k, last_v = k[:, -S_c:], v[:, -S_c:]
+    start = S - S_c
+    slots = (start + jnp.arange(S_c)) % S_c
+    nk = cache.k.at[:, slots].set(last_k.astype(cache.k.dtype))
+    nv = cache.v.at[:, slots].set(last_v.astype(cache.v.dtype))
+    return KVCache(nk, nv)
+
+
+def _prefill_mamba_state(cfg, params, h):
+    """Final (conv, ssm) state after a full-sequence pass."""
+    B, S, _ = h.shape
+    d_inner, d_state, d_conv, _ = mamba_mod._dims(cfg)
+    hp = jnp.einsum("bsd,dgi->bsgi", h, params["in_proj"])
+    xi = hp[..., 0, :]
+    pad = jnp.zeros((B, d_conv - 1, d_inner), xi.dtype)
+    xpad = jnp.concatenate([pad, xi], axis=1)
+    xc = sum(
+        xpad[:, i : i + S, :] * params["conv_w"][i][None, None, :]
+        for i in range(d_conv)
+    ) + params["conv_b"][None, None, :]
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, _ = mamba_mod._ssm_inputs(cfg, params, xc)
+    ssm = mamba_mod.ssm_final_state(cfg, dt, A, Bm, xc)
+    conv = xpad[:, S:, :]  # trailing d_conv-1 raw inner inputs
+    return mamba_mod.MambaState(conv=conv, ssm=ssm)
+
+
+def _prefill_mlstm_state(cfg, params, h):
+    """Final (C, n, m) for decode handoff (chunk-recurrent when set)."""
+    return xlstm_mod.mlstm_final_state(cfg, params, h)
+
+
+def _slstm_block_with_state(cfg, params, h):
+    B, S, _ = h.shape
+    xp = jnp.einsum("bsd,dgi->sbgi", h, params["wx"])
+
+    def step(st, xt):
+        st2 = xlstm_mod._slstm_step(cfg, params, xt, st)
+        return st2, st2.h
+
+    final, hs = jax.lax.scan(step, xlstm_mod.init_slstm_state(cfg, B), xp)
+    hs = hs.swapaxes(0, 1).astype(h.dtype)
+    return jnp.einsum("bsi,id->bsd", hs, params["wo"]), final
+
+
+# --------------------------------------------------------------------- #
+# Full model passes
+# --------------------------------------------------------------------- #
+def _merge_vision(cfg, x, batch):
+    ve = batch.get("vision_embeds")
+    if ve is None:
+        return x
+    Sv = ve.shape[1]
+    return jnp.concatenate([ve.astype(x.dtype), x[:, Sv:, :]], axis=1)
+
+
+def _input_embed(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], cfg, tokens)
+    x = _merge_vision(cfg, x, batch)
+    B, S = tokens.shape
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.pos_embed == "sinusoidal":
+        pe = jnp.asarray(sinusoidal_positions(S, cfg.d_model), x.dtype)
+        x = x + pe[None]
+    return x, positions
+
+
+def _period_axes(cfg):
+    """Logical-axes tree for one period's params (no 'layers' prefix)."""
+    from .common import logical_axes
+
+    cross = cfg.kind == "encdec"
+    return logical_axes(period_spec(cfg, cross))
+
+
+def _run_stack(cfg, params, x, positions, aux, *, causal=True, cross_kv=None,
+               collect_cache=False, max_len=0, cache_dtype=None, remat=True):
+    """Scanned periods + remainder.  Returns (x, aux, caches or None)."""
+    caches: Dict = {}
+    paxes = _period_axes(cfg) if "stack" in params else None
+
+    def period_fn(x, pparams, aux):
+        # Pin the sliced per-period params to their sharded layout INSIDE
+        # the loop body: without this, GSPMD hoists the FSDP all-gather of
+        # the whole stacked parameter tree out of the scan (full unsharded
+        # weights resident at once — 50 GiB/dev for the 398B arch).
+        flat_p, treedef = jax.tree.flatten(pparams)
+        flat_ax = jax.tree.structure(pparams).flatten_up_to(paxes)
+        pparams = jax.tree.unflatten(
+            treedef, [shard(pp, ax) for pp, ax in zip(flat_p, flat_ax)])
+        # barrier: the FSDP all-gather of these weights must stay inside
+        # the loop body (no loop-invariant code motion of the gather)
+        pparams = jax.lax.optimization_barrier(pparams)
+        pcaches = {}
+        for i, sub in enumerate(cfg.period):
+            x, aux, c = apply_sublayer_full(
+                cfg, pparams[str(i)], sub, x, positions, aux, causal=causal,
+                cross_kv=cross_kv, collect_cache=collect_cache,
+                max_len=max_len, cache_dtype=cache_dtype)
+            if collect_cache:
+                pcaches[str(i)] = c
+        return x, aux, pcaches
+
+    if "stack" in params:
+        def body(carry, pparams):
+            x, aux = carry
+            fn = period_fn
+            if remat and not collect_cache:
+                fn = jax.checkpoint(
+                    lambda x_, p_, a_: period_fn(x_, p_, a_)[:2],
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                x, aux = fn(x, pparams, aux)
+                return (x, aux), None
+            x, aux, pc = period_fn(x, pparams, aux)
+            return (x, aux), pc
+
+        (x, aux), stack_caches = jax.lax.scan(body, (x, aux), params["stack"])
+        if collect_cache:
+            caches["stack"] = stack_caches
+    rest_caches = {}
+    for i, sub in enumerate(cfg.remainder):
+        x, aux, c = apply_sublayer_full(
+            cfg, params["rest"][str(i)], sub, x, positions, aux, causal=causal,
+            cross_kv=cross_kv, collect_cache=collect_cache,
+            max_len=max_len, cache_dtype=cache_dtype)
+        if collect_cache:
+            rest_caches[str(i)] = c
+    if collect_cache:
+        caches["rest"] = rest_caches
+    return x, aux, (caches if collect_cache else None)
+
+
+def _encode(cfg, params, batch):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    frames = batch["audio_embeds"]  # (B, Se, d)
+    B, Se, _ = frames.shape
+    x = frames + jnp.asarray(
+        sinusoidal_positions(Se, cfg.d_model), frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    enc = params["encoder"]
+    aux = _zero_aux()
+
+    def body(carry, pparams):
+        x, aux = carry
+        x, aux, _ = apply_sublayer_full(
+            cfg, pparams["0"], ("attn", "mlp"), x, positions, aux, causal=False)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux), enc["stack"])
+    return rmsnorm(enc["final_norm"], x, cfg.norm_eps), aux
+
+
+def forward_train(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    """Teacher-forced logits over the full sequence."""
+    aux = _zero_aux()
+    cross_kv = None
+    if cfg.kind == "encdec":
+        enc_out, aux = _encode(cfg, params, batch)
+        cross_kv = (enc_out, enc_out)
+    x, positions = _input_embed(cfg, params, batch)
+    x = shard(x, ("batch", None, None))
+    x, aux, _ = _run_stack(cfg, params, x, positions, aux, causal=True,
+                           cross_kv=cross_kv)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return compute_logits(params["embed"], cfg, x), aux
+
+
+def lm_loss(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward_train(cfg, params, batch)
+    tokens = batch["tokens"]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(f32)
+    ll = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + sum(aux.values())
+    aux = dict(aux, ce_loss=loss)
+    return total, aux
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, cache_dtype=None):
+    """Full forward emitting decode caches (and cross-KV for enc-dec)."""
+    aux = _zero_aux()
+    cross_kv = None
+    extras = {}
+    if cfg.kind == "encdec":
+        enc_out, aux = _encode(cfg, params, batch)
+        cross_kv = (enc_out, enc_out)
+        extras["enc_out"] = enc_out
+    x, positions = _input_embed(cfg, params, batch)
+    x, aux, caches = _run_stack(
+        cfg, params, x, positions, aux, causal=True, cross_kv=cross_kv,
+        collect_cache=True, max_len=max_len,
+        cache_dtype=cache_dtype or x.dtype, remat=False)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = compute_logits(params["embed"], cfg, x[:, -1:, :])
+    caches.update(extras)
+    if cfg.kind == "encdec":
+        caches["cross"] = _precompute_cross_kv_all(cfg, params, extras["enc_out"])
+        del caches["enc_out"]
+    return logits, caches
+
+
+def _precompute_cross_kv_all(cfg: ModelConfig, params, enc_out):
+    """Per-decoder-layer cross K/V from the encoder output (computed once;
+    stacked params get a leading period dim via broadcasting einsum)."""
+    def kv_of(cp):
+        k = jnp.einsum("bsd,...dnh->...bsnh", enc_out, cp["wk"])
+        v = jnp.einsum("bsd,...dnh->...bsnh", enc_out, cp["wv"])
+        return {"k": k, "v": v}
+
+    out = {}
+    if "stack" in params:
+        out["stack"] = {
+            str(i): kv_of(params["stack"][str(i)]["cross"])
+            for i in range(len(cfg.period))
+        }
+    out["rest"] = {
+        str(i): kv_of(params["rest"][str(i)]["cross"])
+        for i in range(len(cfg.remainder))
+    }
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens: jax.Array,
+                pos: jax.Array, mrope_positions: Optional[jax.Array] = None):
+    """One-token step.  tokens: (B, 1); pos: scalar int32 (current index)."""
+    aux = _zero_aux()
+    x = embed(params["embed"], cfg, tokens)
+    if cfg.pos_embed == "sinusoidal":
+        d = cfg.d_model  # one-position sinusoidal embedding at `pos`
+        dim = jnp.arange(0, d, 2, dtype=f32)
+        ang = pos.astype(f32) / (10000.0 ** (dim / d))
+        pe = jnp.zeros((d,), x.dtype)
+        pe = pe.at[0::2].set(jnp.sin(ang).astype(x.dtype))
+        pe = pe.at[1::2].set(jnp.cos(ang).astype(x.dtype))
+        x = x + pe[None, None, :]
+    new_caches = dict(caches)
+    cross = caches.get("cross") if cfg.kind == "encdec" else None
+
+    def dec_sub(x, pparams, sub, cache, aux, ckv):
+        return apply_sublayer_decode(cfg, pparams, sub, x, cache, pos, aux,
+                                     cross_kv=ckv,
+                                     mrope_positions=mrope_positions)
+
+    if "stack" in params:
+        stack_xs = (params["stack"], caches["stack"])
+        if cross is not None:
+            stack_xs = stack_xs + (cross["stack"],)
+
+        def body(carry, xs):
+            x, aux = carry
+            pparams, pcache = xs[0], xs[1]
+            pcross = xs[2] if len(xs) > 2 else None
+            new_pc = {}
+            for i, sub in enumerate(cfg.period):
+                ckv = None
+                if pcross is not None:
+                    ckv = (pcross[str(i)]["k"], pcross[str(i)]["v"])
+                x, aux, c = dec_sub(x, pparams[str(i)], sub, pcache[str(i)],
+                                    aux, ckv)
+                new_pc[str(i)] = c
+            return (x, aux), new_pc
+
+        (x, aux), new_stack = jax.lax.scan(body, (x, aux), stack_xs)
+        new_caches["stack"] = new_stack
+    new_rest = {}
+    for i, sub in enumerate(cfg.remainder):
+        ckv = None
+        if cross is not None:
+            rc = cross["rest"][str(i)]
+            ckv = (rc["k"], rc["v"])
+        x, aux, c = dec_sub(x, params["rest"][str(i)], sub,
+                            caches["rest"][str(i)], aux, ckv)
+        new_rest[str(i)] = c
+    new_caches["rest"] = new_rest
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = compute_logits(params["embed"], cfg, x)
+    return logits, new_caches

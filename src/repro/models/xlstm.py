@@ -1,0 +1,284 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form) and sLSTM (scalar
+memory, sequential exponential gating).  [arXiv:2405.04517]
+
+mLSTM parallel form follows the paper's stabilized formulation: cumulative
+log forget gates build a decay matrix D; y = ((QK^T/sqrt(d)) ⊙ D̃) V with a
+max-stabilizer and |n|-normalization.  Decode keeps (C, n, m) per head and
+is O(1) per token — the basis for xlstm's long_500k eligibility.
+
+sLSTM is inherently sequential (recurrent gate connections); train/prefill
+runs a lax.scan over time (documented compile-time trade-off), decode is a
+single fused step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import ParamSpec, shard
+
+f32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    hd = d_inner // cfg.n_heads
+    return d_inner, hd
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, nh, hd, hd) matrix memory
+    n: jax.Array  # (B, nh, hd) normalizer
+    m: jax.Array  # (B, nh) stabilizer
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, hd = _dims(cfg)
+    nh = cfg.n_heads
+    return {
+        "wqkv": ParamSpec((d, 3, nh, hd), ("embed", None, "heads", "head_dim")),
+        "wif": ParamSpec((d, 2, nh), ("embed", None, "heads")),  # i/f gates
+        "wz": ParamSpec((d, d_inner), ("embed", "inner")),  # output gate path
+        "wo": ParamSpec((d_inner, d), ("inner", "embed")),
+    }
+
+
+def _qkvif(cfg, params, x):
+    qkv = jnp.einsum("bsd,dgnh->bsgnh", x, params["wqkv"])
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B,S,nh,hd)
+    gif = jnp.einsum("bsd,dgn->bsgn", x, params["wif"]).astype(f32)
+    ig, fg = gif[:, :, 0], gif[:, :, 1]  # (B, S, nh) pre-activations
+    return q, k, v, ig, fg
+
+
+def mlstm_block(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    """Parallel form for train/prefill; chunk-recurrent when configured.
+
+    Chunking bounds the (B, nh, S, S) decay/score temps to (B, nh, chunk,
+    chunk) with an exact carried (C, n, m) state between chunks — the same
+    stabilized algebra as single-token decode, verified equivalent in
+    tests/test_models_long.py."""
+    B, S, _ = x.shape
+    chunk = cfg.ssm_chunk
+    if chunk is not None and S > chunk and S % chunk == 0:
+        y, _ = _mlstm_chunks(cfg, params, x, chunk)
+        d_inner, _ = _dims(cfg)
+        z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, params["wz"]))
+        return jnp.einsum("bsi,id->bsd", y * z, params["wo"])
+    d_inner, hd = _dims(cfg)
+    q, k, v, ig, fg = _qkvif(cfg, params, x)
+    logf = jax.nn.log_sigmoid(fg)  # (B, S, nh)
+    F = jnp.cumsum(logf, axis=1)  # cumulative log forget
+    # D_log[b,n,s,t] = F_s - F_t + i_t   (t <= s)
+    Fs = F.transpose(0, 2, 1)  # (B, nh, S)
+    Dlog = Fs[:, :, :, None] - Fs[:, :, None, :] + ig.transpose(0, 2, 1)[:, :, None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dlog = jnp.where(causal[None, None], Dlog, -jnp.inf)
+    mstab = jnp.max(Dlog, axis=-1, keepdims=True)  # (B, nh, S, 1)
+    mstab = jnp.maximum(mstab, -1e30)
+    Dmat = jnp.exp(Dlog - mstab)  # (B, nh, S, S)
+    scale = jnp.asarray(hd ** -0.5, f32)
+    scores = jnp.einsum("bsnh,btnh->bnst", q.astype(f32) * scale, k.astype(f32))
+    W = scores * Dmat
+    norm = jnp.abs(jnp.sum(W, axis=-1, keepdims=True))
+    norm = jnp.maximum(norm, jnp.exp(-mstab))  # paper's max(|n q|, e^{-m})
+    y = jnp.einsum("bnst,btnh->bsnh", W / norm, v.astype(f32))
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, params["wz"]))
+    return jnp.einsum("bsi,id->bsd", y * z, params["wo"])
+
+
+def _mlstm_chunks(cfg: ModelConfig, params: Dict, x: jax.Array, chunk: int
+                  ) -> Tuple[jax.Array, MLSTMState]:
+    """Chunk-recurrent mLSTM: returns (y_inner (B,S,d_inner), final state)."""
+    B, S, _ = x.shape
+    d_inner, hd = _dims(cfg)
+    nh = cfg.n_heads
+    q, k, v, ig, fg = _qkvif(cfg, params, x)
+    n_chunks = S // chunk
+
+    def cs(t):  # (B, S, ...) -> (n_chunks, B, chunk, ...)
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = cs(q.astype(f32)), cs(k.astype(f32)), cs(v.astype(f32))
+    igc, fgc = cs(ig), cs(fg)
+    scale = jnp.asarray(hd ** -0.5, f32)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def one(state, xs):
+        qi, ki, vi, igi, fgi = xs  # (B, chunk, ...)
+        C0, n0, m0 = state
+        logf = jax.nn.log_sigmoid(fgi)  # (B, chunk, nh)
+        F = jnp.cumsum(logf, axis=1).transpose(0, 2, 1)  # (B, nh, chunk)
+        igT = igi.transpose(0, 2, 1)  # (B, nh, chunk)
+        # intra-chunk log weights (B, nh, t, j)
+        Dlog = F[:, :, :, None] - F[:, :, None, :] + igT[:, :, None, :]
+        Dlog = jnp.where(causal[None, None], Dlog, -jnp.inf)
+        intra_max = jnp.max(Dlog, axis=-1)  # (B, nh, chunk)
+        inter_log = F + m0[:, :, None]  # carried-state weight (B, nh, chunk)
+        m_t = jnp.maximum(jnp.maximum(intra_max, inter_log), -1e30)
+        w_intra = jnp.exp(Dlog - m_t[..., None])
+        w_inter = jnp.exp(inter_log - m_t)  # (B, nh, chunk)
+        scores = jnp.einsum("btnh,bjnh->bntj", qi * scale, ki)
+        Wm = scores * w_intra
+        num = jnp.einsum("bntj,bjnh->btnh", Wm, vi)
+        num = num + jnp.einsum("bnt,btnh,bnhk->btnk", w_inter, qi, C0)
+        den = jnp.sum(Wm, axis=-1) \
+            + w_inter * jnp.einsum("btnh,bnh->bnt", qi, n0)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t)).transpose(0, 2, 1)
+        y = num / den[..., None]  # (B, chunk, nh, hd)
+        # end-of-chunk state
+        FL = F[:, :, -1]  # (B, nh)
+        logw_end = FL[:, :, None] - F + igT  # (B, nh, chunk)
+        m_end = jnp.maximum(FL + m0, jnp.max(logw_end, axis=-1))
+        w_end = jnp.exp(logw_end - m_end[..., None])
+        carry_w = jnp.exp(FL + m0 - m_end)  # (B, nh)
+        C_new = carry_w[..., None, None] * C0 + jnp.einsum(
+            "bnj,bjnh,bjnk->bnhk", w_end, ki * scale, vi)
+        n_new = carry_w[..., None] * n0 + jnp.einsum(
+            "bnj,bjnh->bnh", w_end, ki * scale)
+        return MLSTMState(C_new, n_new, m_end), y
+
+    state0 = init_mlstm_state(cfg, B)
+    final, ys = jax.lax.scan(one, state0, (qc, kc, vc, igc, fgc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, d_inner).astype(x.dtype)
+    return y, final
+
+
+def mlstm_final_state(cfg: ModelConfig, params: Dict, x: jax.Array
+                      ) -> MLSTMState:
+    """Final (C, n, m) for prefill -> decode handoff (chunked when set)."""
+    B, S, _ = x.shape
+    chunk = cfg.ssm_chunk
+    if chunk is not None and S > chunk and S % chunk == 0:
+        _, final = _mlstm_chunks(cfg, params, x, chunk)
+        return final
+    _, hd = _dims(cfg)
+    q, k, v, ig, fg = _qkvif(cfg, params, x)
+    logf = jax.nn.log_sigmoid(fg)
+    F = jnp.cumsum(logf, axis=1)
+    FS = F[:, -1][:, None]  # (B, 1, nh)
+    logw = (FS - F + ig).transpose(0, 2, 1)  # (B, nh, S)
+    m = jnp.max(logw, axis=-1)
+    w = jnp.exp(logw - m[..., None])
+    scale = jnp.asarray(hd ** -0.5, f32)
+    C = jnp.einsum("bns,bsnh,bsnk->bnhk", w, k.astype(f32) * scale,
+                   v.astype(f32))
+    n = jnp.einsum("bns,bsnh->bnh", w, k.astype(f32) * scale)
+    return MLSTMState(C=C, n=n, m=m)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_inner, hd = _dims(cfg)
+    nh = cfg.n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, nh, hd, hd), f32),
+        n=jnp.zeros((batch, nh, hd), f32),
+        m=jnp.full((batch, nh), -1e30, f32),
+    )
+
+
+def mlstm_decode(
+    cfg: ModelConfig, params: Dict, x: jax.Array, state: MLSTMState
+) -> Tuple[jax.Array, MLSTMState]:
+    """O(1) recurrent step.  x: (B, 1, d)."""
+    B = x.shape[0]
+    d_inner, hd = _dims(cfg)
+    q, k, v, ig, fg = _qkvif(cfg, params, x)
+    q, k, v = q[:, 0].astype(f32), k[:, 0].astype(f32), v[:, 0].astype(f32)
+    ig, logf = ig[:, 0], jax.nn.log_sigmoid(fg[:, 0])  # (B, nh)
+    m_new = jnp.maximum(logf + state.m, ig)
+    fe = jnp.exp(logf + state.m - m_new)[..., None]
+    ie = jnp.exp(ig - m_new)[..., None]
+    scale = jnp.asarray(hd ** -0.5, f32)
+    C_new = fe[..., None] * state.C + jnp.einsum("bnh,bnk->bnhk", ie * k * scale, v)
+    n_new = fe * state.n + ie * k * scale
+    num = jnp.einsum("bnhk,bnh->bnk", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", n_new, q))[..., None],
+                      jnp.exp(-m_new)[..., None])
+    y = (num / den).reshape(B, 1, d_inner).astype(x.dtype)
+    z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, params["wz"]))
+    out = jnp.einsum("bsi,id->bsd", y * z, params["wo"])
+    return out, MLSTMState(C_new, n_new, m_new)
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d_inner)
+    n: jax.Array  # (B, d_inner)
+    h: jax.Array  # (B, d_inner) recurrent input
+    m: jax.Array  # (B, d_inner) stabilizer
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, hd = _dims(cfg)
+    nh = cfg.n_heads
+    return {
+        # 4 gates (i, f, z, o) from input ...
+        "wx": ParamSpec((d, 4, d_inner), ("embed", None, "inner")),
+        # ... plus head-block-diagonal recurrence from h_{t-1}
+        "wr": ParamSpec((nh, hd, 4, hd), ("heads", "head_dim", None, None)),
+        "bias": ParamSpec((4, d_inner), (None, "inner"), init="zeros"),
+        "wo": ParamSpec((d_inner, d), ("inner", "embed")),
+    }
+
+
+def _slstm_step(cfg, params, xt, st: SLSTMState):
+    """xt: (B, 4, d_inner) precomputed input projections."""
+    d_inner, hd = _dims(cfg)
+    nh = cfg.n_heads
+    B = xt.shape[0]
+    hprev = st.h.reshape(B, nh, hd)
+    rec = jnp.einsum("bnh,nhgk->bgnk", hprev, params["wr"]).reshape(B, 4, d_inner)
+    pre = (xt + rec + params["bias"][None]).astype(f32)
+    ig, fg, zg, og = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + st.m, ig)
+    i_e = jnp.exp(ig - m_new)
+    f_e = jnp.exp(logf + st.m - m_new)
+    c_new = f_e * st.c + i_e * jnp.tanh(zg)
+    n_new = f_e * st.n + i_e
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d_inner, _ = _dims(cfg)
+    z = jnp.zeros((batch, d_inner), f32)
+    return SLSTMState(z, z, z, jnp.full((batch, d_inner), -1e30, f32))
+
+
+def slstm_block(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    """Sequential scan over time (sLSTM is not parallelizable)."""
+    B, S, _ = x.shape
+    d_inner, _ = _dims(cfg)
+    xp = jnp.einsum("bsd,dgi->sbgi", x, params["wx"])  # (S, B, 4, d_inner)
+
+    def step(st, xt):
+        st2 = _slstm_step(cfg, params, xt, st)
+        return st2, st2.h
+
+    _, hs = jax.lax.scan(step, init_slstm_state(cfg, B), xp)
+    hs = hs.swapaxes(0, 1).astype(x.dtype)  # (B, S, d_inner)
+    return jnp.einsum("bsi,id->bsd", hs, params["wo"])
+
+
+def slstm_decode(
+    cfg: ModelConfig, params: Dict, x: jax.Array, state: SLSTMState
+) -> Tuple[jax.Array, SLSTMState]:
+    xt = jnp.einsum("bsd,dgi->bgi", x[:, :1], params["wx"])
+    st2 = _slstm_step(cfg, params, xt, state)
+    out = jnp.einsum("bi,id->bd", st2.h.astype(x.dtype), params["wo"])
+    return out[:, None, :], st2

@@ -1,0 +1,305 @@
+"""Hartree–Fock SCF on the Pariser–Parr–Pople model (paper §3.3.3, §5.3).
+
+The PPP Hamiltonian for a 1-D chain of ``n`` sites (one orthogonal basis
+function per site, S = I): core Hamiltonian with nearest-neighbour hopping
+``-t``; two-electron integrals in the Ohno parameterization
+
+    gamma_{mu nu} = U / sqrt(1 + (U * R_{mu nu})^2),     R in units of the
+    lattice spacing, so gamma_{mu mu} = U.
+
+Closed-shell restricted HF fixed-point map F: P -> P' (paper steps 1-3):
+
+    F(P)  = H + diag(gamma @ diag(P)) - 1/2 * P ⊙ gamma     (Fock build)
+    F C = C eps                                              (eigh, S = I)
+    P'    = 2 * C_occ C_occ^T                                (density)
+
+U/|t| controls the SCF Jacobian's spectral radius: small => rapid
+contraction; ~2.5 => multiple fixed points (async convergence becomes
+stochastic, paper Fig. 8); >= 4 => even synchronous DIIS struggles.
+
+The state is the flattened density matrix; workers own row-blocks, evaluate
+the *full* SCF map on the stale snapshot and return only their rows (paper
+§3.3.3) — evaluation-level perturbation, coupling density 1.  The
+coordinator symmetrizes after every application (``project``) and uses the
+DIIS commutator residual ``[F(P), P]`` for acceleration and convergence.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FixedPointProblem
+
+__all__ = ["PPPChain", "SCFProblem"]
+
+
+class PPPChain:
+    """PPP model for a 1-D chain at half filling (n even)."""
+
+    def __init__(self, n_atoms: int = 8, U: float = 2.0, t: float = 1.0):
+        assert n_atoms % 2 == 0, "half filling requires even n_atoms"
+        self.n = n_atoms
+        self.U = U
+        self.t = t
+        self.n_occ = n_atoms // 2
+        H = np.zeros((n_atoms, n_atoms))
+        for i in range(n_atoms - 1):
+            H[i, i + 1] = H[i + 1, i] = -t
+        R = np.abs(np.arange(n_atoms)[:, None] - np.arange(n_atoms)[None, :])
+        gamma = U / np.sqrt(1.0 + (U * R) ** 2)  # Ohno
+        self.H = jnp.asarray(H)
+        self.gamma = jnp.asarray(gamma)
+        # Nuclear(core)-core repulsion of the +1 cores, constant shift.
+        self.e_core = float(np.sum(np.triu(np.asarray(gamma), k=1)))
+
+    # ------------------------------------------------------------------ #
+    @functools.partial(jax.jit, static_argnums=0)
+    def fock(self, P: jnp.ndarray) -> jnp.ndarray:
+        J = jnp.diag(self.gamma @ jnp.diag(P))
+        K = P * self.gamma
+        return self.H + J - 0.5 * K
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def scf_map(self, P: jnp.ndarray) -> jnp.ndarray:
+        F = self.fock(P)
+        _, C = jnp.linalg.eigh(F)
+        Cocc = C[:, : self.n_occ]
+        return 2.0 * Cocc @ Cocc.T
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def commutator(self, P: jnp.ndarray) -> jnp.ndarray:
+        F = self.fock(P)
+        return F @ P - P @ F  # S = I
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def electronic_energy(self, P: jnp.ndarray) -> jnp.ndarray:
+        F = self.fock(P)
+        return 0.5 * jnp.sum(P * (self.H + F))
+
+    def energy(self, P: np.ndarray) -> float:
+        Pm = jnp.asarray(P.reshape(self.n, self.n))
+        return float(self.electronic_energy(Pm)) + self.e_core
+
+    def core_guess(self) -> np.ndarray:
+        _, C = jnp.linalg.eigh(self.H)
+        Cocc = C[:, : self.n_occ]
+        return np.asarray(2.0 * Cocc @ Cocc.T)
+
+
+class UHFPPP:
+    """Spin-unrestricted PPP Hartree-Fock (paper §3.3.3 map, UHF variant).
+
+    The UHF energy landscape at intermediate U/|t| admits competing
+    paramagnetic and spin-density-wave fixed points — the multistability
+    regime of paper Fig. 8.  State: (P_up, P_dn) stacked.
+
+        F_sigma = H + diag(gamma @ diag(P_up + P_dn)) - P_sigma ⊙ gamma
+    """
+
+    def __init__(self, chain: PPPChain):
+        self.chain = chain
+        self.n = chain.n
+        self.n_occ = chain.n // 2  # S_z = 0: n/2 up + n/2 down electrons
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def fock(self, Pu: jnp.ndarray, Pd: jnp.ndarray):
+        c = self.chain
+        J = jnp.diag(c.gamma @ jnp.diag(Pu + Pd))
+        return c.H + J - Pu * c.gamma, c.H + J - Pd * c.gamma
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def scf_map(self, Pu: jnp.ndarray, Pd: jnp.ndarray):
+        Fu, Fd = self.fock(Pu, Pd)
+        _, Cu = jnp.linalg.eigh(Fu)
+        _, Cd = jnp.linalg.eigh(Fd)
+        Pu2 = Cu[:, : self.n_occ] @ Cu[:, : self.n_occ].T
+        Pd2 = Cd[:, : self.n_occ] @ Cd[:, : self.n_occ].T
+        return Pu2, Pd2
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def commutator(self, Pu, Pd):
+        Fu, Fd = self.fock(Pu, Pd)
+        return Fu @ Pu - Pu @ Fu, Fd @ Pd - Pd @ Fd
+
+    def energy(self, Pu: np.ndarray, Pd: np.ndarray) -> float:
+        c = self.chain
+        Pu = jnp.asarray(Pu)
+        Pd = jnp.asarray(Pd)
+        Fu, Fd = self.fock(Pu, Pd)
+        e = 0.5 * (jnp.sum((Pu + Pd) * c.H) + jnp.sum(Pu * Fu)
+                   + jnp.sum(Pd * Fd))
+        return float(e) + c.e_core
+
+
+class UHFSCFProblem(FixedPointProblem):
+    """UHF-PPP as a partitioned fixed-point problem; state = (P_up | P_dn).
+
+    Workers own row-blocks of BOTH spin densities; the coordinator
+    symmetrizes each spin block (paper §3.3.3 'assembles, symmetrizes').
+    The multistable regime (paper Fig. 8) lives here: paramagnetic vs
+    spin-density-wave fixed points at intermediate U/|t|.
+    """
+
+    def __init__(self, chain: PPPChain, spin_seed: float = 0.05):
+        self.uhf = UHFPPP(chain)
+        self.chain = chain
+        self.n_ao = chain.n
+        self.n = 2 * chain.n * chain.n
+        self.spin_seed = spin_seed
+
+    def _split(self, x: np.ndarray):
+        n = self.n_ao
+        return (jnp.asarray(x[: n * n].reshape(n, n)),
+                jnp.asarray(x[n * n:].reshape(n, n)))
+
+    def initial(self) -> np.ndarray:
+        P = np.asarray(self.chain.core_guess()) / 2.0
+        alt = np.diag(0.5 * self.spin_seed * (-1.0) ** np.arange(self.n_ao))
+        Pu, Pd = P + alt, P - alt
+        return np.concatenate([Pu.reshape(-1), Pd.reshape(-1)])
+
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        Pu, Pd = self._split(x)
+        Pu2, Pd2 = self.uhf.scf_map(Pu, Pd)
+        return np.concatenate([np.asarray(Pu2).reshape(-1),
+                               np.asarray(Pd2).reshape(-1)])
+
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        return self.full_map(x)[indices]
+
+    def default_blocks(self, p: int):
+        n = self.n_ao
+        bounds = np.linspace(0, n, p + 1).astype(int)
+        blocks = []
+        for i in range(p):
+            rows = np.arange(bounds[i] * n, bounds[i + 1] * n)
+            blocks.append(np.concatenate([rows, rows + n * n]))
+        return blocks
+
+    def project(self, x: np.ndarray) -> np.ndarray:
+        Pu, Pd = self._split(x)
+        Pu = 0.5 * (Pu + Pu.T)
+        Pd = 0.5 * (Pd + Pd.T)
+        return np.concatenate([np.asarray(Pu).reshape(-1),
+                               np.asarray(Pd).reshape(-1)])
+
+    def accel_residual(self, x: np.ndarray, g: np.ndarray) -> np.ndarray:
+        Pu, Pd = self._split(x)
+        Cu, Cd = self.uhf.commutator(Pu, Pd)
+        return np.concatenate([np.asarray(Cu).reshape(-1),
+                               np.asarray(Cd).reshape(-1)])
+
+    def residual(self, x: np.ndarray) -> np.ndarray:
+        return self.accel_residual(x, x)
+
+    def residual_norm(self, x: np.ndarray) -> float:
+        return float(np.linalg.norm(self.residual(x)))
+
+    def energy(self, x: np.ndarray) -> float:
+        Pu, Pd = self._split(x)
+        return self.uhf.energy(np.asarray(Pu), np.asarray(Pd))
+
+    def dependency_counts(self) -> None:
+        return None  # dense coupling
+
+    def reference_energy(self, max_iter: int = 400, tol: float = 1e-11) -> float:
+        """Lowest UHF energy over PM / SDW(+) / SDW(-) DIIS starts."""
+        from repro.core.anderson import AndersonConfig, AndersonState
+
+        best = np.inf
+        for seed in (0.0, self.spin_seed, -self.spin_seed, 4 * self.spin_seed):
+            save = self.spin_seed
+            self.spin_seed = seed
+            x = self.initial()
+            self.spin_seed = save
+            st = AndersonState(AndersonConfig(m=8, beta=1.0, reg=1e-12))
+            for _ in range(max_iter):
+                g = self.full_map(x)
+                st.push(x, g, self.accel_residual(x, g))
+                cand = st.propose()
+                x = self.project(cand if cand is not None else g)
+                if self.residual_norm(x) < tol:
+                    break
+            if self.residual_norm(x) < 1e-6:
+                best = min(best, self.energy(x))
+        return best
+
+
+class SCFProblem(FixedPointProblem):
+    """SCF as a partitioned fixed-point problem on the flattened density."""
+
+    def __init__(self, chain: PPPChain, guess: Optional[np.ndarray] = None):
+        self.chain = chain
+        self.n_ao = chain.n
+        self.n = chain.n * chain.n
+        self._guess = guess
+
+    # ----------------------------------------------------------------- #
+    def initial(self) -> np.ndarray:
+        P0 = self.chain.core_guess() if self._guess is None else self._guess
+        return np.asarray(P0).reshape(-1).astype(np.float64)
+
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        P = jnp.asarray(x.reshape(self.n_ao, self.n_ao))
+        return np.asarray(self.chain.scf_map(P)).reshape(-1)
+
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        # Worker: full SCF map on the stale snapshot, return owned rows only.
+        return self.full_map(x)[indices]
+
+    def default_blocks(self, p: int) -> List[np.ndarray]:
+        # Row blocks of the density matrix, as flat index ranges.
+        bounds = np.linspace(0, self.n_ao, p + 1).astype(int)
+        return [
+            np.arange(bounds[i] * self.n_ao, bounds[i + 1] * self.n_ao)
+            for i in range(p)
+        ]
+
+    def project(self, x: np.ndarray) -> np.ndarray:
+        """Coordinator-side symmetrization (paper: 'assembles, symmetrizes')."""
+        P = x.reshape(self.n_ao, self.n_ao)
+        return (0.5 * (P + P.T)).reshape(-1)
+
+    # ----------------------------------------------------------------- #
+    def accel_residual(self, x: np.ndarray, g: np.ndarray) -> np.ndarray:
+        """DIIS commutator error FPS - SPF (S = I) at the current iterate."""
+        P = jnp.asarray(x.reshape(self.n_ao, self.n_ao))
+        return np.asarray(self.chain.commutator(P)).reshape(-1)
+
+    def residual(self, x: np.ndarray) -> np.ndarray:
+        P = jnp.asarray(x.reshape(self.n_ao, self.n_ao))
+        return np.asarray(self.chain.commutator(P)).reshape(-1)
+
+    def residual_norm(self, x: np.ndarray) -> float:
+        return float(np.linalg.norm(self.residual(x)))
+
+    def energy(self, x: np.ndarray) -> float:
+        return self.chain.energy(x)
+
+    # --- structure: dense coupling through the two-electron integrals --- #
+    def dependency_counts(self) -> None:
+        return None  # dense => coupling density 1 (see core.coupling)
+
+    # --- reference ------------------------------------------------------ #
+    def reference_solution(self, max_iter: int = 500, tol: float = 1e-12,
+                           diis_m: int = 8) -> np.ndarray:
+        """Synchronous DIIS from the core guess (the paper's sync baseline)."""
+        from repro.core.anderson import AndersonConfig, AndersonState
+
+        x = self.initial()
+        st = AndersonState(AndersonConfig(m=diis_m, beta=1.0, reg=1e-12))
+        for _ in range(max_iter):
+            g = self.full_map(x)
+            st.push(x, g, self.accel_residual(x, g))
+            cand = st.propose()
+            x_new = cand if cand is not None else g
+            x_new = self.project(x_new)
+            if self.residual_norm(x_new) < tol:
+                return x_new
+            x = x_new
+        return x

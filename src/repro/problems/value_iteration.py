@@ -1,0 +1,205 @@
+"""Asynchronous value iteration on Garnet MDPs (paper §3.3.2, §5.2).
+
+The Bellman optimality operator
+
+    (T V)(s) = max_a [ R(s,a) + gamma * sum_b P(s'_b | s,a) V(s'_b) ]
+
+is a gamma-contraction in the sup norm.  Garnet(S, A, b) random MDPs
+(Archibald et al. 1995): each (s, a) has ``b`` distinct successor states
+with stick-breaking probabilities and uniform(0,1) rewards.
+
+Workers own state blocks; each update is the *full map component* evaluated
+on the (stale) snapshot — the evaluation-level-perturbation mechanism that
+lets Anderson survive asynchrony (paper §3.5).
+
+A :class:`PolicyEvaluationProblem` (linear, T_pi V = r_pi + gamma P_pi V)
+isolates the max-operator non-smoothness from the l2/linf norm mismatch.
+A :class:`GridWorldMDP` provides a known-optimal-policy validation target.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FixedPointProblem
+
+__all__ = [
+    "GarnetMDP",
+    "GridWorldMDP",
+    "ValueIterationProblem",
+    "PolicyEvaluationProblem",
+]
+
+
+@jax.jit
+def _bellman(V, idx, probs, R, gamma):
+    """(T V)(s) for all s: gather successors, expect, max over actions."""
+    ev = jnp.einsum("sab,sab->sa", probs, V[idx])
+    return jnp.max(R + gamma * ev, axis=1)
+
+
+@jax.jit
+def _bellman_policy(V, idx, probs, R, gamma, pi):
+    """(T_pi V)(s): expectation under a fixed policy (linear map)."""
+    ev = jnp.einsum("sab,sab->sa", probs, V[idx])
+    q = R + gamma * ev
+    return jnp.take_along_axis(q, pi[:, None], axis=1)[:, 0]
+
+
+class GarnetMDP:
+    """Garnet(S, A, b) random MDP (Archibald/McKinnon/Thomas 1995)."""
+
+    def __init__(self, S: int = 500, A: int = 4, b: int = 5, gamma: float = 0.95,
+                 seed: int = 0):
+        self.S, self.A, self.b, self.gamma = S, A, b, gamma
+        rng = np.random.default_rng(seed)
+        idx = np.empty((S, A, b), dtype=np.int32)
+        for s in range(S):
+            for a in range(A):
+                idx[s, a] = rng.choice(S, size=b, replace=False)
+        # Stick-breaking transition probabilities (standard Garnet recipe).
+        cuts = np.sort(rng.uniform(size=(S, A, b - 1)), axis=-1)
+        probs = np.diff(np.concatenate(
+            [np.zeros((S, A, 1)), cuts, np.ones((S, A, 1))], axis=-1), axis=-1)
+        self.idx = jnp.asarray(idx)
+        self.probs = jnp.asarray(probs)
+        self.R = jnp.asarray(rng.uniform(size=(S, A)))
+
+    def bellman(self, V: np.ndarray) -> np.ndarray:
+        return np.asarray(_bellman(jnp.asarray(V), self.idx, self.probs, self.R,
+                                   self.gamma))
+
+    def q_values(self, V: np.ndarray) -> np.ndarray:
+        ev = jnp.einsum("sab,sab->sa", self.probs, jnp.asarray(V)[self.idx])
+        return np.asarray(self.R + self.gamma * ev)
+
+    def greedy_policy(self, V: np.ndarray) -> np.ndarray:
+        return np.argmax(self.q_values(V), axis=1)
+
+
+class GridWorldMDP(GarnetMDP):
+    """Deterministic grid navigation with a goal — known-optimal validation.
+
+    ``g x g`` grid, 4 actions (N/S/E/W), step reward -1, absorbing goal at
+    the top-left corner with reward 0.  Optimal V*(s) = -gamma-discounted
+    Manhattan distance; computed in closed form for the tests.
+    """
+
+    def __init__(self, g: int = 10, gamma: float = 0.95):
+        self.S, self.A, self.b, self.gamma = g * g, 4, 1, gamma
+        self.g = g
+        S = self.S
+        idx = np.zeros((S, 4, 1), dtype=np.int32)
+        R = np.full((S, 4), -1.0)
+        for s in range(S):
+            r, c = divmod(s, g)
+            moves = [(max(r - 1, 0), c), (min(r + 1, g - 1), c),
+                     (r, max(c - 1, 0)), (r, min(c + 1, g - 1))]
+            for a, (nr, nc) in enumerate(moves):
+                idx[s, a, 0] = nr * g + nc
+        goal = 0
+        idx[goal, :, 0] = goal
+        R[goal, :] = 0.0
+        self.idx = jnp.asarray(idx)
+        self.probs = jnp.asarray(np.ones((S, 4, 1)))
+        self.R = jnp.asarray(R)
+
+    def optimal_values(self) -> np.ndarray:
+        """Closed form: V*(s) = -(1 - gamma^d(s)) / (1 - gamma)."""
+        g, gamma = self.g, self.gamma
+        V = np.zeros(self.S)
+        for s in range(self.S):
+            r, c = divmod(s, g)
+            d = r + c
+            V[s] = -(1.0 - gamma**d) / (1.0 - gamma)
+        return V
+
+
+class ValueIterationProblem(FixedPointProblem):
+    """V <- T V as a partitioned fixed-point problem."""
+
+    def __init__(self, mdp: GarnetMDP):
+        self.mdp = mdp
+        self.n = mdp.S
+        self._sol: Optional[np.ndarray] = None
+
+    def initial(self) -> np.ndarray:
+        return np.zeros(self.n)
+
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        return self.mdp.bellman(x)
+
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        # Each state's update IS the full map component at the stale snapshot
+        # (evaluation-level perturbation, paper §3.5).
+        return self.full_map(x)[indices]
+
+    def residual_norm(self, x: np.ndarray) -> float:
+        # linf: the Bellman operator contracts in the sup norm.
+        return float(np.max(np.abs(self.residual(x))))
+
+    def exact_solution(self) -> np.ndarray:
+        if self._sol is None:
+            V = np.zeros(self.n)
+            for _ in range(200_000):
+                V2 = self.full_map(V)
+                if np.max(np.abs(V2 - V)) < 1e-13:
+                    V = V2
+                    break
+                V = V2
+            self._sol = V
+        return self._sol
+
+    # --- structure ------------------------------------------------------ #
+    def dependency_counts(self) -> np.ndarray:
+        idx = np.asarray(self.mdp.idx).reshape(self.n, -1)
+        return np.asarray(
+            [len(np.unique(np.append(row, i))) for i, row in enumerate(idx)],
+            dtype=np.int64,
+        )
+
+    def dependency_indices(self, i: int) -> np.ndarray:
+        row = np.asarray(self.mdp.idx)[i].reshape(-1)
+        return np.unique(np.append(row, i))
+
+
+class PolicyEvaluationProblem(ValueIterationProblem):
+    """Linear fixed point V = r_pi + gamma P_pi V (no max operator).
+
+    Anderson applies cleanly via the Walker–Ni GMRES equivalence while the
+    linf contraction remains — isolates non-smoothness from norm mismatch.
+    """
+
+    def __init__(self, mdp: GarnetMDP, policy: Optional[np.ndarray] = None):
+        super().__init__(mdp)
+        if policy is None:
+            V_star = ValueIterationProblem(mdp).exact_solution()
+            policy = mdp.greedy_policy(V_star)
+        self.policy = jnp.asarray(policy.astype(np.int32))
+
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(_bellman_policy(
+            jnp.asarray(x), self.mdp.idx, self.mdp.probs, self.mdp.R,
+            self.mdp.gamma, self.policy))
+
+    def exact_solution(self) -> np.ndarray:
+        if self._sol is None:
+            # Direct linear solve of (I - gamma P_pi) V = r_pi.
+            S = self.n
+            idx = np.asarray(self.mdp.idx)
+            probs = np.asarray(self.mdp.probs)
+            R = np.asarray(self.mdp.R)
+            pi = np.asarray(self.policy)
+            P = np.zeros((S, S))
+            r = np.empty(S)
+            for s in range(S):
+                a = pi[s]
+                np.add.at(P[s], idx[s, a], probs[s, a])
+                r[s] = R[s, a]
+            self._sol = np.linalg.solve(np.eye(S) - self.mdp.gamma * P, r)
+        return self._sol

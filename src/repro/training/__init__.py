@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, checkpointing, async-DP, DiLoCo."""

@@ -1,0 +1,123 @@
+"""Asynchronous data-parallel LM training as a fixed-point problem.
+
+This is the beyond-paper integration (DESIGN.md §2): the paper's
+coordinator/worker machinery applied to neural-network training, testing
+its central *coupling-density* prediction on a new domain.
+
+Training is the fixed-point iteration  theta <- G(theta) = theta - lr *
+grad(L)(theta), and the two worker designs map exactly onto the paper's two
+staleness mechanisms:
+
+  * :class:`GradientWorkersProblem` — each worker evaluates the FULL
+    gradient on its own data shard from a (stale) snapshot and returns its
+    owned parameter block of ``theta - lr * g``.  Every returned component
+    reflects the whole stale iterate -> *evaluation-level perturbation*
+    (high coupling).  Prediction: Anderson acceleration survives asynchrony.
+
+  * :class:`BlockGradientWorkersProblem` — each worker differentiates the
+    loss ONLY w.r.t. its own parameter block (block-coordinate descent with
+    frozen stale off-block parameters).  Returned values encode block-local
+    information -> *iterate-level corruption* (low effective coupling).
+    Prediction: Anderson degrades or fails under asynchrony.
+
+Benchmarked in benchmarks/async_dp_lm.py; results in EXPERIMENTS.md
+§Beyond-paper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import ModelConfig
+from repro.core.fixedpoint import FixedPointProblem, contiguous_blocks
+from repro.models.transformer import init_params, lm_loss
+from repro.training.data import DataConfig, SyntheticLM
+
+f32 = jnp.float32
+
+
+class _LMBase(FixedPointProblem):
+    def __init__(self, cfg: ModelConfig, lr: float = 0.2, batch: int = 8,
+                 seq: int = 32, seed: int = 0, data_seed: int = 1):
+        self.cfg = cfg
+        self.lr = lr
+        params = init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
+        theta0, self._unravel = ravel_pytree(params)
+        self._theta0 = np.asarray(theta0, np.float64)
+        self.n = int(theta0.size)
+        self.data = SyntheticLM(DataConfig(
+            vocab_size=cfg.vocab_size, batch=batch, seq=seq, seed=data_seed))
+        self._step = 0  # data cursor: advances per evaluation (fresh shards)
+
+        @jax.jit
+        def loss_of(theta, tokens):
+            p = self._unravel(theta)
+            loss, _ = lm_loss(cfg, p, {"tokens": tokens})
+            return loss
+
+        self._loss = loss_of
+        self._grad = jax.jit(jax.grad(loss_of))
+
+    def _next_tokens(self, worker_salt: int = 0) -> jnp.ndarray:
+        b = self.data.batch(self._step, worker=worker_salt)
+        self._step += 1
+        return jnp.asarray(b["tokens"])
+
+    def initial(self) -> np.ndarray:
+        return self._theta0.copy()
+
+    def loss(self, x: np.ndarray) -> float:
+        return float(self._loss(jnp.asarray(x, f32),
+                                self.data.batch(10_000_000)["tokens"]))
+
+    def full_map(self, x: np.ndarray) -> np.ndarray:
+        th = jnp.asarray(x, f32)
+        g = self._grad(th, self._next_tokens())
+        return np.asarray(th - self.lr * g, np.float64)
+
+    def residual_norm(self, x: np.ndarray) -> float:
+        # deterministic held-out gradient norm (scaled by lr)
+        th = jnp.asarray(x, f32)
+        g = self._grad(th, self.data.batch(10_000_000)["tokens"])
+        return float(self.lr * jnp.linalg.norm(g))
+
+
+class GradientWorkersProblem(_LMBase):
+    """Full-gradient workers: evaluation-level perturbation (high coupling)."""
+
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        return self.full_map(x)[indices]
+
+    def dependency_counts(self) -> None:
+        return None  # every component's update reads the full iterate
+
+
+class BlockGradientWorkersProblem(_LMBase):
+    """Multi-step block-coordinate workers: iterate-level corruption.
+
+    The training analogue of the paper's Jacobi multi-sweep local solves:
+    each worker takes ``local_steps`` SGD steps that update ONLY its own
+    parameter block, with the off-block (stale) parameters frozen.  The
+    returned block has moved far on the basis of stale boundary values —
+    exactly the paper's iterate-level corruption mechanism.
+    """
+
+    def __init__(self, *args, local_steps: int = 5, **kw):
+        super().__init__(*args, **kw)
+        self.local_steps = local_steps
+
+    def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
+        cur = x.copy()
+        salt = int(indices[0]) % 97
+        for _ in range(self.local_steps):
+            g = np.asarray(
+                self._grad(jnp.asarray(cur, f32), self._next_tokens(salt)),
+                np.float64)
+            cur[indices] -= self.lr * g[indices]
+        return cur[indices]

@@ -1,0 +1,187 @@
+"""DiLoCo-style multi-pod training with Anderson-accelerated outer loop.
+
+The multi-pod deployment story for the paper's technique (DESIGN.md §2):
+each pod runs ``inner_steps`` of local AdamW/SGD from the shared iterate;
+the coordinator treats the averaged pod delta as a *pseudo-gradient* and
+the outer update as a fixed-point map
+
+    theta <- G(theta) = theta + outer_lr * mean_k( local_k(theta) - theta ).
+
+Because each pod's delta is a full map evaluation on (possibly stale)
+parameters, staleness enters at evaluation level — the regime where the
+paper predicts Anderson acceleration survives.  The coordinator therefore
+applies the SAME safeguarded Anderson machinery (core/anderson.py) on the
+outer iterate sequence, and the async mode applies pod deltas in arrival
+order with bounded staleness — a straggling pod delays information, not
+the barrier.
+
+The exchanged deltas optionally go through gradient compression
+(training/compression.py): top-k sparsification with error feedback.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import ModelConfig
+from repro.core.anderson import AndersonConfig, AndersonState
+from repro.core.async_engine import FaultProfile
+from repro.models.transformer import init_params, lm_loss
+from repro.training.compression import Compressor
+from repro.training.data import DataConfig, SyntheticLM
+
+f32 = jnp.float32
+
+
+@dataclass
+class DiLoCoConfig:
+    n_pods: int = 4
+    inner_steps: int = 10
+    inner_lr: float = 0.1
+    outer_lr: float = 1.0
+    outer_steps: int = 20
+    accel: Optional[AndersonConfig] = None
+    mode: str = "sync"  # "sync" | "async" (arrival-order pod deltas)
+    compute_time: float = 1.0  # virtual seconds per inner phase
+    faults: Optional[Dict[int, FaultProfile]] = None
+    compressor: Optional[Compressor] = None
+    seed: int = 0
+
+
+@dataclass
+class DiLoCoResult:
+    losses: List[float] = field(default_factory=list)
+    wall_times: List[float] = field(default_factory=list)
+    outer_updates: int = 0
+    accel_accepts: int = 0
+    accel_rejects: int = 0
+    final_theta: Optional[np.ndarray] = None
+
+
+class DiLoCoTrainer:
+    def __init__(self, cfg: ModelConfig, dcfg: DiLoCoConfig,
+                 batch: int = 8, seq: int = 32):
+        self.cfg, self.dcfg = cfg, dcfg
+        params = init_params(cfg, jax.random.PRNGKey(dcfg.seed),
+                             dtype=jnp.float32)
+        theta0, self._unravel = ravel_pytree(params)
+        self.theta = np.asarray(theta0, np.float64)
+        self.data = [SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                            batch=batch, seq=seq,
+                                            seed=100 + k))
+                     for k in range(dcfg.n_pods)]
+        self._eval_data = SyntheticLM(DataConfig(
+            vocab_size=cfg.vocab_size, batch=batch, seq=seq, seed=999))
+
+        @jax.jit
+        def loss_of(theta, tokens):
+            loss, _ = lm_loss(cfg, self._unravel(theta), {"tokens": tokens})
+            return loss
+
+        self._loss = loss_of
+        self._grad = jax.jit(jax.grad(loss_of))
+        self._cursor = [0] * dcfg.n_pods
+
+    # ------------------------------------------------------------------ #
+    def eval_loss(self, theta: np.ndarray) -> float:
+        return float(self._loss(jnp.asarray(theta, f32),
+                                jnp.asarray(self._eval_data.batch(0)["tokens"])))
+
+    def _local_phase(self, theta: np.ndarray, pod: int) -> np.ndarray:
+        """inner_steps of SGD on the pod's data shard; returns the delta."""
+        cur = jnp.asarray(theta, f32)
+        lr = self.dcfg.inner_lr
+        for _ in range(self.dcfg.inner_steps):
+            toks = jnp.asarray(self.data[pod].batch(self._cursor[pod])["tokens"])
+            self._cursor[pod] += 1
+            cur = cur - lr * self._grad(cur, toks)
+        return np.asarray(cur, np.float64) - theta
+
+    def _outer_map(self, theta: np.ndarray, deltas: List[np.ndarray]
+                   ) -> np.ndarray:
+        d = np.mean(deltas, axis=0)
+        if self.dcfg.compressor is not None:
+            d = self.dcfg.compressor.roundtrip(d, slot="outer")
+        return theta + self.dcfg.outer_lr * d
+
+    def _residual_norm(self, theta: np.ndarray) -> float:
+        g = self._grad(jnp.asarray(theta, f32),
+                       jnp.asarray(self._eval_data.batch(1)["tokens"]))
+        return float(jnp.linalg.norm(g))
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> DiLoCoResult:
+        dcfg = self.dcfg
+        res = DiLoCoResult()
+        accel = AndersonState(dcfg.accel) if dcfg.accel else None
+        rng = np.random.default_rng(dcfg.seed)
+        t = 0.0
+
+        if dcfg.mode == "sync":
+            for outer in range(dcfg.outer_steps):
+                deltas = [self._local_phase(self.theta, k)
+                          for k in range(dcfg.n_pods)]
+                phase_t = max(
+                    dcfg.compute_time
+                    + (dcfg.faults or {}).get(k, FaultProfile()).sample_delay(rng)
+                    for k in range(dcfg.n_pods))
+                t += phase_t
+                g = self._outer_map(self.theta, deltas)
+                self.theta = self._accel_step(accel, self.theta, g, res)
+                res.losses.append(self.eval_loss(self.theta))
+                res.wall_times.append(t)
+                res.outer_updates += 1
+        else:  # async: deltas applied in arrival order
+            import heapq
+
+            heap: List[Tuple[float, int, int, np.ndarray]] = []
+            seq = 0
+            for k in range(dcfg.n_pods):
+                d = self._local_phase(self.theta, k)
+                dt = dcfg.compute_time + (dcfg.faults or {}).get(
+                    k, FaultProfile()).sample_delay(rng)
+                heapq.heappush(heap, (dt, seq, k, d))
+                seq += 1
+            applied = 0
+            while applied < dcfg.outer_steps * dcfg.n_pods:
+                t, _, k, d = heapq.heappop(heap)
+                g = self._outer_map(self.theta, [d])
+                self.theta = self._accel_step(accel, self.theta, g, res)
+                applied += 1
+                if applied % dcfg.n_pods == 0:
+                    res.losses.append(self.eval_loss(self.theta))
+                    res.wall_times.append(t)
+                    res.outer_updates += 1
+                d2 = self._local_phase(self.theta, k)
+                dt = dcfg.compute_time + (dcfg.faults or {}).get(
+                    k, FaultProfile()).sample_delay(rng)
+                heapq.heappush(heap, (t + dt, seq, k, d2))
+                seq += 1
+        res.final_theta = self.theta
+        return res
+
+    def _accel_step(self, accel: Optional[AndersonState], theta, g, res
+                    ) -> np.ndarray:
+        if accel is None:
+            return g
+        accel.push(theta, g)
+        cand = accel.propose()
+        if cand is None:
+            res.accel_rejects += 1
+            return g
+        if accel.config.safeguard:
+            if self._residual_norm(cand) < self._residual_norm(theta):
+                res.accel_accepts += 1
+                accel.record_accept()
+                return cand
+            res.accel_rejects += 1
+            accel.record_reject()
+            return g
+        res.accel_accepts += 1
+        return cand

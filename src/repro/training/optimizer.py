@@ -1,0 +1,100 @@
+"""Optimizers: AdamW with configurable state dtype (+ SGD momentum).
+
+Pure-functional, pytree-first.  Adam moments can be stored in bf16 for the
+398B arch (16 GB HBM budget at 256 chips — DESIGN.md §8); the update math
+always runs in float32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any  # pytree like params
+    v: Any
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = getattr(jnp, cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(f32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(f32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(f32)
+    bc2 = 1 - b2 ** step.astype(f32)
+    sdt = getattr(jnp, cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(f32)
+        m32 = b1 * m.astype(f32) + (1 - b1) * g
+        v32 = b2 * v.astype(f32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(f32)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/bias
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                m32.astype(sdt), v32.astype(sdt))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

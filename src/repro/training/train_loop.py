@@ -1,0 +1,87 @@
+"""Synchronous training driver with fault-tolerance hooks.
+
+The production-shaped loop used by examples/train_lm.py: jitted train step
+(launch/steps.make_train_step), checkpoint/restart via CheckpointManager
+(resume is exact: data cursor == step), periodic eval, and a crash hook for
+the elastic-restart example.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import make_train_step
+from repro.models.transformer import init_params
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    accum: int = 1
+    lr: float = 3e-3
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 25
+    log_every: int = 10
+    seed: int = 0
+    crash_at_step: Optional[int] = None  # fault-injection for restart tests
+
+
+class SimulatedCrash(RuntimeError):
+    pass
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          log: Optional[Callable[[str], None]] = print) -> Dict:
+    opt_cfg = AdamWConfig(lr=tcfg.lr, warmup_steps=10,
+                          total_steps=tcfg.steps,
+                          state_dtype=cfg.opt_state_dtype)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, tcfg.accum))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  batch=tcfg.batch, seq=tcfg.seq,
+                                  seed=tcfg.seed + 7))
+
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed),
+                         dtype=jnp.float32)
+    opt_state = adamw_init(params, opt_cfg)
+    start = 0
+    mgr = None
+    if tcfg.checkpoint_dir:
+        mgr = CheckpointManager(tcfg.checkpoint_dir, keep=3, async_save=False)
+        try:
+            (params, opt_state), start, extra = mgr.restore_latest(
+                (params, opt_state))
+            if log:
+                log(f"[train] resumed from step {start}")
+        except FileNotFoundError:
+            pass
+
+    losses: List[float] = []
+    t0 = time.time()
+    for step in range(start, tcfg.steps):
+        if tcfg.crash_at_step is not None and step == tcfg.crash_at_step:
+            raise SimulatedCrash(f"injected fault at step {step}")
+        batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if mgr and (step + 1) % tcfg.checkpoint_every == 0:
+            mgr.save(step + 1, (params, opt_state))
+        if log and (step + 1) % tcfg.log_every == 0:
+            log(f"[train] step {step+1} loss {losses[-1]:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"({(time.time()-t0)/(step-start+1):.2f}s/step)")
+    if mgr:
+        mgr.save(tcfg.steps, (params, opt_state))
+        mgr.wait()
+    return {"params": params, "opt_state": opt_state, "losses": losses}

@@ -1,0 +1,142 @@
+"""Distributed semantics that need >1 device: run in 8-host-device
+subprocesses (XLA_FLAGS must be set before JAX initializes, so these cannot
+run in the main pytest process)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str) -> str:
+    script = "import os\nos.environ['XLA_FLAGS']=" \
+        "'--xla_force_host_platform_device_count=8'\n" + textwrap.dedent(code)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+class TestA2AMoE:
+    def test_matches_reference_all_mesh_shapes(self):
+        out = _run("""
+            import dataclasses
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs import get_config
+            from repro.models import moe as moe_mod
+            from repro.models.moe_shard_map import moe_ffn_a2a
+            from repro.models.common import materialize
+
+            for arch, E, k, shared in [("olmoe_1b_7b", 8, 2, 0),
+                                       ("qwen2_moe_a2p7b", 8, 2, 2)]:
+                cfg = get_config(arch).reduced()
+                cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                    cfg.moe, n_experts=E, top_k=k, capacity_factor=8.0,
+                    pad_to=1, n_shared=shared))
+                params = materialize(moe_mod.moe_spec(cfg),
+                                     jax.random.PRNGKey(0), dtype=jnp.float32)
+                x = jax.random.normal(jax.random.PRNGKey(1),
+                                      (4, 16, cfg.d_model)) * 0.5
+                ref, _ = moe_mod.moe_ffn(cfg, params, x, dropless=True)
+                for shape in [(2, 4), (1, 8), (4, 2)]:
+                    mesh = jax.make_mesh(shape, ("data", "model"))
+                    with mesh:
+                        out, _ = moe_ffn_a2a(cfg, params, x, mesh)
+                    err = float(jnp.max(jnp.abs(out - ref)))
+                    assert err < 1e-4, (arch, shape, err)
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_differentiable(self):
+        out = _run("""
+            import dataclasses
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs import get_config
+            from repro.models import moe as moe_mod
+            from repro.models.moe_shard_map import moe_ffn_a2a
+            from repro.models.common import materialize
+
+            cfg = get_config("olmoe_1b_7b").reduced()
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, n_experts=8, top_k=2, capacity_factor=8.0, pad_to=1))
+            params = materialize(moe_mod.moe_spec(cfg), jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+            x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+            def loss(p):
+                with mesh:
+                    out, _ = moe_ffn_a2a(cfg, p, x, mesh)
+                return jnp.sum(out ** 2)
+
+            g = jax.grad(loss)(params)
+            flats = jax.tree.leaves(g)
+            assert all(np.all(np.isfinite(np.asarray(t))) for t in flats)
+            assert sum(float(jnp.sum(jnp.abs(t))) for t in flats) > 0
+            print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestShardingRules:
+    def test_resolve_axes_divisibility_and_reuse(self):
+        # pure-python logic, no devices needed
+        import jax
+
+        from repro.distributed.sharding import BASE_RULES, resolve_axes
+
+        mesh = jax.make_mesh((1,), ("data",))
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        m = FakeMesh()
+        # kv_heads=8 does not divide model=16 -> replicated
+        spec = resolve_axes(("embed", "kv_heads", None), (4096, 8, 128),
+                            BASE_RULES, m)
+        assert spec[1] is None
+        # heads=64 divides -> sharded
+        spec = resolve_axes(("embed", "heads", None), (4096, 64, 128),
+                            BASE_RULES, m)
+        assert spec[1] == "model"
+        # same mesh axis never used twice in one tensor
+        spec = resolve_axes(("vocab", "ffn"), (256000, 16384), BASE_RULES, m)
+        assert spec == jax.sharding.PartitionSpec("model", None)
+
+    def test_small_mesh_train_step_runs(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs import get_config
+            from repro.distributed.sharding import BASE_RULES
+            from repro.launch.inputs import ShapeSpec
+            from repro.launch import steps as steps_mod
+            from repro.models.transformer import init_params
+            from repro.training.optimizer import AdamWConfig, adamw_init
+
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            cfg = get_config("gemma_2b").reduced(
+                n_layers=2, d_model=64, d_ff=128, vocab_size=256,
+                n_heads=4, n_kv_heads=4, head_dim=16)
+            shape = ShapeSpec("tiny", seq=32, batch=8, kind="train")
+            fn, in_sh, out_sh, args, meta = steps_mod.build_train(
+                cfg, shape, mesh, dict(BASE_RULES))
+            params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+            opt = adamw_init(params, AdamWConfig())
+            batch = {"tokens": jnp.asarray(
+                np.random.default_rng(0).integers(0, 256, (8, 32)))}
+            with mesh:
+                step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                p2, o2, m = step(params, opt, batch)
+            assert np.isfinite(float(m["loss"]))
+            # loss decreases over a few steps (real distributed training)
+            for _ in range(5):
+                with mesh:
+                    p2, o2, m2 = step(p2, o2, batch)
+            assert float(m2["loss"]) < float(m["loss"])
+            print("OK", float(m["loss"]), float(m2["loss"]))
+        """)
+        assert "OK" in out

@@ -1,0 +1,203 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------- #
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,S,nq,nkv,hd,causal,window,softcap",
+        [
+            (1, 128, 4, 4, 64, True, None, None),   # MHA causal
+            (2, 256, 8, 2, 64, True, None, None),   # GQA 4:1
+            (2, 128, 4, 1, 128, True, None, None),  # MQA
+            (1, 256, 4, 2, 64, True, 64, None),     # sliding window
+            (1, 128, 2, 2, 64, True, None, 30.0),   # softcap (gemma2)
+            (2, 128, 4, 4, 64, False, None, None),  # bidirectional
+            (1, 256, 8, 2, 64, True, 32, 50.0),     # window + cap + GQA
+        ],
+    )
+    def test_matches_reference(self, dtype, B, S, nq, nkv, hd, causal,
+                               window, softcap):
+        q = jnp.asarray(RNG.standard_normal((B, S, nq, hd)), dtype)
+        k = jnp.asarray(RNG.standard_normal((B, S, nkv, hd)), dtype)
+        v = jnp.asarray(RNG.standard_normal((B, S, nkv, hd)), dtype)
+        out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, block_q=64, block_kv=64)
+        want = ref.ref_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    @given(
+        bq=st.sampled_from([32, 64, 128]),
+        bkv=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 10**6),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_block_shape_invariance(self, bq, bkv, seed):
+        """Output must not depend on the BlockSpec tiling."""
+        r = np.random.default_rng(seed)
+        q = jnp.asarray(r.standard_normal((1, 128, 2, 64)), jnp.float32)
+        k = jnp.asarray(r.standard_normal((1, 128, 2, 64)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((1, 128, 2, 64)), jnp.float32)
+        a = ops.flash_attention(q, k, v, block_q=bq, block_kv=bkv)
+        b = ops.flash_attention(q, k, v, block_q=128, block_kv=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_q_offset(self):
+        """Decode-style: 1 query at position pos against a longer KV."""
+        r = np.random.default_rng(7)
+        q = jnp.asarray(r.standard_normal((2, 64, 4, 64)), jnp.float32)
+        k = jnp.asarray(r.standard_normal((2, 256, 4, 64)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((2, 256, 4, 64)), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True, q_offset=192,
+                                  block_q=64, block_kv=64)
+        want = ref.ref_attention(q, k, v, causal=True, q_offset=192)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_rejects_bad_shapes(self):
+        q = jnp.zeros((1, 64, 3, 64))
+        k = jnp.zeros((1, 64, 2, 64))
+        with pytest.raises(ValueError):
+            ops.flash_attention(q, k, k)
+
+
+# --------------------------------------------------------------------- #
+# jacobi stencil
+# --------------------------------------------------------------------- #
+class TestJacobiStencil:
+    @pytest.mark.parametrize("g", [8, 16, 32, 100])
+    @pytest.mark.parametrize("block_rows", [2, 4, 8, 16])
+    def test_matches_reference(self, g, block_rows):
+        x = jnp.asarray(RNG.standard_normal(g * g), jnp.float32)
+        b = jnp.asarray(RNG.standard_normal(g * g), jnp.float32)
+        out = ops.jacobi_sweep(x, b, g, block_rows=block_rows)
+        want = ref.ref_jacobi_sweep(x, b, g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_float64(self):
+        jax.config.update("jax_enable_x64", True)
+        g = 16
+        x = jnp.asarray(RNG.standard_normal(g * g), jnp.float64)
+        b = jnp.asarray(RNG.standard_normal(g * g), jnp.float64)
+        out = ops.jacobi_sweep(x, b, g)
+        want = ref.ref_jacobi_sweep(x, b, g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-14, atol=1e-14)
+
+    def test_fixed_point_of_solution(self):
+        """At A x = b the sweep is a no-op (kernel respects the boundary)."""
+        from repro.problems import JacobiProblem
+
+        p = JacobiProblem(grid=16)
+        xs = p.exact_solution()
+        out = ops.jacobi_sweep(jnp.asarray(xs), jnp.asarray(p._b), 16)
+        np.testing.assert_allclose(np.asarray(out), xs, atol=1e-10)
+
+
+# --------------------------------------------------------------------- #
+# bellman
+# --------------------------------------------------------------------- #
+class TestBellmanKernel:
+    @given(
+        S=st.sampled_from([32, 96, 200]),
+        A=st.sampled_from([2, 4, 10]),
+        b=st.sampled_from([3, 5]),
+        gamma=st.sampled_from([0.9, 0.95, 0.99]),
+        seed=st.integers(0, 10**6),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_reference(self, S, A, b, gamma, seed):
+        r = np.random.default_rng(seed)
+        idx = jnp.asarray(r.integers(0, S, (S, A, b)), jnp.int32)
+        probs = jnp.asarray(r.dirichlet(np.ones(b), (S, A)), jnp.float32)
+        R = jnp.asarray(r.uniform(size=(S, A)), jnp.float32)
+        V = jnp.asarray(r.standard_normal(S), jnp.float32)
+        out = ops.bellman(idx, probs, R, V, gamma=gamma, block_s=32)
+        want = ref.ref_bellman(idx, probs, R, V, gamma=gamma)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_contraction_through_kernel(self):
+        r = np.random.default_rng(3)
+        S, A, b = 64, 3, 4
+        idx = jnp.asarray(r.integers(0, S, (S, A, b)), jnp.int32)
+        probs = jnp.asarray(r.dirichlet(np.ones(b), (S, A)), jnp.float32)
+        R = jnp.asarray(r.uniform(size=(S, A)), jnp.float32)
+        u = jnp.asarray(r.standard_normal(S), jnp.float32)
+        w = jnp.asarray(r.standard_normal(S), jnp.float32)
+        tu = ops.bellman(idx, probs, R, u, gamma=0.9)
+        tw = ops.bellman(idx, probs, R, w, gamma=0.9)
+        assert float(jnp.max(jnp.abs(tu - tw))) <= \
+            0.9 * float(jnp.max(jnp.abs(u - w))) + 1e-5
+
+
+# --------------------------------------------------------------------- #
+# anderson mix
+# --------------------------------------------------------------------- #
+class TestAndersonMixKernel:
+    @given(
+        h=st.integers(2, 8),
+        N=st.sampled_from([512, 4096, 10000]),
+        beta=st.sampled_from([0.0, 0.5, 1.0]),
+        seed=st.integers(0, 10**6),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_reference(self, h, N, beta, seed):
+        r = np.random.default_rng(seed)
+        X = jnp.asarray(r.standard_normal((h, N)), jnp.float32)
+        G = jnp.asarray(r.standard_normal((h, N)), jnp.float32)
+        a = r.standard_normal(h)
+        a = jnp.asarray(a / a.sum(), jnp.float32)
+        out = ops.anderson_mix(X, G, a, beta=beta, block_n=1024)
+        want = ref.ref_anderson_mix(X, G, a, beta=beta)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_simplex_identity(self):
+        """alpha = e_j, beta = 0 reproduces X_j exactly."""
+        X = jnp.asarray(RNG.standard_normal((4, 256)), jnp.float32)
+        G = jnp.asarray(RNG.standard_normal((4, 256)), jnp.float32)
+        a = jnp.zeros(4).at[2].set(1.0)
+        out = ops.anderson_mix(X, G, a, beta=0.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(X[2]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_matches_coordinator_solver(self):
+        """Kernel x_acc == AndersonState.propose() on the same window."""
+        from repro.core.anderson import AndersonConfig, AndersonState
+
+        r = np.random.default_rng(5)
+        h, N = 5, 400
+        xs = r.standard_normal((h, N))
+        gs = xs + 0.1 * r.standard_normal((h, N))
+        stt = AndersonState(AndersonConfig(m=h - 1, beta=1.0, reg=1e-12))
+        for x, g in zip(xs, gs):
+            stt.push(x, g)
+        want = stt.propose()
+        alpha = stt.last_alpha
+        out = ops.anderson_mix(jnp.asarray(xs), jnp.asarray(gs),
+                               jnp.asarray(alpha), beta=1.0)
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-8,
+                                   atol=1e-8)
