@@ -1,0 +1,22 @@
+# CI entry points.
+#
+# `make test`  — the tier-1 verify command from ROADMAP.md (collects all 9
+#                test modules with or without hypothesis installed; see
+#                tests/conftest.py).
+# `make smoke` — ~30 s real-concurrency benchmark: sync-vs-async under a
+#                100 ms straggler on the thread backend (asserts the paper's
+#                >1.5x async speedup ordering on measured wall-clock).
+# `make bench` — the full virtual-time benchmark suite (slow).
+
+PYTHON ?= python
+
+.PHONY: test smoke bench
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
+
+bench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.run

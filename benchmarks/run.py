@@ -22,19 +22,33 @@ MODULES = [
     "scf_async",          # Figs 8-9
     "async_dp_lm",        # beyond-paper (EXPERIMENTS §Beyond-paper)
     "kernels_bench",      # kernel micro-bench + agreement
+    "real_async",         # Table 2 ordering on real threads (measured)
 ]
+
+# ``--smoke`` subset: finishes in ~30 s and exercises the real-concurrency
+# thread backend end to end (CI gate alongside the tier-1 pytest command).
+SMOKE_MODULES = ["real_async"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the ~30s real-backend smoke subset (implies --fast)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
-    mods = [m for m in MODULES if args.only in (None, m)]
-    if not mods:
-        raise SystemExit(f"unknown --only {args.only}; choices: {MODULES}")
+    if args.smoke:
+        args.fast = True
+    # --only can name any module (also under --smoke, which then just
+    # implies --fast); --smoke alone runs the quick real-backend subset.
+    if args.only is not None:
+        mods = [m for m in MODULES if m == args.only]
+        if not mods:
+            raise SystemExit(f"unknown --only {args.only}; choices: {MODULES}")
+    else:
+        mods = SMOKE_MODULES if args.smoke else MODULES
     os.makedirs(args.out, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0

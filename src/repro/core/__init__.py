@@ -2,13 +2,25 @@
 
 - :mod:`repro.core.fixedpoint`   — partitioned fixed-point problem interface
 - :mod:`repro.core.anderson`     — Anderson/DIIS with Eq. 5 safeguard
-- :mod:`repro.core.async_engine` — virtual-time coordinator/worker engine
-  with per-worker fault injection (delay / noise / drop / staleness cap)
+- :mod:`repro.core.engine`       — pluggable-executor coordinator/worker
+  engine (virtual-time simulator + real-concurrency thread backend) with
+  per-worker fault injection (delay / noise / drop / staleness / crash)
 - :mod:`repro.core.coupling`     — coupling-density analysis (paper §3.5)
 """
 
 from .anderson import AndersonConfig, AndersonState, diis_solve
-from .async_engine import FaultProfile, RunConfig, RunResult, run_fixed_point
+from .engine import (
+    Executor,
+    FaultProfile,
+    RunConfig,
+    RunResult,
+    ThreadPoolExecutor,
+    VirtualTimeExecutor,
+    available_executors,
+    get_executor,
+    register_executor,
+    run_fixed_point,
+)
 from .coupling import (
     block_internal_coupling,
     coupling_density,
@@ -24,6 +36,12 @@ __all__ = [
     "RunConfig",
     "RunResult",
     "run_fixed_point",
+    "Executor",
+    "VirtualTimeExecutor",
+    "ThreadPoolExecutor",
+    "register_executor",
+    "get_executor",
+    "available_executors",
     "FixedPointProblem",
     "contiguous_blocks",
     "coupling_density",

@@ -1,368 +1,40 @@
-"""Virtual-time coordinator/worker engine for (a)synchronous fixed-point runs.
+"""Back-compat shim: the engine moved to :mod:`repro.core.engine`.
 
-This is the TPU/CPU-portable analogue of the paper's Ray framework (§4): a
-deterministic discrete-event simulator in which ``p`` workers evaluate block
-updates of a :class:`~repro.core.fixedpoint.FixedPointProblem` and a
-coordinator applies them in arrival order, optionally firing Anderson/DIIS
-extrapolation with the Eq. 5 safeguard.
-
-Faults are injected per-worker through :class:`FaultProfile` exactly as in
-the paper: delay (mean/std), additive Gaussian noise on returned components,
-drop probability, and maximum staleness.  Wall-clock time is *virtual*: each
-worker update costs its measured (or configured) compute time plus its
-sampled delay, and the event queue advances a virtual clock.  Synchronous
-mode is the same engine with a barrier (wall time of a round = max over
-workers), so sync/async speedups are directly comparable — the paper's
-headline metric.
-
-Work is measured in *worker-updates* (WU): the number of partial updates
-applied, identical to the paper's metric.
+The monolithic virtual-time engine was refactored into a pluggable-executor
+package (``repro.core.engine``) with a deterministic ``VirtualTimeExecutor``
+(this module's old behaviour, fixed-seed bit-identical) and a
+real-concurrency ``ThreadPoolExecutor``.  Import from ``repro.core`` or
+``repro.core.engine`` in new code; this module only re-exports.
 """
 
 from __future__ import annotations
 
-import heapq
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from .engine import (
+    Executor,
+    FaultProfile,
+    RunConfig,
+    RunResult,
+    ThreadPoolExecutor,
+    VirtualTimeExecutor,
+    available_executors,
+    get_executor,
+    register_executor,
+    run_fixed_point,
+)
+from .engine.coordinator import Coordinator as _Coordinator  # noqa: F401
+from .engine.coordinator import measure_compute as _measure_compute  # noqa: F401
+from .engine.coordinator import worker_eval as _worker_eval  # noqa: F401
+from .engine.types import _fault_for, _writable  # noqa: F401
 
-import numpy as np
-
-from .anderson import AndersonConfig, AndersonState
-from .fixedpoint import FixedPointProblem
-
-__all__ = ["FaultProfile", "RunConfig", "RunResult", "run_fixed_point"]
-
-
-@dataclass
-class FaultProfile:
-    """Per-worker fault injection (paper §4)."""
-
-    delay_mean: float = 0.0  # virtual seconds added per update
-    delay_std: float = 0.0
-    noise_std: float = 0.0  # additive N(0, std) on returned components
-    drop_prob: float = 0.0  # probability a returned update is lost
-    max_staleness: Optional[int] = None  # in worker-updates; older => dropped
-
-    def sample_delay(self, rng: np.random.Generator) -> float:
-        if self.delay_mean == 0.0 and self.delay_std == 0.0:
-            return 0.0
-        return max(0.0, rng.normal(self.delay_mean, self.delay_std))
-
-
-@dataclass
-class RunConfig:
-    """One (a)synchronous run of a fixed-point problem."""
-
-    n_workers: int = 4
-    mode: str = "async"  # "sync" | "async"
-    # --- acceleration -------------------------------------------------- #
-    accel: Optional[AndersonConfig] = None
-    accel_mode: str = "coordinator"  # "monitor" | "coordinator" | "periodic"
-    fire_every: int = 1  # E: fire each E worker returns (async) / rounds (sync)
-    # --- damping -------------------------------------------------------- #
-    block_damping: Optional[float] = None  # damped application of block updates
-    # --- selection (paper §5.2 / Fig. 6) --------------------------------- #
-    selection: str = "fixed"  # "fixed" | "uniform" | "greedy"
-    selection_k: Optional[int] = None  # block size for uniform/greedy
-    # --- worker return mode (paper §6 future work) ----------------------- #
-    return_mode: str = "block"  # "block" | "full_map"
-    # --- termination ------------------------------------------------------ #
-    tol: float = 1e-6
-    max_updates: int = 200_000
-    max_wall: Optional[float] = None  # virtual seconds
-    record_every: Optional[int] = None  # residual check cadence (default p)
-    # --- determinism / timing --------------------------------------------- #
-    seed: int = 0
-    compute_time: Optional[float] = None  # virtual s/update; None => measure
-    sync_overhead: float = 0.0  # per-round barrier cost (BSP coordination)
-    async_overhead: float = 0.0  # per-dispatch cost in async mode
-    faults: Union[None, FaultProfile, Dict[int, FaultProfile]] = None
-    converge_on: str = "residual"  # "residual" | "error"
-
-
-@dataclass
-class RunResult:
-    x: np.ndarray
-    converged: bool
-    worker_updates: int
-    wall_time: float
-    residual_norm: float
-    history: List[Tuple[float, int, float]]  # (virtual t, WU, residual norm)
-    rounds: int = 0
-    drops: int = 0
-    stale_drops: int = 0
-    accel_fires: int = 0
-    accel_accepts: int = 0
-    accel_rejects: int = 0
-    coordinator_evals: int = 0  # full-map evaluations done by the coordinator
-    mean_staleness: float = 0.0
-    error_norm: Optional[float] = None
-
-    def summary(self) -> str:
-        return (
-            f"converged={self.converged} WU={self.worker_updates} "
-            f"wall={self.wall_time:.3f}s res={self.residual_norm:.3e} "
-            f"fires={self.accel_fires} acc={self.accel_accepts} "
-            f"rej={self.accel_rejects} stale_drops={self.stale_drops}"
-        )
-
-
-def _writable(a: np.ndarray) -> np.ndarray:
-    """Return a float64 array that is safe to mutate in place.
-
-    Problem maps are jitted JAX functions; ``np.asarray`` of their outputs
-    yields read-only buffers, which the coordinator must not adopt directly.
-    """
-    a = np.asarray(a, dtype=np.float64)
-    return a if a.flags.writeable else a.copy()
-
-
-def _fault_for(cfg: RunConfig, worker: int) -> FaultProfile:
-    if cfg.faults is None:
-        return FaultProfile()
-    if isinstance(cfg.faults, FaultProfile):
-        return cfg.faults
-    return cfg.faults.get(worker, FaultProfile())
-
-
-def _measure_compute(problem: FixedPointProblem, blocks: Sequence[np.ndarray]) -> float:
-    """Measure per-update compute cost of a representative block (warm jit)."""
-    idx = blocks[0]
-    problem.block_update(problem.initial(), idx)  # warm-up / compile
-    x = problem.initial()
-    t0 = time.perf_counter()
-    reps = 3
-    for _ in range(reps):
-        problem.block_update(x, idx)
-    return max((time.perf_counter() - t0) / reps, 1e-7)
-
-
-class _Coordinator:
-    """Shared coordinator logic between sync and async drivers."""
-
-    def __init__(self, problem: FixedPointProblem, cfg: RunConfig):
-        self.problem = problem
-        self.cfg = cfg
-        self.x = _writable(problem.initial())
-        self.rng = np.random.default_rng(cfg.seed)
-        self.wu = 0
-        self.drops = 0
-        self.stale_drops = 0
-        self.staleness_sum = 0
-        self.staleness_n = 0
-        self.history: List[Tuple[float, int, float]] = []
-        self.accel: Optional[AndersonState] = (
-            AndersonState(cfg.accel) if cfg.accel is not None else None
-        )
-        self.blocks = problem.default_blocks(cfg.n_workers)
-        self.res_norm = problem.residual_norm(self.x)
-        self.record_every = cfg.record_every or cfg.n_workers
-        self.coordinator_evals = 0
-
-    # ----------------------------------------------------------------- #
-    def select_indices(self, worker: int) -> np.ndarray:
-        cfg = self.cfg
-        if cfg.selection == "fixed":
-            return self.blocks[worker]
-        k = cfg.selection_k or max(1, self.problem.n // cfg.n_workers)
-        if cfg.selection == "uniform":
-            return self.rng.choice(self.problem.n, size=k, replace=False)
-        if cfg.selection == "greedy":
-            comp = self.problem.component_residual(self.x)
-            return np.argpartition(comp, -k)[-k:]
-        raise ValueError(f"unknown selection {cfg.selection!r}")
-
-    def apply_return(
-        self, indices: np.ndarray, values: np.ndarray, profile: FaultProfile,
-        staleness: int,
-    ) -> bool:
-        """Apply one worker return; returns False if dropped."""
-        cfg = self.cfg
-        if profile.max_staleness is not None and staleness > profile.max_staleness:
-            self.stale_drops += 1
-            return False
-        if profile.drop_prob > 0.0 and self.rng.random() < profile.drop_prob:
-            self.drops += 1
-            return False
-        if profile.noise_std > 0.0:
-            values = values + self.rng.normal(0.0, profile.noise_std, values.shape)
-        if cfg.return_mode == "full_map":
-            # Worker returned a full map evaluation on stale data: replace
-            # only its owned components from that evaluation (paper §6
-            # redesign keeps ownership but evaluates globally).
-            pass  # values already restricted by the worker wrapper
-        if cfg.block_damping is not None:
-            a = cfg.block_damping
-            self.x[indices] = (1.0 - a) * self.x[indices] + a * values
-        else:
-            self.x[indices] = values
-        self.x = _writable(self.problem.project(self.x))
-        self.wu += 1
-        self.staleness_sum += staleness
-        self.staleness_n += 1
-        return True
-
-    # ----------------------------------------------------------------- #
-    def maybe_fire_accel(self) -> None:
-        """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3)."""
-        cfg, problem = self.cfg, self.problem
-        if self.accel is None or cfg.accel_mode == "monitor":
-            return
-        g = problem.full_map(self.x)
-        self.coordinator_evals += 1
-        f = problem.accel_residual(self.x, g)
-        self.accel.push(self.x, g, f)
-        cand = self.accel.propose()
-        cur_res = problem.residual_norm(self.x)
-        if cand is None:
-            self.accel.record_reject()
-            self.x = _writable(problem.project(g))  # Eq. 5 fallback: G(x)
-            return
-        cand = _writable(problem.project(cand))
-        if cfg.accel.safeguard:
-            cand_res = problem.residual_norm(cand)
-            if np.isfinite(cand_res) and cand_res < cur_res:
-                self.accel.record_accept()
-                self.x = cand
-            else:
-                self.accel.record_reject()
-                self.x = _writable(problem.project(g))
-        else:
-            self.accel.record_accept()
-            self.x = cand
-
-    # ----------------------------------------------------------------- #
-    def record(self, t: float) -> float:
-        self.res_norm = self.problem.residual_norm(self.x)
-        self.history.append((t, self.wu, self.res_norm))
-        return self.res_norm
-
-    def converged(self) -> bool:
-        if self.cfg.converge_on == "error":
-            err = self.problem.error_norm(self.x)
-            return err is not None and err < self.cfg.tol
-        return self.res_norm < self.cfg.tol
-
-    def result(self, t: float, rounds: int, converged: bool) -> RunResult:
-        mean_stale = self.staleness_sum / max(self.staleness_n, 1)
-        acc = self.accel
-        return RunResult(
-            x=self.x,
-            converged=converged,
-            worker_updates=self.wu,
-            wall_time=t,
-            residual_norm=self.problem.residual_norm(self.x),
-            history=self.history,
-            rounds=rounds,
-            drops=self.drops,
-            stale_drops=self.stale_drops,
-            accel_fires=acc.n_fire if acc else 0,
-            accel_accepts=acc.n_accept if acc else 0,
-            accel_rejects=acc.n_reject if acc else 0,
-            coordinator_evals=self.coordinator_evals,
-            mean_staleness=mean_stale,
-            error_norm=self.problem.error_norm(self.x),
-        )
-
-
-def _worker_eval(
-    problem: FixedPointProblem, cfg: RunConfig, x_snapshot: np.ndarray,
-    indices: np.ndarray,
-) -> np.ndarray:
-    """The worker computation (on its stale snapshot)."""
-    if cfg.return_mode == "full_map":
-        g = problem.full_map(x_snapshot)
-        return np.asarray(g)[indices]
-    return np.asarray(problem.block_update(x_snapshot, indices))
-
-
-# --------------------------------------------------------------------- #
-# Drivers
-# --------------------------------------------------------------------- #
-def _run_sync(problem: FixedPointProblem, cfg: RunConfig, compute: float) -> RunResult:
-    coord = _Coordinator(problem, cfg)
-    t = 0.0
-    rounds = 0
-    coord.record(t)
-    while coord.wu < cfg.max_updates:
-        rounds += 1
-        round_time = 0.0
-        updates = []
-        for w in range(cfg.n_workers):
-            prof = _fault_for(cfg, w)
-            idx = coord.select_indices(w)
-            vals = _worker_eval(problem, cfg, coord.x, idx)
-            round_time = max(round_time, compute + prof.sample_delay(coord.rng))
-            updates.append((idx, vals, prof))
-        t += round_time + cfg.sync_overhead
-        for idx, vals, prof in updates:  # barrier: all computed on same x
-            coord.apply_return(idx, vals, prof, staleness=0)
-        if coord.accel is not None and rounds % cfg.fire_every == 0:
-            coord.maybe_fire_accel()
-        res = coord.record(t)
-        if not np.isfinite(res) or res > 1e60:
-            return coord.result(t, rounds, False)
-        if coord.converged():
-            return coord.result(t, rounds, True)
-        if cfg.max_wall is not None and t > cfg.max_wall:
-            break
-    return coord.result(t, rounds, coord.converged())
-
-
-def _run_async(problem: FixedPointProblem, cfg: RunConfig, compute: float) -> RunResult:
-    coord = _Coordinator(problem, cfg)
-    t = 0.0
-    coord.record(t)
-    heap: List[Tuple[float, int, int, int, np.ndarray, np.ndarray]] = []
-    seq = 0
-
-    def launch(worker: int, now: float) -> None:
-        nonlocal seq
-        prof = _fault_for(cfg, worker)
-        idx = coord.select_indices(worker)
-        vals = _worker_eval(problem, cfg, coord.x, idx)
-        done = now + compute + cfg.async_overhead + prof.sample_delay(coord.rng)
-        heapq.heappush(heap, (done, seq, worker, coord.wu, idx, vals))
-        seq += 1
-
-    for w in range(cfg.n_workers):
-        launch(w, 0.0)
-
-    since_record = 0
-    since_fire = 0
-    while heap and coord.wu < cfg.max_updates:
-        t, _, worker, launch_wu, idx, vals = heapq.heappop(heap)
-        prof = _fault_for(cfg, worker)
-        applied = coord.apply_return(idx, vals, prof, staleness=coord.wu - launch_wu)
-        if applied:
-            since_record += 1
-            since_fire += 1
-            if coord.accel is not None and since_fire >= cfg.fire_every:
-                coord.maybe_fire_accel()
-                since_fire = 0
-            if since_record >= coord.record_every:
-                res = coord.record(t)
-                since_record = 0
-                if not np.isfinite(res) or res > 1e60:
-                    return coord.result(t, 0, False)
-                if coord.converged():
-                    return coord.result(t, 0, True)
-        if cfg.max_wall is not None and t > cfg.max_wall:
-            break
-        launch(worker, t)
-    coord.record(t)
-    return coord.result(t, 0, coord.converged())
-
-
-def run_fixed_point(problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
-    """Run one (a)synchronous fixed-point solve under the given config."""
-    blocks = problem.default_blocks(cfg.n_workers)
-    compute = cfg.compute_time if cfg.compute_time is not None else _measure_compute(
-        problem, blocks
-    )
-    if cfg.mode == "sync":
-        return _run_sync(problem, cfg, compute)
-    if cfg.mode == "async":
-        return _run_async(problem, cfg, compute)
-    raise ValueError(f"unknown mode {cfg.mode!r}")
+__all__ = [
+    "FaultProfile",
+    "RunConfig",
+    "RunResult",
+    "run_fixed_point",
+    "Executor",
+    "VirtualTimeExecutor",
+    "ThreadPoolExecutor",
+    "register_executor",
+    "get_executor",
+    "available_executors",
+]

@@ -1,0 +1,43 @@
+"""Pluggable (a)synchronous fixed-point execution engine.
+
+The engine is split into backend-agnostic pieces and pluggable executors:
+
+- :mod:`repro.core.engine.types`       — FaultProfile / RunConfig / RunResult
+- :mod:`repro.core.engine.coordinator` — shared apply/accel/record logic
+- :mod:`repro.core.engine.base`        — Executor ABC + registry
+- :mod:`repro.core.engine.virtual_time`— deterministic discrete-event backend
+- :mod:`repro.core.engine.threadpool`  — real-concurrency thread backend
+
+:func:`run_fixed_point` keeps the pre-refactor one-call API; the backend is
+selected with ``RunConfig.executor`` (``"virtual"`` | ``"thread"``).
+"""
+
+from __future__ import annotations
+
+from ..fixedpoint import FixedPointProblem
+from .base import Executor, available_executors, get_executor, register_executor
+from .coordinator import Coordinator, measure_compute, worker_eval
+from .threadpool import ThreadPoolExecutor
+from .types import FaultProfile, RunConfig, RunResult
+from .virtual_time import VirtualTimeExecutor
+
+__all__ = [
+    "FaultProfile",
+    "RunConfig",
+    "RunResult",
+    "run_fixed_point",
+    "Executor",
+    "VirtualTimeExecutor",
+    "ThreadPoolExecutor",
+    "Coordinator",
+    "register_executor",
+    "get_executor",
+    "available_executors",
+    "measure_compute",
+    "worker_eval",
+]
+
+
+def run_fixed_point(problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+    """Run one (a)synchronous fixed-point solve under the given config."""
+    return get_executor(cfg.executor).run(problem, cfg)

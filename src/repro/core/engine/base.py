@@ -1,0 +1,58 @@
+"""Executor abstraction: pluggable execution backends for the engine.
+
+An :class:`Executor` turns a (problem, config) pair into a
+:class:`~repro.core.engine.types.RunResult`.  Backends registered here are
+addressed by ``RunConfig.executor``:
+
+- ``"virtual"`` — deterministic discrete-event simulator (virtual seconds);
+- ``"thread"``  — real concurrent workers in a thread pool (wall seconds).
+
+Process- and Ray-backed executors slot in through :func:`register_executor`
+without touching the coordinator or the drivers (ROADMAP open items).
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, List, Type
+
+from ..fixedpoint import FixedPointProblem
+from .types import RunConfig, RunResult
+
+__all__ = ["Executor", "register_executor", "get_executor", "available_executors"]
+
+
+class Executor(abc.ABC):
+    """An execution backend for (a)synchronous fixed-point runs."""
+
+    #: registry key; subclasses must override
+    name: str = ""
+
+    @abc.abstractmethod
+    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+        """Execute one run of ``problem`` under ``cfg`` and return the result."""
+
+
+_REGISTRY: Dict[str, Type[Executor]] = {}
+
+
+def register_executor(cls: Type[Executor]) -> Type[Executor]:
+    """Register an Executor subclass under ``cls.name`` (decorator-friendly)."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must define a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_executor(name: str) -> Executor:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+    return cls()
+
+
+def available_executors() -> List[str]:
+    return sorted(_REGISTRY)

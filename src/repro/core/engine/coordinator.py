@@ -1,0 +1,210 @@
+"""Coordinator logic shared by every execution backend.
+
+The coordinator owns the global iterate ``x``, applies worker returns in
+arrival order (with fault filtering), fires Anderson/DIIS with the Eq. 5
+safeguard, records the residual history, and assembles the
+:class:`~repro.core.engine.types.RunResult`.  Backends differ only in *how*
+worker evaluations are scheduled (virtual event queue vs real threads); the
+apply/accel/record path below is byte-for-byte the behaviour of the
+pre-refactor monolithic engine, so fixed-seed virtual-time runs stay
+bit-identical.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..anderson import AndersonState
+from ..fixedpoint import FixedPointProblem
+from .types import FaultProfile, RunConfig, RunResult, _writable
+
+__all__ = ["Coordinator", "worker_eval", "measure_compute"]
+
+
+def measure_compute(problem: FixedPointProblem, blocks: Sequence[np.ndarray]) -> float:
+    """Measure per-update compute cost of a representative block (warm jit)."""
+    idx = blocks[0]
+    problem.block_update(problem.initial(), idx)  # warm-up / compile
+    x = problem.initial()
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        problem.block_update(x, idx)
+    return max((time.perf_counter() - t0) / reps, 1e-7)
+
+
+def worker_eval(
+    problem: FixedPointProblem, cfg: RunConfig, x_snapshot: np.ndarray,
+    indices: np.ndarray,
+) -> np.ndarray:
+    """The worker computation (on its stale snapshot)."""
+    if cfg.return_mode == "full_map":
+        g = problem.full_map(x_snapshot)
+        return np.asarray(g)[indices]
+    return np.asarray(problem.block_update(x_snapshot, indices))
+
+
+class Coordinator:
+    """Shared coordinator state and apply/accel/record logic."""
+
+    def __init__(self, problem: FixedPointProblem, cfg: RunConfig):
+        self.problem = problem
+        self.cfg = cfg
+        self.x = _writable(problem.initial())
+        self.rng = np.random.default_rng(cfg.seed)
+        self.wu = 0
+        self.drops = 0
+        self.stale_drops = 0
+        self.crashes = 0
+        self.restarts = 0
+        self.staleness_sum = 0
+        self.staleness_n = 0
+        self.history: List[Tuple[float, int, float]] = []
+        self.accel: Optional[AndersonState] = (
+            AndersonState(cfg.accel) if cfg.accel is not None else None
+        )
+        self.blocks = problem.default_blocks(cfg.n_workers)
+        self.res_norm = problem.residual_norm(self.x)
+        self.record_every = cfg.record_every or cfg.n_workers
+        self.max_arrivals = (
+            cfg.max_arrivals if cfg.max_arrivals is not None
+            else 10 * cfg.max_updates
+        )
+        self.coordinator_evals = 0
+
+    # ----------------------------------------------------------------- #
+    # Index selection
+    # ----------------------------------------------------------------- #
+    def select_indices(self, worker: int) -> np.ndarray:
+        """Per-dispatch selection (async mode: workers launch one at a time)."""
+        cfg = self.cfg
+        if cfg.selection == "fixed":
+            return self.blocks[worker]
+        k = cfg.selection_k or max(1, self.problem.n // cfg.n_workers)
+        if cfg.selection == "uniform":
+            return self.rng.choice(self.problem.n, size=k, replace=False)
+        if cfg.selection == "greedy":
+            comp = self.problem.component_residual(self.x)
+            return np.argpartition(comp, -k)[-k:]
+        raise ValueError(f"unknown selection {cfg.selection!r}")
+
+    def select_round_indices(self) -> List[np.ndarray]:
+        """Per-round selection (sync mode): one disjoint block per worker.
+
+        Uniform/greedy draw a single pool of ``p*k`` distinct indices and
+        partition it, so workers in a barrier round never overlap (the
+        pre-refactor engine sampled per worker from the same ``x`` and
+        silently overwrote colliding blocks).
+        """
+        cfg = self.cfg
+        p = cfg.n_workers
+        if cfg.selection == "fixed":
+            return [self.blocks[w] for w in range(p)]
+        k = cfg.selection_k or max(1, self.problem.n // p)
+        total = min(p * k, self.problem.n)
+        if cfg.selection == "uniform":
+            pool = self.rng.choice(self.problem.n, size=total, replace=False)
+        elif cfg.selection == "greedy":
+            comp = self.problem.component_residual(self.x)
+            pool = np.argpartition(comp, -total)[-total:]
+        else:
+            raise ValueError(f"unknown selection {cfg.selection!r}")
+        return list(np.array_split(pool, p))
+
+    # ----------------------------------------------------------------- #
+    def apply_return(
+        self, indices: np.ndarray, values: np.ndarray, profile: FaultProfile,
+        staleness: int,
+    ) -> bool:
+        """Apply one worker return; returns False if dropped."""
+        cfg = self.cfg
+        if profile.max_staleness is not None and staleness > profile.max_staleness:
+            self.stale_drops += 1
+            return False
+        if profile.drop_prob > 0.0 and self.rng.random() < profile.drop_prob:
+            self.drops += 1
+            return False
+        if profile.noise_std > 0.0:
+            values = values + self.rng.normal(0.0, profile.noise_std, values.shape)
+        if cfg.return_mode == "full_map":
+            # Worker returned a full map evaluation on stale data: replace
+            # only its owned components from that evaluation (paper §6
+            # redesign keeps ownership but evaluates globally).
+            pass  # values already restricted by the worker wrapper
+        if cfg.block_damping is not None:
+            a = cfg.block_damping
+            self.x[indices] = (1.0 - a) * self.x[indices] + a * values
+        else:
+            self.x[indices] = values
+        self.x = _writable(self.problem.project(self.x))
+        self.wu += 1
+        self.staleness_sum += staleness
+        self.staleness_n += 1
+        return True
+
+    # ----------------------------------------------------------------- #
+    def maybe_fire_accel(self) -> None:
+        """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3)."""
+        cfg, problem = self.cfg, self.problem
+        if self.accel is None or cfg.accel_mode == "monitor":
+            return
+        g = problem.full_map(self.x)
+        self.coordinator_evals += 1
+        f = problem.accel_residual(self.x, g)
+        self.accel.push(self.x, g, f)
+        cand = self.accel.propose()
+        cur_res = problem.residual_norm(self.x)
+        if cand is None:
+            self.accel.record_reject()
+            self.x = _writable(problem.project(g))  # Eq. 5 fallback: G(x)
+            return
+        cand = _writable(problem.project(cand))
+        if cfg.accel.safeguard:
+            cand_res = problem.residual_norm(cand)
+            if np.isfinite(cand_res) and cand_res < cur_res:
+                self.accel.record_accept()
+                self.x = cand
+            else:
+                self.accel.record_reject()
+                self.x = _writable(problem.project(g))
+        else:
+            self.accel.record_accept()
+            self.x = cand
+
+    # ----------------------------------------------------------------- #
+    def record(self, t: float) -> float:
+        self.res_norm = self.problem.residual_norm(self.x)
+        self.history.append((t, self.wu, self.res_norm))
+        return self.res_norm
+
+    def converged(self) -> bool:
+        if self.cfg.converge_on == "error":
+            err = self.problem.error_norm(self.x)
+            return err is not None and err < self.cfg.tol
+        return self.res_norm < self.cfg.tol
+
+    def result(self, t: float, rounds: int, converged: bool) -> RunResult:
+        mean_stale = self.staleness_sum / max(self.staleness_n, 1)
+        acc = self.accel
+        return RunResult(
+            x=self.x,
+            converged=converged,
+            worker_updates=self.wu,
+            wall_time=t,
+            residual_norm=self.problem.residual_norm(self.x),
+            history=self.history,
+            rounds=rounds,
+            drops=self.drops,
+            stale_drops=self.stale_drops,
+            accel_fires=acc.n_fire if acc else 0,
+            accel_accepts=acc.n_accept if acc else 0,
+            accel_rejects=acc.n_reject if acc else 0,
+            coordinator_evals=self.coordinator_evals,
+            mean_staleness=mean_stale,
+            error_norm=self.problem.error_norm(self.x),
+            crashes=self.crashes,
+            restarts=self.restarts,
+        )

@@ -1,0 +1,242 @@
+"""Real-concurrency thread-pool executor.
+
+Workers are OS threads evaluating ``block_update`` concurrently; straggler
+delays are injected with real ``time.sleep`` and wall time is measured with
+``time.perf_counter``.  This reproduces the paper's sync-vs-async speedups
+on actual hardware (Hannah & Yin, arXiv:1708.05136; Assran et al.,
+arXiv:2006.13838: asynchronous gains only manifest under genuine concurrency
+with real stragglers) — the virtual-time simulator predicts them, this
+backend measures them.
+
+Coordinator state is protected by a single lock; worker evaluations (jitted
+JAX / numpy kernels, which release the GIL) and injected sleeps run outside
+it, so workers genuinely overlap.  ``cfg.compute_time`` is ignored — compute
+cost is whatever the hardware takes.  Runs are NOT bit-reproducible across
+invocations (arrival order is real scheduling), but with ``n_workers=1`` the
+trajectory matches the synchronous one and converges to the same fixed
+point, which is the parity contract tested in ``tests/test_executors.py``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor as _Pool
+from typing import Optional
+
+import numpy as np
+
+from ..fixedpoint import FixedPointProblem
+from .base import Executor, register_executor
+from .coordinator import Coordinator, worker_eval
+from .types import FaultProfile, RunConfig, RunResult, _fault_for
+
+__all__ = ["ThreadPoolExecutor"]
+
+
+@register_executor
+class ThreadPoolExecutor(Executor):
+    """Concurrent workers in a thread pool; wall time is real seconds."""
+
+    name = "thread"
+
+    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+        coord = Coordinator(problem, cfg)
+        # Warm every jit specialization the run will hit (per-block shapes,
+        # selection-sized blocks, the accel/residual full-map path) before
+        # the clock starts, so compile time doesn't skew wall-clock.
+        for blk in coord.blocks:
+            worker_eval(problem, cfg, coord.x, blk)
+        if cfg.selection != "fixed":
+            # Warm the exact index-set sizes the run will produce: k for
+            # async per-dispatch selection, the round-partition chunk sizes
+            # for sync (min(p*k, n) split across p workers).  Plain aranges
+            # keep the coordinator rng untouched.
+            k = cfg.selection_k or max(1, problem.n // cfg.n_workers)
+            sizes = {min(k, problem.n)}
+            if cfg.mode == "sync":
+                total = min(cfg.n_workers * k, problem.n)
+                sizes = {len(c) for c in
+                         np.array_split(np.arange(total), cfg.n_workers)}
+            for sz in sizes:
+                if sz:
+                    worker_eval(problem, cfg, coord.x, np.arange(sz))
+        if cfg.accel is not None:
+            problem.full_map(coord.x)
+        problem.residual_norm(coord.x)
+        if cfg.mode == "sync":
+            return self._run_sync(problem, cfg, coord)
+        if cfg.mode == "async":
+            return self._run_async(problem, cfg, coord)
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+
+    # ----------------------------------------------------------------- #
+    @staticmethod
+    def _sync_task(
+        problem: FixedPointProblem, cfg: RunConfig, x_snap: np.ndarray,
+        idx: np.ndarray, delay: float, crashed: bool,
+        profile: FaultProfile,
+    ) -> Optional[np.ndarray]:
+        vals = worker_eval(problem, cfg, x_snap, idx)
+        if delay > 0.0:
+            time.sleep(delay)
+        if crashed:
+            # BSP: the barrier stalls until the worker restarts; its
+            # in-flight result is lost either way.
+            if profile.restart_after is not None:
+                time.sleep(profile.restart_after)
+            return None
+        return vals
+
+    def _run_sync(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator
+    ) -> RunResult:
+        t0 = time.perf_counter()
+        rounds = 0
+        arrivals = 0
+        alive = set(range(cfg.n_workers))
+        coord.record(0.0)
+        with _Pool(max_workers=cfg.n_workers) as pool:
+            while (coord.wu < cfg.max_updates and alive
+                   and arrivals < coord.max_arrivals):
+                rounds += 1
+                round_idx = coord.select_round_indices()
+                x_snap = coord.x.copy()
+                plans = []
+                for w in sorted(alive):
+                    prof = _fault_for(cfg, w)
+                    delay = prof.sample_delay(coord.rng)
+                    crashed = prof.sample_crash(coord.rng)
+                    plans.append((w, prof, round_idx[w], delay, crashed))
+                futs = [
+                    pool.submit(self._sync_task, problem, cfg, x_snap, idx,
+                                delay, crashed, prof)
+                    for _, prof, idx, delay, crashed in plans
+                ]
+                for (w, prof, idx, _, crashed), fut in zip(plans, futs):
+                    vals = fut.result()
+                    arrivals += 1
+                    if crashed:
+                        coord.crashes += 1
+                        if prof.restart_after is None:
+                            alive.discard(w)
+                        else:
+                            coord.restarts += 1
+                        continue
+                    coord.apply_return(idx, vals, prof, staleness=0)
+                if cfg.sync_overhead > 0.0:
+                    time.sleep(cfg.sync_overhead)
+                if coord.accel is not None and rounds % cfg.fire_every == 0:
+                    coord.maybe_fire_accel()
+                t = time.perf_counter() - t0
+                res = coord.record(t)
+                if not np.isfinite(res) or res > 1e60:
+                    return coord.result(t, rounds, False)
+                if coord.converged():
+                    return coord.result(t, rounds, True)
+                if cfg.max_wall is not None and t > cfg.max_wall:
+                    break
+        t = time.perf_counter() - t0
+        return coord.result(t, rounds, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator
+    ) -> RunResult:
+        lock = threading.Lock()
+        stop = threading.Event()
+        state = {"since_record": 0, "since_fire": 0, "arrivals": 0}
+        # Per-worker generators for delay/crash draws keep the coordinator
+        # rng (drop/noise/selection) behind the lock and everything else out.
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+        worker_rngs = [np.random.default_rng(s) for s in seeds]
+        t0 = time.perf_counter()
+        coord.record(0.0)
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def worker_loop(w: int) -> None:
+            prof = _fault_for(cfg, w)
+            rng = worker_rngs[w]
+            while not stop.is_set():
+                with lock:
+                    if stop.is_set():
+                        return
+                    x_snap = coord.x.copy()
+                    launch_wu = coord.wu
+                    idx = coord.select_indices(w)
+                vals = worker_eval(problem, cfg, x_snap, idx)
+                if cfg.async_overhead > 0.0:
+                    time.sleep(cfg.async_overhead)
+                delay = prof.sample_delay(rng)
+                if delay > 0.0:
+                    time.sleep(delay)
+                if prof.sample_crash(rng):
+                    # A crash is still an arrival: it counts toward the
+                    # record cadence and the stop checks must run, or an
+                    # all-crashing worker set would spin forever.
+                    with lock:
+                        coord.crashes += 1
+                        state["since_record"] += 1
+                        state["arrivals"] += 1
+                        if state["arrivals"] >= coord.max_arrivals:
+                            stop.set()
+                        t = elapsed()
+                        if state["since_record"] >= coord.record_every:
+                            res = coord.record(t)
+                            state["since_record"] = 0
+                            if not np.isfinite(res) or res > 1e60:
+                                stop.set()
+                            elif coord.converged():
+                                stop.set()
+                        if cfg.max_wall is not None and t > cfg.max_wall:
+                            stop.set()
+                    if prof.restart_after is None or stop.is_set():
+                        return  # permanent crash (or run over): thread exits
+                    time.sleep(prof.restart_after)
+                    with lock:
+                        coord.restarts += 1
+                    continue
+                with lock:
+                    if stop.is_set():
+                        return
+                    applied = coord.apply_return(
+                        idx, vals, prof, staleness=coord.wu - launch_wu
+                    )
+                    if applied:
+                        state["since_fire"] += 1
+                        if (coord.accel is not None
+                                and state["since_fire"] >= cfg.fire_every):
+                            coord.maybe_fire_accel()
+                            state["since_fire"] = 0
+                    state["since_record"] += 1
+                    state["arrivals"] += 1
+                    if state["arrivals"] >= coord.max_arrivals:
+                        stop.set()
+                    t = elapsed()
+                    if state["since_record"] >= coord.record_every:
+                        res = coord.record(t)
+                        state["since_record"] = 0
+                        if not np.isfinite(res) or res > 1e60:
+                            stop.set()
+                        elif coord.converged():
+                            stop.set()
+                    if coord.wu >= cfg.max_updates:
+                        stop.set()
+                    if cfg.max_wall is not None and t > cfg.max_wall:
+                        stop.set()
+
+        threads = [
+            threading.Thread(target=worker_loop, args=(w,), daemon=True,
+                             name=f"fp-worker-{w}")
+            for w in range(cfg.n_workers)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        t = elapsed()
+        with lock:
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())

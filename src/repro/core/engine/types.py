@@ -1,0 +1,133 @@
+"""Shared engine datatypes: fault profiles, run configuration, run results.
+
+These are backend-agnostic: the same :class:`RunConfig` drives the
+deterministic virtual-time simulator and the real-concurrency thread-pool
+backend (``cfg.executor`` selects which — see :mod:`repro.core.engine.base`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..anderson import AndersonConfig
+
+__all__ = ["FaultProfile", "RunConfig", "RunResult"]
+
+
+@dataclass
+class FaultProfile:
+    """Per-worker fault injection (paper §4).
+
+    ``delay``/``noise``/``drop``/``max_staleness`` are the paper's four
+    fault channels.  ``crash_prob``/``restart_after`` extend them with
+    worker churn: with probability ``crash_prob`` per update the worker
+    crashes — its in-flight result is lost — and it rejoins after
+    ``restart_after`` seconds (``None`` means it never comes back).  Both
+    backends honour the same semantics; in the virtual-time backend the
+    restart costs virtual seconds, in the thread backend real ones.
+    """
+
+    delay_mean: float = 0.0  # seconds added per update (virtual or real)
+    delay_std: float = 0.0
+    noise_std: float = 0.0  # additive N(0, std) on returned components
+    drop_prob: float = 0.0  # probability a returned update is lost
+    max_staleness: Optional[int] = None  # in worker-updates; older => dropped
+    crash_prob: float = 0.0  # probability per update the worker crashes
+    restart_after: Optional[float] = None  # seconds down; None => permanent
+
+    def sample_delay(self, rng: np.random.Generator) -> float:
+        if self.delay_mean == 0.0 and self.delay_std == 0.0:
+            return 0.0
+        return max(0.0, rng.normal(self.delay_mean, self.delay_std))
+
+    def sample_crash(self, rng: np.random.Generator) -> bool:
+        """Draw a crash event; consumes randomness only when enabled."""
+        return self.crash_prob > 0.0 and rng.random() < self.crash_prob
+
+
+@dataclass
+class RunConfig:
+    """One (a)synchronous run of a fixed-point problem."""
+
+    n_workers: int = 4
+    mode: str = "async"  # "sync" | "async"
+    # --- execution backend (see repro.core.engine.base) ------------------- #
+    executor: str = "virtual"  # "virtual" | "thread"
+    # --- acceleration -------------------------------------------------- #
+    accel: Optional[AndersonConfig] = None
+    accel_mode: str = "coordinator"  # "monitor" | "coordinator" | "periodic"
+    fire_every: int = 1  # E: fire each E worker returns (async) / rounds (sync)
+    # --- damping -------------------------------------------------------- #
+    block_damping: Optional[float] = None  # damped application of block updates
+    # --- selection (paper §5.2 / Fig. 6) --------------------------------- #
+    selection: str = "fixed"  # "fixed" | "uniform" | "greedy"
+    selection_k: Optional[int] = None  # block size for uniform/greedy
+    # --- worker return mode (paper §6 future work) ----------------------- #
+    return_mode: str = "block"  # "block" | "full_map"
+    # --- termination ------------------------------------------------------ #
+    tol: float = 1e-6
+    max_updates: int = 200_000
+    # Liveness guard: total worker returns (applied + dropped + stale +
+    # crashed) before the run stops.  max_updates only counts *applied*
+    # updates, so a run whose returns never apply (drop_prob=1, all-crash
+    # churn) would otherwise spin forever.  None => 10 * max_updates.
+    max_arrivals: Optional[int] = None
+    max_wall: Optional[float] = None  # seconds (virtual or real)
+    record_every: Optional[int] = None  # residual check cadence (default p)
+    # --- determinism / timing --------------------------------------------- #
+    seed: int = 0
+    compute_time: Optional[float] = None  # virtual s/update; None => measure
+    sync_overhead: float = 0.0  # per-round barrier cost (BSP coordination)
+    async_overhead: float = 0.0  # per-dispatch cost in async mode
+    faults: Union[None, FaultProfile, Dict[int, FaultProfile]] = None
+    converge_on: str = "residual"  # "residual" | "error"
+
+
+@dataclass
+class RunResult:
+    x: np.ndarray
+    converged: bool
+    worker_updates: int
+    wall_time: float
+    residual_norm: float
+    history: List[Tuple[float, int, float]]  # (t, WU, residual norm)
+    rounds: int = 0  # sync: barrier rounds; async: applied updates
+    drops: int = 0
+    stale_drops: int = 0
+    accel_fires: int = 0
+    accel_accepts: int = 0
+    accel_rejects: int = 0
+    coordinator_evals: int = 0  # full-map evaluations done by the coordinator
+    mean_staleness: float = 0.0
+    error_norm: Optional[float] = None
+    crashes: int = 0  # worker crash events (in-flight update lost)
+    restarts: int = 0  # crashed workers that rejoined
+
+    def summary(self) -> str:
+        return (
+            f"converged={self.converged} WU={self.worker_updates} "
+            f"wall={self.wall_time:.3f}s res={self.residual_norm:.3e} "
+            f"fires={self.accel_fires} acc={self.accel_accepts} "
+            f"rej={self.accel_rejects} stale_drops={self.stale_drops}"
+        )
+
+
+def _writable(a: np.ndarray) -> np.ndarray:
+    """Return a float64 array that is safe to mutate in place.
+
+    Problem maps are jitted JAX functions; ``np.asarray`` of their outputs
+    yields read-only buffers, which the coordinator must not adopt directly.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    return a if a.flags.writeable else a.copy()
+
+
+def _fault_for(cfg: RunConfig, worker: int) -> FaultProfile:
+    if cfg.faults is None:
+        return FaultProfile()
+    if isinstance(cfg.faults, FaultProfile):
+        return cfg.faults
+    return cfg.faults.get(worker, FaultProfile())

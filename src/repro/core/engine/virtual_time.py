@@ -1,0 +1,177 @@
+"""Deterministic virtual-time executor (discrete-event simulator).
+
+This is the paper-faithful analogue of the Ray framework (§4): ``p`` virtual
+workers evaluate block updates, an event queue advances a virtual clock, and
+the coordinator applies returns in arrival order.  Synchronous mode is the
+same engine with a barrier (round wall time = max over workers), so
+sync/async speedups are directly comparable — the paper's headline metric.
+
+Fixed-seed runs are bit-identical to the pre-refactor monolithic engine for
+configs the bug fixes don't touch (fixed selection, no drops/crashes): the
+random-stream consumption order is preserved exactly.
+
+Fixes folded into the extraction (relative to the monolith):
+
+- sync uniform/greedy selection partitions one index pool across the round's
+  workers instead of letting them sample overlapping blocks independently;
+- async recording counts *arrivals*, not applied returns, so high-drop runs
+  still re-check the residual at the configured cadence;
+- ``max_wall`` is checked before relaunching a worker;
+- async results report applied-update count in ``rounds`` (was hardcoded 0);
+- worker crash/restart churn (``FaultProfile.crash_prob``/``restart_after``).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import List, Tuple
+
+import numpy as np
+
+from ..fixedpoint import FixedPointProblem
+from .base import Executor, register_executor
+from .coordinator import Coordinator, measure_compute, worker_eval
+from .types import RunConfig, RunResult, _fault_for
+
+__all__ = ["VirtualTimeExecutor"]
+
+
+@register_executor
+class VirtualTimeExecutor(Executor):
+    """Deterministic simulator; wall time is virtual seconds."""
+
+    name = "virtual"
+
+    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+        blocks = problem.default_blocks(cfg.n_workers)
+        compute = (
+            cfg.compute_time if cfg.compute_time is not None
+            else measure_compute(problem, blocks)
+        )
+        if cfg.mode == "sync":
+            return self._run_sync(problem, cfg, compute)
+        if cfg.mode == "async":
+            return self._run_async(problem, cfg, compute)
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+
+    # ----------------------------------------------------------------- #
+    def _run_sync(
+        self, problem: FixedPointProblem, cfg: RunConfig, compute: float
+    ) -> RunResult:
+        coord = Coordinator(problem, cfg)
+        t = 0.0
+        rounds = 0
+        arrivals = 0
+        alive = set(range(cfg.n_workers))
+        coord.record(t)
+        while (coord.wu < cfg.max_updates and alive
+               and arrivals < coord.max_arrivals):
+            rounds += 1
+            round_time = 0.0
+            updates = []
+            round_idx = coord.select_round_indices()
+            for w in sorted(alive):
+                prof = _fault_for(cfg, w)
+                idx = round_idx[w]
+                vals = worker_eval(problem, cfg, coord.x, idx)
+                arrivals += 1
+                cost = compute + prof.sample_delay(coord.rng)
+                if prof.sample_crash(coord.rng):
+                    # In-flight result lost; BSP barrier waits for the
+                    # restart (or the worker leaves the round set forever).
+                    coord.crashes += 1
+                    if prof.restart_after is None:
+                        alive.discard(w)
+                    else:
+                        coord.restarts += 1
+                        cost += prof.restart_after
+                    round_time = max(round_time, cost)
+                    continue
+                round_time = max(round_time, cost)
+                updates.append((idx, vals, prof))
+            t += round_time + cfg.sync_overhead
+            for idx, vals, prof in updates:  # barrier: all computed on same x
+                coord.apply_return(idx, vals, prof, staleness=0)
+            if coord.accel is not None and rounds % cfg.fire_every == 0:
+                coord.maybe_fire_accel()
+            res = coord.record(t)
+            if not np.isfinite(res) or res > 1e60:
+                return coord.result(t, rounds, False)
+            if coord.converged():
+                return coord.result(t, rounds, True)
+            if cfg.max_wall is not None and t > cfg.max_wall:
+                break
+        return coord.result(t, rounds, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async(
+        self, problem: FixedPointProblem, cfg: RunConfig, compute: float
+    ) -> RunResult:
+        coord = Coordinator(problem, cfg)
+        t = 0.0
+        coord.record(t)
+        # Event tuples: (done, seq, worker, launch_wu, idx, vals); a restart
+        # marker has idx=None and performs the relaunch when *popped*, so
+        # the restarted worker snapshots x after its downtime — the same
+        # semantics as the thread backend's sleep-then-resnapshot.
+        heap: List[Tuple[float, int, int, int, object, object]] = []
+        seq = 0
+
+        def launch(worker: int, now: float) -> None:
+            nonlocal seq
+            prof = _fault_for(cfg, worker)
+            idx = coord.select_indices(worker)
+            vals = worker_eval(problem, cfg, coord.x, idx)
+            done = now + compute + cfg.async_overhead + prof.sample_delay(coord.rng)
+            heapq.heappush(heap, (done, seq, worker, coord.wu, idx, vals))
+            seq += 1
+
+        def schedule_restart(worker: int, at: float) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (at, seq, worker, coord.wu, None, None))
+            seq += 1
+
+        for w in range(cfg.n_workers):
+            launch(w, 0.0)
+
+        since_record = 0  # arrivals (applied or not) since last residual check
+        since_fire = 0
+        arrivals = 0
+        while (heap and coord.wu < cfg.max_updates
+               and arrivals < coord.max_arrivals):
+            t, _, worker, launch_wu, idx, vals = heapq.heappop(heap)
+            prof = _fault_for(cfg, worker)
+            if idx is None:  # restart marker: worker rejoins now
+                coord.restarts += 1
+                launch(worker, t)
+                continue
+            arrivals += 1
+            crashed = prof.sample_crash(coord.rng)
+            if crashed:
+                coord.crashes += 1
+            else:
+                applied = coord.apply_return(
+                    idx, vals, prof, staleness=coord.wu - launch_wu
+                )
+                if applied:
+                    since_fire += 1
+                    if coord.accel is not None and since_fire >= cfg.fire_every:
+                        coord.maybe_fire_accel()
+                        since_fire = 0
+            since_record += 1
+            if since_record >= coord.record_every:
+                res = coord.record(t)
+                since_record = 0
+                if not np.isfinite(res) or res > 1e60:
+                    return coord.result(t, coord.wu, False)
+                if coord.converged():
+                    return coord.result(t, coord.wu, True)
+            if cfg.max_wall is not None and t > cfg.max_wall:
+                break
+            if crashed:
+                if prof.restart_after is not None:
+                    schedule_restart(worker, t + prof.restart_after)
+                continue  # permanent crash: worker never relaunches
+            launch(worker, t)
+        coord.record(t)
+        return coord.result(t, coord.wu, coord.converged())

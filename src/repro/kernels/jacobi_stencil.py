@@ -21,17 +21,12 @@ from jax.experimental import pallas as pl
 f32 = jnp.float32
 
 
-def _jacobi_kernel(x_prev_ref, x_cur_ref, x_next_ref, b_ref, o_ref, *,
-                   block_rows: int, g: int):
+def _jacobi_kernel(x_prev_ref, x_cur_ref, x_next_ref, b_ref, o_ref, *, g: int):
     i = pl.program_id(0)
     n = pl.num_programs(0)
     x = x_cur_ref[...]  # (br, g)
     up = jnp.concatenate([x_prev_ref[-1:, :], x[:-1, :]], axis=0)
     down = jnp.concatenate([x[1:, :], x_next_ref[:1, :]], axis=0)
-
-    @pl.when(i == 0)
-    def _mask_top():
-        pass  # handled via where below
 
     first = i == 0
     last = i == n - 1
@@ -68,7 +63,7 @@ def jacobi_sweep(x: jax.Array, b: jax.Array, g: int, *,
         return (jnp.minimum(i + 1, n - 1), 0)
 
     out = pl.pallas_call(
-        functools.partial(_jacobi_kernel, block_rows=br, g=g),
+        functools.partial(_jacobi_kernel, g=g),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, g), prev_map),

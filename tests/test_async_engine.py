@@ -4,6 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import ToyContraction
+
 from repro.core import (
     AndersonConfig,
     FaultProfile,
@@ -11,30 +13,6 @@ from repro.core import (
     RunConfig,
     run_fixed_point,
 )
-
-
-class ToyContraction(FixedPointProblem):
-    """G(x) = M x + b with rho(M) = rho < 1; dense coupling."""
-
-    def __init__(self, n=32, rho=0.8, seed=0):
-        rng = np.random.default_rng(seed)
-        Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
-        self.M = Q @ np.diag(rng.uniform(-rho, rho, n)) @ Q.T
-        self.b = rng.standard_normal(n)
-        self.n = n
-        self.x_star = np.linalg.solve(np.eye(n) - self.M, self.b)
-
-    def initial(self):
-        return np.zeros(self.n)
-
-    def full_map(self, x):
-        return self.M @ x + self.b
-
-    def block_update(self, x, indices):
-        return self.full_map(x)[indices]
-
-    def exact_solution(self):
-        return self.x_star
 
 
 def cfg(**kw):
@@ -204,6 +182,87 @@ class TestReturnModes:
         p = ToyContraction()
         r = run_fixed_point(p, cfg(return_mode="full_map", tol=1e-8))
         assert r.converged
+
+
+class TestSyncSelectionPartition:
+    """Regression: sync uniform/greedy rounds must not hand overlapping
+    blocks to workers (they silently overwrote each other pre-fix)."""
+
+    def _coord(self, selection, p=4, k=8):
+        from repro.core.engine.coordinator import Coordinator
+
+        prob = ToyContraction(n=64)
+        return Coordinator(prob, cfg(mode="sync", selection=selection,
+                                     selection_k=k, n_workers=p))
+
+    @pytest.mark.parametrize("selection", ["uniform", "greedy"])
+    def test_round_blocks_are_disjoint(self, selection):
+        coord = self._coord(selection)
+        for _ in range(5):
+            idxs = coord.select_round_indices()
+            assert len(idxs) == 4
+            flat = np.concatenate(idxs)
+            assert len(np.unique(flat)) == len(flat) == 32  # p*k, no overlap
+            coord.x += 0.1  # perturb so greedy re-ranks
+
+    def test_greedy_round_targets_worst_components(self):
+        coord = self._coord("greedy")
+        comp = coord.problem.component_residual(coord.x)
+        flat = np.concatenate(coord.select_round_indices())
+        worst = set(np.argsort(comp)[-32:])
+        assert set(flat.tolist()) == worst
+
+    def test_fixed_selection_unchanged(self):
+        coord = self._coord("fixed")
+        idxs = coord.select_round_indices()
+        for got, want in zip(idxs, coord.blocks):
+            np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("selection", ["uniform", "greedy"])
+    def test_sync_selection_converges(self, selection):
+        p = ToyContraction()
+        r = run_fixed_point(p, cfg(mode="sync", selection=selection,
+                                   selection_k=8, tol=1e-8,
+                                   max_updates=60000))
+        assert r.converged
+
+
+class AtFixedPointProblem(ToyContraction):
+    """Starts exactly at its fixed point (b = 0, x* = 0)."""
+
+    def __init__(self, n=32, rho=0.8, seed=0):
+        super().__init__(n=n, rho=rho, seed=seed)
+        self.b = np.zeros(n)
+        self.x_star = np.zeros(n)
+
+
+class TestAsyncRecordingStarvation:
+    """Regression: the residual check must advance on *arrivals*, not only
+    applied returns — with high drop rates the pre-fix engine re-checked
+    convergence arbitrarily late (never, at drop_prob=1)."""
+
+    def test_all_drops_still_detects_convergence(self):
+        p = AtFixedPointProblem()
+        f = FaultProfile(drop_prob=1.0)
+        # max_wall is only a backstop: the run must converge at the first
+        # arrival-counted record, with zero applied updates.
+        r = run_fixed_point(p, cfg(faults=f, max_wall=2.0))
+        assert r.converged
+        assert r.worker_updates == 0
+        assert r.drops > 0
+        assert r.wall_time < 1.0
+
+    def test_record_cadence_counts_arrivals(self):
+        p = ToyContraction()
+        f = FaultProfile(drop_prob=0.8)
+        r = run_fixed_point(p, cfg(faults=f, max_updates=200, record_every=4))
+        arrivals = r.worker_updates + r.drops
+        assert len(r.history) >= arrivals // 4
+
+    def test_async_rounds_reports_applied_updates(self):
+        p = ToyContraction()
+        r = run_fixed_point(p, cfg(tol=1e-8))
+        assert r.rounds == r.worker_updates > 0
 
 
 class TestAccelIntegration:

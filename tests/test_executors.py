@@ -1,0 +1,211 @@
+"""Executor subsystem: registry, virtual-time parity, real-concurrency backend.
+
+The golden values below were captured from the pre-refactor monolithic
+``async_engine`` at fixed seeds; the extracted ``VirtualTimeExecutor`` must
+reproduce them bit-for-bit (same WU, same float wall time, same iterate
+bytes).  The thread backend is checked for fixed-point parity (p=1) and for
+the paper's §5.1 ordering: async beats sync wall-clock under a real 100 ms
+straggler.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultProfile,
+    RunConfig,
+    ThreadPoolExecutor,
+    VirtualTimeExecutor,
+    available_executors,
+    get_executor,
+    run_fixed_point,
+)
+from conftest import ToyContraction
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+class TestRegistry:
+    def test_both_backends_registered(self):
+        names = available_executors()
+        assert "virtual" in names and "thread" in names
+
+    def test_get_executor_instances(self):
+        assert isinstance(get_executor("virtual"), VirtualTimeExecutor)
+        assert isinstance(get_executor("thread"), ThreadPoolExecutor)
+
+    def test_unknown_executor_raises(self):
+        with pytest.raises(ValueError, match="unknown executor"):
+            get_executor("ray")
+        with pytest.raises(ValueError, match="unknown executor"):
+            run_fixed_point(ToyContraction(), RunConfig(executor="nope"))
+
+    def test_compat_shim_reexports(self):
+        from repro.core import async_engine
+
+        assert async_engine.run_fixed_point is run_fixed_point
+        assert async_engine.VirtualTimeExecutor is VirtualTimeExecutor
+
+
+class TestVirtualTimeParity:
+    """Fixed-seed runs are bit-identical to the pre-refactor engine."""
+
+    # (mode, WU, wall_time, sha256 of x bytes) captured at the seed commit.
+    GOLDEN_FAULTY = {
+        "sync": (20000, 20.15845536704202,
+                 "0bbb2369aad1384eb9b25f63e88b666a3c3bb58e624db3c3309d12fa676adc94"),
+        "async": (20000, 15.040602464125524,
+                  "f0a75168480fdb33e47b58725734f81739c6eedbdcc6c50fde4cbeec060fda09"),
+    }
+    GOLDEN_CLEAN = (368, 0.09200000000000007,
+                    "1a9cce7b826f9254d25f89966ad039c055ca54595bd4af5e483fb86168e0762d")
+
+    @pytest.mark.parametrize("mode", ["sync", "async"])
+    def test_faulty_run_bit_identical(self, mode):
+        wu, wall, sha = self.GOLDEN_FAULTY[mode]
+        p = ToyContraction()
+        f = FaultProfile(delay_mean=0.002, delay_std=0.001, noise_std=1e-9)
+        r = run_fixed_point(p, RunConfig(mode=mode, tol=1e-10, max_updates=20000,
+                                         compute_time=1e-3, faults=f, seed=42))
+        assert r.worker_updates == wu
+        assert r.wall_time == wall
+        assert _sha(r.x) == sha
+
+    def test_clean_async_run_bit_identical(self):
+        wu, wall, sha = self.GOLDEN_CLEAN
+        p = ToyContraction()
+        r = run_fixed_point(p, RunConfig(mode="async", tol=1e-10,
+                                         max_updates=20000, compute_time=1e-3,
+                                         seed=3))
+        assert r.converged
+        assert (r.worker_updates, r.wall_time, _sha(r.x)) == (wu, wall, sha)
+
+    def test_default_executor_is_virtual(self):
+        p = ToyContraction()
+        cfg = RunConfig(mode="async", tol=1e-8, compute_time=1e-3, seed=5)
+        via_api = run_fixed_point(p, cfg)
+        direct = VirtualTimeExecutor().run(p, cfg)
+        np.testing.assert_array_equal(via_api.x, direct.x)
+        assert via_api.wall_time == direct.wall_time
+
+
+class TestThreadBackend:
+    def test_single_worker_matches_sync_fixed_point(self):
+        p = ToyContraction()
+        r = run_fixed_point(p, RunConfig(mode="async", executor="thread",
+                                         n_workers=1, tol=1e-10,
+                                         max_updates=50000))
+        s = run_fixed_point(p, RunConfig(mode="sync", executor="virtual",
+                                         n_workers=1, tol=1e-10,
+                                         max_updates=50000, compute_time=1e-4))
+        assert r.converged and s.converged
+        assert np.linalg.norm(r.x - s.x) < 1e-8
+        assert np.linalg.norm(r.x - p.x_star) < 1e-8
+
+    def test_async_threads_converge_to_fixed_point(self):
+        p = ToyContraction()
+        r = run_fixed_point(p, RunConfig(mode="async", executor="thread",
+                                         tol=1e-10, max_updates=50000))
+        assert r.converged
+        assert np.linalg.norm(r.x - p.x_star) < 1e-8
+        assert r.wall_time > 0.0
+        assert r.rounds == r.worker_updates
+
+    def test_sync_threads_converge_to_fixed_point(self):
+        p = ToyContraction()
+        r = run_fixed_point(p, RunConfig(mode="sync", executor="thread",
+                                         tol=1e-10, max_updates=50000))
+        assert r.converged
+        assert np.linalg.norm(r.x - p.x_star) < 1e-8
+
+    def test_straggler_speedup_on_jacobi(self):
+        """Paper §5.1 ordering on real hardware: one 100 ms straggler makes
+        async > 1.5x faster than sync in measured wall-clock."""
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=16, sweeps=10)
+        faults = {0: FaultProfile(delay_mean=0.1)}
+        kw = dict(executor="thread", tol=1e-3, max_updates=10**6, faults=faults)
+        s = run_fixed_point(prob, RunConfig(mode="sync", **kw))
+        a = run_fixed_point(prob, RunConfig(mode="async", **kw))
+        assert s.converged and a.converged
+        assert s.wall_time > 1.5 * a.wall_time, (
+            f"async speedup only {s.wall_time / a.wall_time:.2f}x"
+        )
+
+
+class TestCrashChurn:
+    """FaultProfile crash/restart semantics on both backends."""
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread"])
+    def test_crash_restart_converges(self, executor):
+        p = ToyContraction()
+        faults = {0: FaultProfile(crash_prob=0.2, restart_after=0.001)}
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-8, max_updates=50000,
+                                         faults=faults, **kw))
+        assert r.converged
+        assert r.crashes > 0
+        # A worker that crashes right as the run converges may exit without
+        # rejoining, so restarts can trail crashes by the in-flight ones.
+        assert 0 < r.restarts <= r.crashes
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread"])
+    def test_permanent_crash_terminates_unconverged(self, executor):
+        p = ToyContraction()
+        faults = FaultProfile(crash_prob=1.0)  # every worker dies on return
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=50000,
+                                         faults=faults, **kw))
+        assert not r.converged
+        assert r.crashes == 4
+        assert r.restarts == 0
+        assert r.worker_updates == 0
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread"])
+    def test_all_crash_churn_terminates_at_max_wall(self, executor):
+        """Regression: a worker set that crashes on every return (but keeps
+        restarting) must still hit the stop checks — the thread backend's
+        crash path used to skip them and spin forever."""
+        p = ToyContraction()
+        faults = FaultProfile(crash_prob=1.0, restart_after=0.001)
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=100,
+                                         max_wall=0.5, faults=faults, **kw))
+        assert not r.converged
+        assert r.worker_updates == 0
+        assert r.crashes > 0
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread"])
+    def test_all_crash_churn_terminates_on_arrival_cap(self, executor):
+        """Liveness: max_updates only counts applied updates, so an
+        all-crashing churn run must stop at the max_arrivals guard even
+        with no max_wall set."""
+        p = ToyContraction()
+        faults = FaultProfile(crash_prob=1.0, restart_after=0.001)
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=50,
+                                         faults=faults, **kw))
+        assert not r.converged
+        assert r.worker_updates == 0
+        assert r.crashes >= 500  # 10 * max_updates arrivals, all crashed
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread"])
+    def test_sync_crash_restart(self, executor):
+        p = ToyContraction()
+        faults = {0: FaultProfile(crash_prob=0.3, restart_after=0.0)}
+        kw = {} if executor == "thread" else {"compute_time": 1e-4}
+        r = run_fixed_point(p, RunConfig(mode="sync", executor=executor,
+                                         tol=1e-8, max_updates=50000,
+                                         faults=faults, **kw))
+        assert r.converged
+        assert r.crashes > 0
+        assert r.restarts == r.crashes
