@@ -1,21 +1,29 @@
 # CI entry points.
 #
-# `make test`  — the tier-1 verify command from ROADMAP.md (collects all 9
-#                test modules with or without hypothesis installed; see
-#                tests/conftest.py).
-# `make smoke` — ~30 s real-concurrency benchmark: sync-vs-async under a
-#                100 ms straggler on the thread backend (asserts the paper's
-#                >1.5x async speedup ordering on measured wall-clock).
-# `make bench` — the full virtual-time benchmark suite (slow).
+# `make test`       — the tier-1 verify command from ROADMAP.md (collects all
+#                     test modules with or without hypothesis installed; see
+#                     tests/conftest.py).
+# `make docs-check` — docs consistency: intra-repo links in README.md/docs/
+#                     resolve, and the README executor table matches the
+#                     engine registry (tools/docs_check.py).
+# `make smoke`      — docs-check + ~2 min real-concurrency benchmark:
+#                     sync-vs-async under a 100 ms straggler measured on the
+#                     thread AND process backends (asserts the paper's >1.5x
+#                     async speedup ordering on measured wall-clock).
+# `make bench`      — the full benchmark suite, including the measured
+#                     Table 2 delay sweep on every available backend (slow).
 
 PYTHON ?= python
 
-.PHONY: test smoke bench
+.PHONY: test smoke bench docs-check
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
 
-smoke:
+docs-check:
+	PYTHONPATH=src $(PYTHON) tools/docs_check.py
+
+smoke: docs-check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

@@ -22,11 +22,12 @@ MODULES = [
     "scf_async",          # Figs 8-9
     "async_dp_lm",        # beyond-paper (EXPERIMENTS §Beyond-paper)
     "kernels_bench",      # kernel micro-bench + agreement
-    "real_async",         # Table 2 ordering on real threads (measured)
+    "real_async",         # measured Table 2 sweep on all real backends
 ]
 
-# ``--smoke`` subset: finishes in ~30 s and exercises the real-concurrency
-# thread backend end to end (CI gate alongside the tier-1 pytest command).
+# ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and
+# process backends end to end and asserts the measured >1.5x async-over-sync
+# gates (CI gate alongside the tier-1 pytest command and `make docs-check`).
 SMOKE_MODULES = ["real_async"]
 
 
@@ -35,7 +36,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="run the ~30s real-backend smoke subset (implies --fast)")
+                    help="run the ~2min real-backend smoke subset (implies --fast)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 

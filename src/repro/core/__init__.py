@@ -3,8 +3,8 @@
 - :mod:`repro.core.fixedpoint`   — partitioned fixed-point problem interface
 - :mod:`repro.core.anderson`     — Anderson/DIIS with Eq. 5 safeguard
 - :mod:`repro.core.engine`       — pluggable-executor coordinator/worker
-  engine (virtual-time simulator + real-concurrency thread backend) with
-  per-worker fault injection (delay / noise / drop / staleness / crash)
+  engine (virtual-time simulator + real thread / process / Ray backends)
+  with per-worker fault injection (delay / noise / drop / staleness / crash)
 - :mod:`repro.core.coupling`     — coupling-density analysis (paper §3.5)
 """
 
@@ -12,12 +12,16 @@ from .anderson import AndersonConfig, AndersonState, diis_solve
 from .engine import (
     Executor,
     FaultProfile,
+    ProcessPoolExecutor,
+    RayExecutor,
     RunConfig,
     RunResult,
     ThreadPoolExecutor,
     VirtualTimeExecutor,
     available_executors,
     get_executor,
+    known_executors,
+    measure_compute,
     register_executor,
     run_fixed_point,
 )
@@ -39,9 +43,13 @@ __all__ = [
     "Executor",
     "VirtualTimeExecutor",
     "ThreadPoolExecutor",
+    "ProcessPoolExecutor",
+    "RayExecutor",
     "register_executor",
     "get_executor",
     "available_executors",
+    "known_executors",
+    "measure_compute",
     "FixedPointProblem",
     "contiguous_blocks",
     "coupling_density",

@@ -1,10 +1,11 @@
-"""Back-compat shim: the engine moved to :mod:`repro.core.engine`.
+"""Back-compat shim: delegates to :mod:`repro.core.engine`, nothing more.
 
 The monolithic virtual-time engine was refactored into a pluggable-executor
 package (``repro.core.engine``) with a deterministic ``VirtualTimeExecutor``
-(this module's old behaviour, fixed-seed bit-identical) and a
-real-concurrency ``ThreadPoolExecutor``.  Import from ``repro.core`` or
-``repro.core.engine`` in new code; this module only re-exports.
+(this module's old behaviour, fixed-seed bit-identical) and real-concurrency
+``ThreadPoolExecutor`` / ``ProcessPoolExecutor`` / ``RayExecutor`` backends.
+Import from ``repro.core`` or ``repro.core.engine`` in new code; this module
+only re-exports.
 """
 
 from __future__ import annotations
@@ -12,12 +13,15 @@ from __future__ import annotations
 from .engine import (
     Executor,
     FaultProfile,
+    ProcessPoolExecutor,
+    RayExecutor,
     RunConfig,
     RunResult,
     ThreadPoolExecutor,
     VirtualTimeExecutor,
     available_executors,
     get_executor,
+    known_executors,
     register_executor,
     run_fixed_point,
 )
@@ -34,7 +38,10 @@ __all__ = [
     "Executor",
     "VirtualTimeExecutor",
     "ThreadPoolExecutor",
+    "ProcessPoolExecutor",
+    "RayExecutor",
     "register_executor",
     "get_executor",
     "available_executors",
+    "known_executors",
 ]

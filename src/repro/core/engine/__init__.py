@@ -7,19 +7,34 @@ The engine is split into backend-agnostic pieces and pluggable executors:
 - :mod:`repro.core.engine.base`        — Executor ABC + registry
 - :mod:`repro.core.engine.virtual_time`— deterministic discrete-event backend
 - :mod:`repro.core.engine.threadpool`  — real-concurrency thread backend
+- :mod:`repro.core.engine.process`     — separate-interpreter process backend
+- :mod:`repro.core.engine.ray_backend` — Ray actors (optional dependency)
 
 :func:`run_fixed_point` keeps the pre-refactor one-call API; the backend is
-selected with ``RunConfig.executor`` (``"virtual"`` | ``"thread"``).
+selected with ``RunConfig.executor`` (``"virtual"`` | ``"thread"`` |
+``"process"`` | ``"ray"``).  See docs/architecture.md for when to use each.
 """
 
 from __future__ import annotations
 
 from ..fixedpoint import FixedPointProblem
-from .base import Executor, available_executors, get_executor, register_executor
+from .base import (
+    Executor,
+    available_executors,
+    get_executor,
+    known_executors,
+    register_executor,
+    register_unavailable,
+)
 from .coordinator import Coordinator, measure_compute, worker_eval
+from .process import ProcessPoolExecutor
 from .threadpool import ThreadPoolExecutor
 from .types import FaultProfile, RunConfig, RunResult
 from .virtual_time import VirtualTimeExecutor
+
+from . import ray_backend as _ray_backend  # registers "ray" or its absence
+
+RayExecutor = getattr(_ray_backend, "RayExecutor", None)
 
 __all__ = [
     "FaultProfile",
@@ -29,10 +44,14 @@ __all__ = [
     "Executor",
     "VirtualTimeExecutor",
     "ThreadPoolExecutor",
+    "ProcessPoolExecutor",
+    "RayExecutor",
     "Coordinator",
     "register_executor",
+    "register_unavailable",
     "get_executor",
     "available_executors",
+    "known_executors",
     "measure_compute",
     "worker_eval",
 ]

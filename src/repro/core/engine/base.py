@@ -5,10 +5,15 @@ An :class:`Executor` turns a (problem, config) pair into a
 addressed by ``RunConfig.executor``:
 
 - ``"virtual"`` — deterministic discrete-event simulator (virtual seconds);
-- ``"thread"``  — real concurrent workers in a thread pool (wall seconds).
+- ``"thread"``  — real concurrent workers in a thread pool (wall seconds);
+- ``"process"`` — workers in separate interpreters (no GIL sharing);
+- ``"ray"``     — Ray actors, the paper's §4 runtime (optional dependency).
 
-Process- and Ray-backed executors slot in through :func:`register_executor`
-without touching the coordinator or the drivers (ROADMAP open items).
+Backends with an unsatisfied dependency register through
+:func:`register_unavailable` instead: they stay out of
+:func:`available_executors` (so parameterized tests/benchmarks skip them
+cleanly) but :func:`get_executor` explains what is missing rather than
+claiming the name is unknown.
 """
 
 from __future__ import annotations
@@ -19,7 +24,14 @@ from typing import Dict, List, Type
 from ..fixedpoint import FixedPointProblem
 from .types import RunConfig, RunResult
 
-__all__ = ["Executor", "register_executor", "get_executor", "available_executors"]
+__all__ = [
+    "Executor",
+    "register_executor",
+    "register_unavailable",
+    "get_executor",
+    "available_executors",
+    "known_executors",
+]
 
 
 class Executor(abc.ABC):
@@ -34,6 +46,7 @@ class Executor(abc.ABC):
 
 
 _REGISTRY: Dict[str, Type[Executor]] = {}
+_UNAVAILABLE: Dict[str, str] = {}
 
 
 def register_executor(cls: Type[Executor]) -> Type[Executor]:
@@ -41,13 +54,24 @@ def register_executor(cls: Type[Executor]) -> Type[Executor]:
     if not cls.name:
         raise ValueError(f"{cls.__name__} must define a non-empty .name")
     _REGISTRY[cls.name] = cls
+    _UNAVAILABLE.pop(cls.name, None)
     return cls
+
+
+def register_unavailable(name: str, reason: str) -> None:
+    """Declare a known backend whose dependency is missing in this env."""
+    if name not in _REGISTRY:
+        _UNAVAILABLE[name] = reason
 
 
 def get_executor(name: str) -> Executor:
     try:
         cls = _REGISTRY[name]
     except KeyError:
+        if name in _UNAVAILABLE:
+            raise ValueError(
+                f"executor {name!r} is unavailable: {_UNAVAILABLE[name]}"
+            ) from None
         raise ValueError(
             f"unknown executor {name!r}; available: {sorted(_REGISTRY)}"
         ) from None
@@ -55,4 +79,12 @@ def get_executor(name: str) -> Executor:
 
 
 def available_executors() -> List[str]:
+    """Names that :func:`get_executor` will actually instantiate here."""
     return sorted(_REGISTRY)
+
+
+def known_executors() -> Dict[str, str]:
+    """All known backends: name -> "available" or the unavailability reason."""
+    out = {n: "available" for n in _REGISTRY}
+    out.update(_UNAVAILABLE)
+    return dict(sorted(out.items()))

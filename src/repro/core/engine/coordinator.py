@@ -13,15 +13,22 @@ bit-identical.
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from ..anderson import AndersonState
 from ..fixedpoint import FixedPointProblem
-from .types import FaultProfile, RunConfig, RunResult, _writable
+from .types import FaultProfile, RunConfig, RunResult, _fault_for, _writable
 
-__all__ = ["Coordinator", "worker_eval", "measure_compute"]
+__all__ = [
+    "Coordinator",
+    "worker_eval",
+    "measure_compute",
+    "warm_problem",
+    "problem_payload",
+    "rebuild_problem",
+]
 
 
 def measure_compute(problem: FixedPointProblem, blocks: Sequence[np.ndarray]) -> float:
@@ -45,6 +52,65 @@ def worker_eval(
         g = problem.full_map(x_snapshot)
         return np.asarray(g)[indices]
     return np.asarray(problem.block_update(x_snapshot, indices))
+
+
+def warm_problem(problem: FixedPointProblem, cfg: RunConfig,
+                 worker: Optional[int] = None) -> None:
+    """Compile every jit specialization a run's dispatches will hit.
+
+    Real backends call this before starting the clock so compile time never
+    skews measured wall-clock.  ``worker=None`` warms all workers' block
+    shapes (single-interpreter backends: thread); an int warms only that
+    worker's own block (per-interpreter workers — process, ray — each warm
+    themselves).  Selection warming uses plain aranges of the exact index-
+    set sizes the run will produce, leaving the coordinator rng untouched.
+    """
+    x0 = problem.initial()
+    blocks = problem.default_blocks(cfg.n_workers)
+    for blk in (blocks if worker is None else [blocks[worker]]):
+        worker_eval(problem, cfg, x0, blk)
+    if cfg.selection != "fixed":
+        k = cfg.selection_k or max(1, problem.n // cfg.n_workers)
+        sizes = {min(k, problem.n)}
+        if cfg.mode == "sync":
+            total = min(cfg.n_workers * k, problem.n)
+            sizes = {len(c) for c in
+                     np.array_split(np.arange(total), cfg.n_workers)}
+        for sz in sizes:
+            if sz:
+                worker_eval(problem, cfg, x0, np.arange(sz))
+
+
+def problem_payload(problem: FixedPointProblem):
+    """Picklable recipe for rebuilding ``problem`` in another interpreter.
+
+    Prefers ``factory_spec()``; falls back to pickling the instance itself
+    (fine for plain-numpy problems).  Raises with a pointer to
+    ``factory_spec`` if neither works.
+    """
+    spec = problem.factory_spec()
+    if spec is not None:
+        return ("factory", spec)
+    import pickle
+
+    try:
+        pickle.dumps(problem)
+    except Exception as e:
+        raise ValueError(
+            f"{type(problem).__name__} cannot cross process boundaries: it "
+            f"does not pickle ({e!r}) and defines no factory_spec(). "
+            "Implement FixedPointProblem.factory_spec() returning "
+            "(factory, args, kwargs)."
+        ) from e
+    return ("pickle", problem)
+
+
+def rebuild_problem(payload) -> FixedPointProblem:
+    kind, data = payload
+    if kind == "factory":
+        factory, args, kwargs = data
+        return factory(*args, **kwargs)
+    return data
 
 
 class Coordinator:
@@ -74,6 +140,8 @@ class Coordinator:
             else 10 * cfg.max_updates
         )
         self.coordinator_evals = 0
+        self.arrivals = 0  # worker returns seen (applied, dropped or crashed)
+        self.since_record = 0  # arrivals since the last residual check
 
     # ----------------------------------------------------------------- #
     # Index selection
@@ -175,6 +243,80 @@ class Coordinator:
             self.x = cand
 
     # ----------------------------------------------------------------- #
+    # Shared real-backend loop machinery (thread / process / ray).  The
+    # virtual backend keeps its own event-loop copies to preserve the
+    # bit-identical golden runs.
+    # ----------------------------------------------------------------- #
+    def plan_round(
+        self, alive: Set[int], round_idx: Sequence[np.ndarray]
+    ) -> List[Tuple[int, FaultProfile, np.ndarray, float, bool]]:
+        """Sample per-worker (delay, crash) plans for one BSP round.
+
+        Draws come from the coordinator rng in worker order, so the fault
+        sequence is reproducible given a seed even though real-backend
+        round *timing* is not.
+        """
+        plans = []
+        for w in sorted(alive):
+            prof = _fault_for(self.cfg, w)
+            delay = prof.sample_delay(self.rng)
+            crashed = prof.sample_crash(self.rng)
+            plans.append((w, prof, round_idx[w], delay, crashed))
+        return plans
+
+    def note_sync_crash(self, prof: FaultProfile, w: int,
+                        alive: Set[int]) -> None:
+        """Account one planned BSP crash (the barrier stall is already paid
+        worker-side): lost in-flight result, permanent exit or rejoin."""
+        self.crashes += 1
+        if prof.restart_after is None:
+            alive.discard(w)
+        else:
+            self.restarts += 1
+
+    def sync_round_tick(self, rounds: int, elapsed) -> Tuple[float, Optional[str]]:
+        """Real-backend round epilogue: barrier overhead, accel cadence,
+        residual record and stop checks.  Returns ``(t, verdict)`` with
+        verdict ``None`` (continue), ``"converged"``/``"diverged"``
+        (assemble the result) or ``"budget"`` (max_wall exceeded)."""
+        cfg = self.cfg
+        if cfg.sync_overhead > 0.0:
+            time.sleep(cfg.sync_overhead)
+        if self.accel is not None and rounds % cfg.fire_every == 0:
+            self.maybe_fire_accel()
+        t = elapsed()
+        res = self.record(t)
+        if not np.isfinite(res) or res > 1e60:
+            return t, "diverged"
+        if self.converged():
+            return t, "converged"
+        if cfg.max_wall is not None and t > cfg.max_wall:
+            return t, "budget"
+        return t, None
+
+    def arrival_tick(self, t: float) -> bool:
+        """Per-arrival bookkeeping shared by every real async backend
+        (thread, process, ray): arrival/record-cadence counters plus every
+        stop condition.  Returns True when the run should stop.  Callers
+        with concurrent arrivals (the thread backend) must hold their
+        coordinator lock.  (The virtual backend keeps its own event-loop
+        copy to preserve bit-identical golden runs.)"""
+        self.arrivals += 1
+        self.since_record += 1
+        stop = self.arrivals >= self.max_arrivals
+        if self.since_record >= self.record_every:
+            res = self.record(t)
+            self.since_record = 0
+            if not np.isfinite(res) or res > 1e60:
+                stop = True
+            elif self.converged():
+                stop = True
+        if self.wu >= self.cfg.max_updates:
+            stop = True
+        if self.cfg.max_wall is not None and t > self.cfg.max_wall:
+            stop = True
+        return stop
+
     def record(self, t: float) -> float:
         self.res_norm = self.problem.residual_norm(self.x)
         self.history.append((t, self.wu, self.res_norm))

@@ -1,0 +1,324 @@
+"""Real-parallelism process-pool executor.
+
+Workers are separate Python interpreters, so evaluations escape the GIL
+entirely — the closest local analogue of the paper's Ray deployment (§4).
+Problem handles do not pickle wholesale (they close over jitted JAX
+callables), so each worker rebuilds its own instance from the problem's
+``factory_spec()`` recipe and warms its jit specializations before the
+clock starts.  The coordinator (parent process) keeps the apply/accel/
+record path of the thread backend; the global iterate ``x`` travels to
+workers through a shared-memory block::
+
+    shm[0]  = applied-update counter (wu) at the coordinator's last write
+    shm[1:] = x
+
+A worker snapshots ``shm`` (under a cross-process lock — no torn reads)
+when it picks up a dispatch, so staleness is measured exactly as in the
+thread backend: ``coord.wu - wu_at_snapshot``.  Fault semantics mirror the
+thread backend: per-worker rngs (spawned from ``cfg.seed``) drive delay and
+crash draws in async mode, the coordinator rng plans them in sync mode, and
+drop/noise filtering stays coordinator-side in ``apply_return``.  One
+divergence: an async crash-restart is counted when the crash *arrives*
+(the worker enforces its downtime before taking the next dispatch), so a
+run that stops mid-downtime may count a restart that never rejoined.
+
+``cfg.compute_time`` is ignored — compute cost is whatever the hardware
+takes.  Process startup (interpreter + JAX import + problem rebuild + jit
+warm-up, easily seconds per worker) happens before ``t0``, so measured
+wall-clock covers only the iteration itself.
+"""
+
+from __future__ import annotations
+
+import queue as queue_mod
+import time
+from multiprocessing import get_context, shared_memory
+from typing import Dict, Set, Tuple
+
+import numpy as np
+
+from ..fixedpoint import FixedPointProblem
+from .base import Executor, register_executor
+from .coordinator import (
+    Coordinator,
+    problem_payload,
+    rebuild_problem,
+    warm_problem,
+    worker_eval,
+)
+from .types import RunConfig, RunResult, _fault_for
+
+__all__ = ["ProcessPoolExecutor", "problem_payload", "rebuild_problem"]
+
+_CTX = get_context("spawn")  # fork is unsafe once JAX/XLA threads exist
+_READY_TIMEOUT_S = 300.0  # interpreter + jax import + jit warm-up per worker
+_POLL_S = 5.0
+
+
+def _worker_main(
+    w: int, payload, cfg: RunConfig, seed_seq, shm_name: str, n: int,
+    shm_lock, task_q, result_q,
+) -> None:
+    """Worker process body: rebuild, warm, then serve dispatches until poison.
+
+    Messages in (``task_q``):
+      ("async", idx)                   — snapshot shm, eval, own-rng faults
+      ("sync", idx, delay, crashed)    — coordinator-planned faults
+      None                             — shut down
+
+    Messages out (``result_q``): ``(w, kind, vals, snap_wu)`` with kind in
+    {"ready", "ok", "crash", "error"}.
+    """
+    shm = None
+    try:
+        problem = rebuild_problem(payload)
+        warm_problem(problem, cfg, worker=w)
+        # Python < 3.13 tracks attached segments too, and the tracker would
+        # unlink the block when any child exits, destroying it for everyone
+        # (cpython #39959) — suppress registration during attach; the parent
+        # owns the segment and unlinks it.
+        from multiprocessing import resource_tracker
+
+        _orig_register = resource_tracker.register
+        resource_tracker.register = (
+            lambda name, rtype: None if rtype == "shared_memory"
+            else _orig_register(name, rtype)
+        )
+        try:
+            shm = shared_memory.SharedMemory(name=shm_name)
+        finally:
+            resource_tracker.register = _orig_register
+        view = np.ndarray(n + 1, dtype=np.float64, buffer=shm.buf)
+        prof = _fault_for(cfg, w)
+        rng = np.random.default_rng(seed_seq)
+        result_q.put((w, "ready", None, 0))
+        while True:
+            task = task_q.get()
+            if task is None:
+                return
+            if task[0] == "sync":
+                _, idx, delay, crashed = task
+                with shm_lock:
+                    snap = view.copy()
+                vals = worker_eval(problem, cfg, snap[1:], idx)
+                if delay > 0.0:
+                    time.sleep(delay)
+                if crashed:
+                    # BSP: the barrier stalls until the worker restarts;
+                    # its in-flight result is lost either way.
+                    if prof.restart_after is not None:
+                        time.sleep(prof.restart_after)
+                    result_q.put((w, "crash", None, int(snap[0])))
+                else:
+                    result_q.put((w, "ok", vals, int(snap[0])))
+                continue
+            _, idx = task
+            with shm_lock:
+                snap = view.copy()
+            vals = worker_eval(problem, cfg, snap[1:], idx)
+            if cfg.async_overhead > 0.0:
+                time.sleep(cfg.async_overhead)
+            delay = prof.sample_delay(rng)
+            if delay > 0.0:
+                time.sleep(delay)
+            if prof.sample_crash(rng):
+                result_q.put((w, "crash", None, int(snap[0])))
+                if prof.restart_after is None:
+                    return  # permanent crash: interpreter exits
+                time.sleep(prof.restart_after)  # downtime before next task
+                continue
+            result_q.put((w, "ok", vals, int(snap[0])))
+    except Exception as e:  # surface rebuild/eval failures to the parent
+        import traceback
+
+        result_q.put((w, "error", f"{e!r}\n{traceback.format_exc()}", 0))
+    finally:
+        if shm is not None:
+            shm.close()
+
+
+@register_executor
+class ProcessPoolExecutor(Executor):
+    """Workers in separate interpreters; wall time is real seconds."""
+
+    name = "process"
+
+    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+        if cfg.mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        payload = problem_payload(problem)
+        coord = Coordinator(problem, cfg)
+        if cfg.accel is not None:
+            problem.full_map(coord.x)  # compile the parent-side accel path
+            # off-clock (workers warm their own paths before reporting ready)
+        shm = shared_memory.SharedMemory(create=True,
+                                         size=8 * (problem.n + 1))
+        shm_lock = _CTX.Lock()
+        view = np.ndarray(problem.n + 1, dtype=np.float64, buffer=shm.buf)
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+        task_qs = [_CTX.Queue() for _ in range(cfg.n_workers)]
+        result_q = _CTX.Queue()
+        procs = [
+            _CTX.Process(
+                target=_worker_main,
+                args=(w, payload, cfg, seeds[w], shm.name, problem.n,
+                      shm_lock, task_qs[w], result_q),
+                daemon=True, name=f"fp-proc-{w}",
+            )
+            for w in range(cfg.n_workers)
+        ]
+        try:
+            self._write_shm(view, shm_lock, coord)
+            for p in procs:
+                p.start()
+            self._await_ready(procs, result_q, cfg.n_workers)
+            if cfg.mode == "sync":
+                return self._run_sync(cfg, coord, view, shm_lock, task_qs,
+                                      result_q, procs)
+            return self._run_async(cfg, coord, view, shm_lock, task_qs,
+                                   result_q, procs)
+        finally:
+            for q in task_qs:
+                try:
+                    q.put_nowait(None)
+                except Exception:
+                    pass
+            deadline = time.monotonic() + 10.0
+            for p in procs:
+                p.join(timeout=max(0.1, deadline - time.monotonic()))
+                if p.is_alive():
+                    p.terminate()
+            for q in task_qs + [result_q]:
+                q.cancel_join_thread()
+                q.close()
+            shm.close()
+            shm.unlink()
+
+    # ----------------------------------------------------------------- #
+    @staticmethod
+    def _write_shm(view: np.ndarray, shm_lock, coord: Coordinator) -> None:
+        with shm_lock:
+            view[0] = coord.wu
+            view[1:] = coord.x
+
+    @staticmethod
+    def _await_ready(procs, result_q, n_workers: int) -> None:
+        deadline = time.monotonic() + _READY_TIMEOUT_S
+        ready: Set[int] = set()
+        while len(ready) < n_workers:
+            w, kind, data, _ = _get_result(result_q, procs, deadline)
+            if kind == "error":
+                raise RuntimeError(f"worker {w} failed during startup: {data}")
+            assert kind == "ready", f"unexpected pre-ready message {kind!r}"
+            ready.add(w)
+
+    # ----------------------------------------------------------------- #
+    def _run_sync(
+        self, cfg: RunConfig, coord: Coordinator, view, shm_lock,
+        task_qs, result_q, procs,
+    ) -> RunResult:
+        t0 = time.perf_counter()
+        rounds = 0
+        alive = set(range(cfg.n_workers))
+        coord.record(0.0)
+        while (coord.wu < cfg.max_updates and alive
+               and coord.arrivals < coord.max_arrivals):
+            rounds += 1
+            self._write_shm(view, shm_lock, coord)
+            plans = coord.plan_round(alive, coord.select_round_indices())
+            by_worker: Dict[int, Tuple] = {}
+            for w, prof, idx, delay, crashed in plans:
+                by_worker[w] = (prof, idx, crashed)
+                task_qs[w].put(("sync", idx, delay, crashed))
+            deadline = time.monotonic() + _READY_TIMEOUT_S
+            for _ in range(len(plans)):
+                w, kind, vals, _snap = _get_result(result_q, procs, deadline)
+                if kind == "error":
+                    raise RuntimeError(f"worker {w} failed: {vals}")
+                coord.arrivals += 1
+                prof, idx, crashed = by_worker[w]
+                if crashed:
+                    coord.note_sync_crash(prof, w, alive)
+                    continue
+                coord.apply_return(idx, vals, prof, staleness=0)
+            t, verdict = coord.sync_round_tick(
+                rounds, lambda: time.perf_counter() - t0)
+            if verdict in ("diverged", "converged"):
+                return coord.result(t, rounds, verdict == "converged")
+            if verdict == "budget":
+                break
+        t = time.perf_counter() - t0
+        return coord.result(t, rounds, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async(
+        self, cfg: RunConfig, coord: Coordinator, view, shm_lock,
+        task_qs, result_q, procs,
+    ) -> RunResult:
+        t0 = time.perf_counter()
+        coord.record(0.0)
+        since_fire = 0
+        alive = set(range(cfg.n_workers))
+        pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
+        stop = False
+
+        def dispatch(w: int) -> None:
+            idx = coord.select_indices(w)
+            pending[w] = idx
+            task_qs[w].put(("async", idx))
+
+        self._write_shm(view, shm_lock, coord)
+        for w in sorted(alive):
+            dispatch(w)
+        while alive and not stop:
+            deadline = time.monotonic() + _READY_TIMEOUT_S
+            w, kind, vals, snap_wu = _get_result(result_q, procs, deadline)
+            if kind == "error":
+                raise RuntimeError(f"worker {w} failed: {vals}")
+            prof = _fault_for(cfg, w)
+            idx = pending.pop(w)
+            redispatch = True
+            if kind == "crash":
+                coord.crashes += 1
+                if prof.restart_after is None:
+                    alive.discard(w)
+                    redispatch = False
+                else:
+                    # Counted on arrival; the worker enforces its downtime
+                    # before it will pick up the redispatched task.
+                    coord.restarts += 1
+            else:
+                applied = coord.apply_return(
+                    idx, vals, prof, staleness=coord.wu - snap_wu)
+                if applied:
+                    since_fire += 1
+                    if (coord.accel is not None
+                            and since_fire >= cfg.fire_every):
+                        coord.maybe_fire_accel()
+                        since_fire = 0
+                self._write_shm(view, shm_lock, coord)
+            stop = coord.arrival_tick(time.perf_counter() - t0)
+            if not stop and redispatch:
+                dispatch(w)
+        t = time.perf_counter() - t0
+        coord.record(t)
+        return coord.result(t, coord.wu, coord.converged())
+
+
+def _get_result(result_q, procs, deadline: float):
+    """Blocking ``result_q.get`` that notices dead children and timeouts."""
+    while True:
+        timeout = min(_POLL_S, deadline - time.monotonic())
+        if timeout <= 0:
+            raise RuntimeError(
+                "timed out waiting for process-backend worker results")
+        try:
+            return result_q.get(timeout=timeout)
+        except queue_mod.Empty:
+            if not any(p.is_alive() for p in procs):
+                try:  # drain results that raced with the exits
+                    return result_q.get_nowait()
+                except queue_mod.Empty:
+                    raise RuntimeError(
+                        "all process-backend workers exited unexpectedly"
+                    ) from None

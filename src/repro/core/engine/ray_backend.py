@@ -1,0 +1,223 @@
+"""Ray-backed executor — the paper's actual §4 runtime.
+
+Workers are Ray actors, each rebuilding the problem from its
+``factory_spec()`` recipe in its own Ray worker process (same payload
+protocol as the process backend).  The coordinator stays local and keeps
+the thread backend's apply/accel/record pattern; iterate snapshots travel
+through the Ray object store (``ray.put`` per dispatch), so staleness is
+``coord.wu`` at dispatch minus ``coord.wu`` at apply — exactly the thread
+backend's accounting.  Fault semantics also mirror the thread backend:
+per-actor rngs drive async delay/crash draws, the coordinator rng plans
+them in sync mode, drop/noise filtering stays coordinator-side.  Async
+crash downtime is enforced by a coordinator-side rejoin schedule (the
+actor itself never sleeps through its downtime, so a kill/stop never waits
+on it).
+
+``ray`` is an optional dependency: when it is not importable this module
+registers the name as *unavailable* instead of an executor class —
+``available_executors()`` omits it (tests and benchmarks skip cleanly) and
+``get_executor("ray")`` raises a message that says what to install.
+
+Connecting to a cluster is the caller's business; if Ray is not already
+initialized, a local instance is started with defaults.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+
+from ..fixedpoint import FixedPointProblem
+from .base import Executor, register_executor, register_unavailable
+from .coordinator import (
+    Coordinator,
+    problem_payload,
+    rebuild_problem,
+    warm_problem,
+    worker_eval,
+)
+from .types import RunConfig, RunResult, _fault_for
+
+try:
+    import ray
+except ImportError:  # pragma: no cover - exercised when ray is installed
+    ray = None
+
+if ray is None:
+    register_unavailable(
+        "ray",
+        "requires the optional 'ray' package (pip install 'ray>=2.0'); "
+        "no other backend depends on it",
+    )
+    __all__: List[str] = []
+else:  # pragma: no cover - this environment has no ray; tested on clusters
+    __all__ = ["RayExecutor"]
+
+    @ray.remote
+    class _RayWorker:
+        """One worker actor: rebuilds the problem, serves eval requests."""
+
+        def __init__(self, w: int, payload, cfg: RunConfig, seed_seq):
+            self.w = w
+            self.cfg = cfg
+            self.problem = rebuild_problem(payload)
+            warm_problem(self.problem, cfg, worker=w)
+            self.prof = _fault_for(cfg, w)
+            self.rng = np.random.default_rng(seed_seq)
+
+        def ready(self) -> bool:
+            return True
+
+        def eval_sync(self, x, idx, delay: float, crashed: bool):
+            vals = worker_eval(self.problem, self.cfg, x, idx)
+            if delay > 0.0:
+                time.sleep(delay)
+            if crashed:
+                # BSP: the barrier stalls until the worker restarts.
+                if self.prof.restart_after is not None:
+                    time.sleep(self.prof.restart_after)
+                return ("crash", None)
+            return ("ok", vals)
+
+        def eval_async(self, x, idx):
+            vals = worker_eval(self.problem, self.cfg, x, idx)
+            if self.cfg.async_overhead > 0.0:
+                time.sleep(self.cfg.async_overhead)
+            delay = self.prof.sample_delay(self.rng)
+            if delay > 0.0:
+                time.sleep(delay)
+            if self.prof.sample_crash(self.rng):
+                return ("crash", None)
+            return ("ok", vals)
+
+    @register_executor
+    class RayExecutor(Executor):
+        """Workers as Ray actors; wall time is real seconds."""
+
+        name = "ray"
+
+        def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+            if cfg.mode not in ("sync", "async"):
+                raise ValueError(f"unknown mode {cfg.mode!r}")
+            if not ray.is_initialized():
+                ray.init(include_dashboard=False, log_to_driver=False)
+            payload = problem_payload(problem)
+            coord = Coordinator(problem, cfg)
+            if cfg.accel is not None:
+                problem.full_map(coord.x)  # compile the accel path off-clock
+            seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+            actors = [
+                _RayWorker.remote(w, payload, cfg, seeds[w])
+                for w in range(cfg.n_workers)
+            ]
+            try:
+                # Startup barrier: rebuild + jit warm-up happens off-clock.
+                ray.get([a.ready.remote() for a in actors])
+                if cfg.mode == "sync":
+                    return self._run_sync(cfg, coord, actors)
+                return self._run_async(cfg, coord, actors)
+            finally:
+                for a in actors:
+                    ray.kill(a, no_restart=True)
+
+        # ------------------------------------------------------------- #
+        def _run_sync(
+            self, cfg: RunConfig, coord: Coordinator, actors
+        ) -> RunResult:
+            t0 = time.perf_counter()
+            rounds = 0
+            alive: Set[int] = set(range(cfg.n_workers))
+            coord.record(0.0)
+            while (coord.wu < cfg.max_updates and alive
+                   and coord.arrivals < coord.max_arrivals):
+                rounds += 1
+                x_ref = ray.put(np.asarray(coord.x))
+                plans = coord.plan_round(alive, coord.select_round_indices())
+                futs = [
+                    actors[w].eval_sync.remote(x_ref, idx, delay, crashed)
+                    for w, _, idx, delay, crashed in plans
+                ]
+                for (w, prof, idx, _, crashed), fut in zip(plans, futs):
+                    kind, vals = ray.get(fut)
+                    coord.arrivals += 1
+                    if crashed:
+                        coord.note_sync_crash(prof, w, alive)
+                        continue
+                    coord.apply_return(idx, vals, prof, staleness=0)
+                t, verdict = coord.sync_round_tick(
+                    rounds, lambda: time.perf_counter() - t0)
+                if verdict in ("diverged", "converged"):
+                    return coord.result(t, rounds, verdict == "converged")
+                if verdict == "budget":
+                    break
+            t = time.perf_counter() - t0
+            return coord.result(t, rounds, coord.converged())
+
+        # ------------------------------------------------------------- #
+        def _run_async(
+            self, cfg: RunConfig, coord: Coordinator, actors
+        ) -> RunResult:
+            t0 = time.perf_counter()
+            coord.record(0.0)
+            since_fire = 0
+            alive: Set[int] = set(range(cfg.n_workers))
+            futures: Dict = {}  # ObjectRef -> (worker, idx, wu at dispatch)
+            rejoin: List[Tuple[float, int]] = []  # heap of (t, worker)
+            stop = False
+
+            def elapsed() -> float:
+                return time.perf_counter() - t0
+
+            def dispatch(w: int) -> None:
+                idx = coord.select_indices(w)
+                x_ref = ray.put(np.asarray(coord.x))  # object-store snapshot
+                fut = actors[w].eval_async.remote(x_ref, idx)
+                futures[fut] = (w, idx, coord.wu)
+
+            for w in sorted(alive):
+                dispatch(w)
+            while not stop and alive and (futures or rejoin):
+                now = elapsed()
+                while rejoin and rejoin[0][0] <= now:
+                    _, w = heapq.heappop(rejoin)
+                    coord.restarts += 1
+                    dispatch(w)
+                if not futures:  # every live worker is in downtime
+                    time.sleep(max(0.0, rejoin[0][0] - now))
+                    continue
+                timeout = (max(0.0, rejoin[0][0] - now) if rejoin else None)
+                done, _ = ray.wait(list(futures), num_returns=1,
+                                   timeout=timeout)
+                if not done:
+                    continue  # a rejoin came due first
+                fut = done[0]
+                w, idx, launch_wu = futures.pop(fut)
+                kind, vals = ray.get(fut)
+                prof = _fault_for(cfg, w)
+                redispatch = True
+                if kind == "crash":
+                    coord.crashes += 1
+                    redispatch = False
+                    if prof.restart_after is None:
+                        alive.discard(w)
+                    else:
+                        heapq.heappush(rejoin,
+                                       (elapsed() + prof.restart_after, w))
+                else:
+                    applied = coord.apply_return(
+                        idx, vals, prof, staleness=coord.wu - launch_wu)
+                    if applied:
+                        since_fire += 1
+                        if (coord.accel is not None
+                                and since_fire >= cfg.fire_every):
+                            coord.maybe_fire_accel()
+                            since_fire = 0
+                stop = coord.arrival_tick(elapsed())
+                if not stop and redispatch:
+                    dispatch(w)
+            t = elapsed()
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())

@@ -28,7 +28,7 @@ import numpy as np
 
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor
-from .coordinator import Coordinator, worker_eval
+from .coordinator import Coordinator, warm_problem, worker_eval
 from .types import FaultProfile, RunConfig, RunResult, _fault_for
 
 __all__ = ["ThreadPoolExecutor"]
@@ -45,22 +45,7 @@ class ThreadPoolExecutor(Executor):
         # Warm every jit specialization the run will hit (per-block shapes,
         # selection-sized blocks, the accel/residual full-map path) before
         # the clock starts, so compile time doesn't skew wall-clock.
-        for blk in coord.blocks:
-            worker_eval(problem, cfg, coord.x, blk)
-        if cfg.selection != "fixed":
-            # Warm the exact index-set sizes the run will produce: k for
-            # async per-dispatch selection, the round-partition chunk sizes
-            # for sync (min(p*k, n) split across p workers).  Plain aranges
-            # keep the coordinator rng untouched.
-            k = cfg.selection_k or max(1, problem.n // cfg.n_workers)
-            sizes = {min(k, problem.n)}
-            if cfg.mode == "sync":
-                total = min(cfg.n_workers * k, problem.n)
-                sizes = {len(c) for c in
-                         np.array_split(np.arange(total), cfg.n_workers)}
-            for sz in sizes:
-                if sz:
-                    worker_eval(problem, cfg, coord.x, np.arange(sz))
+        warm_problem(problem, cfg)
         if cfg.accel is not None:
             problem.full_map(coord.x)
         problem.residual_norm(coord.x)
@@ -93,21 +78,14 @@ class ThreadPoolExecutor(Executor):
     ) -> RunResult:
         t0 = time.perf_counter()
         rounds = 0
-        arrivals = 0
         alive = set(range(cfg.n_workers))
         coord.record(0.0)
         with _Pool(max_workers=cfg.n_workers) as pool:
             while (coord.wu < cfg.max_updates and alive
-                   and arrivals < coord.max_arrivals):
+                   and coord.arrivals < coord.max_arrivals):
                 rounds += 1
-                round_idx = coord.select_round_indices()
                 x_snap = coord.x.copy()
-                plans = []
-                for w in sorted(alive):
-                    prof = _fault_for(cfg, w)
-                    delay = prof.sample_delay(coord.rng)
-                    crashed = prof.sample_crash(coord.rng)
-                    plans.append((w, prof, round_idx[w], delay, crashed))
+                plans = coord.plan_round(alive, coord.select_round_indices())
                 futs = [
                     pool.submit(self._sync_task, problem, cfg, x_snap, idx,
                                 delay, crashed, prof)
@@ -115,26 +93,16 @@ class ThreadPoolExecutor(Executor):
                 ]
                 for (w, prof, idx, _, crashed), fut in zip(plans, futs):
                     vals = fut.result()
-                    arrivals += 1
+                    coord.arrivals += 1
                     if crashed:
-                        coord.crashes += 1
-                        if prof.restart_after is None:
-                            alive.discard(w)
-                        else:
-                            coord.restarts += 1
+                        coord.note_sync_crash(prof, w, alive)
                         continue
                     coord.apply_return(idx, vals, prof, staleness=0)
-                if cfg.sync_overhead > 0.0:
-                    time.sleep(cfg.sync_overhead)
-                if coord.accel is not None and rounds % cfg.fire_every == 0:
-                    coord.maybe_fire_accel()
-                t = time.perf_counter() - t0
-                res = coord.record(t)
-                if not np.isfinite(res) or res > 1e60:
-                    return coord.result(t, rounds, False)
-                if coord.converged():
-                    return coord.result(t, rounds, True)
-                if cfg.max_wall is not None and t > cfg.max_wall:
+                t, verdict = coord.sync_round_tick(
+                    rounds, lambda: time.perf_counter() - t0)
+                if verdict in ("diverged", "converged"):
+                    return coord.result(t, rounds, verdict == "converged")
+                if verdict == "budget":
                     break
         t = time.perf_counter() - t0
         return coord.result(t, rounds, coord.converged())
@@ -145,7 +113,7 @@ class ThreadPoolExecutor(Executor):
     ) -> RunResult:
         lock = threading.Lock()
         stop = threading.Event()
-        state = {"since_record": 0, "since_fire": 0, "arrivals": 0}
+        state = {"since_fire": 0}  # arrival/record counters live on coord
         # Per-worker generators for delay/crash draws keep the coordinator
         # rng (drop/noise/selection) behind the lock and everything else out.
         seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
@@ -178,19 +146,7 @@ class ThreadPoolExecutor(Executor):
                     # all-crashing worker set would spin forever.
                     with lock:
                         coord.crashes += 1
-                        state["since_record"] += 1
-                        state["arrivals"] += 1
-                        if state["arrivals"] >= coord.max_arrivals:
-                            stop.set()
-                        t = elapsed()
-                        if state["since_record"] >= coord.record_every:
-                            res = coord.record(t)
-                            state["since_record"] = 0
-                            if not np.isfinite(res) or res > 1e60:
-                                stop.set()
-                            elif coord.converged():
-                                stop.set()
-                        if cfg.max_wall is not None and t > cfg.max_wall:
+                        if coord.arrival_tick(elapsed()):
                             stop.set()
                     if prof.restart_after is None or stop.is_set():
                         return  # permanent crash (or run over): thread exits
@@ -210,21 +166,7 @@ class ThreadPoolExecutor(Executor):
                                 and state["since_fire"] >= cfg.fire_every):
                             coord.maybe_fire_accel()
                             state["since_fire"] = 0
-                    state["since_record"] += 1
-                    state["arrivals"] += 1
-                    if state["arrivals"] >= coord.max_arrivals:
-                        stop.set()
-                    t = elapsed()
-                    if state["since_record"] >= coord.record_every:
-                        res = coord.record(t)
-                        state["since_record"] = 0
-                        if not np.isfinite(res) or res > 1e60:
-                            stop.set()
-                        elif coord.converged():
-                            stop.set()
-                    if coord.wu >= cfg.max_updates:
-                        stop.set()
-                    if cfg.max_wall is not None and t > cfg.max_wall:
+                    if coord.arrival_tick(elapsed()):
                         stop.set()
 
         threads = [

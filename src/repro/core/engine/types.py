@@ -1,8 +1,9 @@
 """Shared engine datatypes: fault profiles, run configuration, run results.
 
 These are backend-agnostic: the same :class:`RunConfig` drives the
-deterministic virtual-time simulator and the real-concurrency thread-pool
-backend (``cfg.executor`` selects which — see :mod:`repro.core.engine.base`).
+deterministic virtual-time simulator and the real-concurrency thread,
+process, and Ray backends (``cfg.executor`` selects which — see
+:mod:`repro.core.engine.base`).
 """
 
 from __future__ import annotations
@@ -25,9 +26,12 @@ class FaultProfile:
     fault channels.  ``crash_prob``/``restart_after`` extend them with
     worker churn: with probability ``crash_prob`` per update the worker
     crashes — its in-flight result is lost — and it rejoins after
-    ``restart_after`` seconds (``None`` means it never comes back).  Both
-    backends honour the same semantics; in the virtual-time backend the
-    restart costs virtual seconds, in the thread backend real ones.
+    ``restart_after`` seconds (``None`` means it never comes back).  Every
+    backend honours the same semantics; the virtual-time backend charges
+    virtual seconds for delays and downtime, the thread/process/ray
+    backends sleep through real ones.  (One accounting nuance: the process
+    backend counts a restart when the crash arrives, the others when the
+    downtime ends — see the process module docstring.)
     """
 
     delay_mean: float = 0.0  # seconds added per update (virtual or real)
@@ -55,7 +59,7 @@ class RunConfig:
     n_workers: int = 4
     mode: str = "async"  # "sync" | "async"
     # --- execution backend (see repro.core.engine.base) ------------------- #
-    executor: str = "virtual"  # "virtual" | "thread"
+    executor: str = "virtual"  # "virtual" | "thread" | "process" | "ray"
     # --- acceleration -------------------------------------------------- #
     accel: Optional[AndersonConfig] = None
     accel_mode: str = "coordinator"  # "monitor" | "coordinator" | "periodic"

@@ -91,6 +91,20 @@ class FixedPointProblem(abc.ABC):
     def default_blocks(self, p: int) -> List[np.ndarray]:
         return contiguous_blocks(self.n, p)
 
+    def factory_spec(self):
+        """Picklable recipe ``(factory, args, kwargs)`` to rebuild this problem.
+
+        Multi-interpreter executors (process, ray) cannot ship problem
+        instances that close over jitted JAX callables; instead they ship
+        this spec and each worker calls ``factory(*args, **kwargs)`` in its
+        own interpreter.  The factory must be importable by reference (a
+        top-level class or function) and args/kwargs must pickle.  ``None``
+        (the default) means "no recipe" — those executors then fall back to
+        pickling the instance itself and fail with a clear error if that is
+        impossible.
+        """
+        return None
+
     def exact_solution(self) -> Optional[np.ndarray]:
         """Known solution for validation, if available."""
         return None

@@ -86,6 +86,7 @@ class JacobiProblem(FixedPointProblem):
         self.n = grid * grid
         self.sweeps = sweeps
         self.backend = backend
+        self.seed = seed
         rng = np.random.default_rng(seed)
         # Random right-hand side: the solution A^{-1} b is dominated by the
         # smooth (slow) Laplacian modes, which is the regime in which the
@@ -122,6 +123,10 @@ class JacobiProblem(FixedPointProblem):
         if len(indices) > 1 and indices[1] - indices[0] != 1:
             return None, None
         return i0 // self.g, i1 // self.g
+
+    def factory_spec(self):
+        return (JacobiProblem, (), dict(grid=self.g, sweeps=self.sweeps,
+                                        seed=self.seed, backend=self.backend))
 
     # ----------------------------------------------------------------- #
     def residual(self, x: np.ndarray) -> np.ndarray:

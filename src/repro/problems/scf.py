@@ -43,6 +43,7 @@ class PPPChain:
 
     def __init__(self, n_atoms: int = 8, U: float = 2.0, t: float = 1.0):
         assert n_atoms % 2 == 0, "half filling requires even n_atoms"
+        self._ctor = dict(n_atoms=n_atoms, U=U, t=t)
         self.n = n_atoms
         self.U = U
         self.t = t
@@ -136,6 +137,15 @@ class UHFPPP:
         return float(e) + c.e_core
 
 
+def _rebuild_scf(chain_kwargs, guess):
+    """Factory for multi-interpreter executors (see ``factory_spec``)."""
+    return SCFProblem(PPPChain(**chain_kwargs), guess=guess)
+
+
+def _rebuild_uhf_scf(chain_kwargs, spin_seed):
+    return UHFSCFProblem(PPPChain(**chain_kwargs), spin_seed=spin_seed)
+
+
 class UHFSCFProblem(FixedPointProblem):
     """UHF-PPP as a partitioned fixed-point problem; state = (P_up | P_dn).
 
@@ -206,6 +216,9 @@ class UHFSCFProblem(FixedPointProblem):
 
     def dependency_counts(self) -> None:
         return None  # dense coupling
+
+    def factory_spec(self):
+        return (_rebuild_uhf_scf, (self.chain._ctor, self.spin_seed), {})
 
     def reference_energy(self, max_iter: int = 400, tol: float = 1e-11) -> float:
         """Lowest UHF energy over PM / SDW(+) / SDW(-) DIIS starts."""
@@ -284,6 +297,10 @@ class SCFProblem(FixedPointProblem):
     # --- structure: dense coupling through the two-electron integrals --- #
     def dependency_counts(self) -> None:
         return None  # dense => coupling density 1 (see core.coupling)
+
+    def factory_spec(self):
+        guess = None if self._guess is None else np.asarray(self._guess)
+        return (_rebuild_scf, (self.chain._ctor, guess), {})
 
     # --- reference ------------------------------------------------------ #
     def reference_solution(self, max_iter: int = 500, tol: float = 1e-12,

@@ -57,6 +57,7 @@ class GarnetMDP:
     def __init__(self, S: int = 500, A: int = 4, b: int = 5, gamma: float = 0.95,
                  seed: int = 0):
         self.S, self.A, self.b, self.gamma = S, A, b, gamma
+        self._ctor = dict(S=S, A=A, b=b, gamma=gamma, seed=seed)
         rng = np.random.default_rng(seed)
         idx = np.empty((S, A, b), dtype=np.int32)
         for s in range(S):
@@ -92,6 +93,7 @@ class GridWorldMDP(GarnetMDP):
 
     def __init__(self, g: int = 10, gamma: float = 0.95):
         self.S, self.A, self.b, self.gamma = g * g, 4, 1, gamma
+        self._ctor = dict(g=g, gamma=gamma)
         self.g = g
         S = self.S
         idx = np.zeros((S, 4, 1), dtype=np.int32)
@@ -118,6 +120,15 @@ class GridWorldMDP(GarnetMDP):
             d = r + c
             V[s] = -(1.0 - gamma**d) / (1.0 - gamma)
         return V
+
+
+def _rebuild_vi(mdp_cls, mdp_kwargs):
+    """Factory for multi-interpreter executors (see ``factory_spec``)."""
+    return ValueIterationProblem(mdp_cls(**mdp_kwargs))
+
+
+def _rebuild_policy_eval(mdp_cls, mdp_kwargs, policy):
+    return PolicyEvaluationProblem(mdp_cls(**mdp_kwargs), policy=policy)
 
 
 class ValueIterationProblem(FixedPointProblem):
@@ -155,6 +166,12 @@ class ValueIterationProblem(FixedPointProblem):
             self._sol = V
         return self._sol
 
+    def factory_spec(self):
+        ctor = getattr(self.mdp, "_ctor", None)
+        if ctor is None:
+            return None
+        return (_rebuild_vi, (type(self.mdp), ctor), {})
+
     # --- structure ------------------------------------------------------ #
     def dependency_counts(self) -> np.ndarray:
         idx = np.asarray(self.mdp.idx).reshape(self.n, -1)
@@ -181,6 +198,13 @@ class PolicyEvaluationProblem(ValueIterationProblem):
             V_star = ValueIterationProblem(mdp).exact_solution()
             policy = mdp.greedy_policy(V_star)
         self.policy = jnp.asarray(policy.astype(np.int32))
+
+    def factory_spec(self):
+        ctor = getattr(self.mdp, "_ctor", None)
+        if ctor is None:
+            return None
+        return (_rebuild_policy_eval,
+                (type(self.mdp), ctor, np.asarray(self.policy)), {})
 
     def full_map(self, x: np.ndarray) -> np.ndarray:
         return np.asarray(_bellman_policy(

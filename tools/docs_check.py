@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Docs consistency gate (wired into `make smoke` via `make docs-check`).
+
+Fails when:
+- an intra-repo markdown link in README.md or docs/*.md points at a file
+  that does not exist;
+- the executor table in README.md (the table after the
+  ``<!-- executor-table -->`` marker) disagrees with the engine registry
+  (``known_executors()``: registered backends plus known-but-unavailable
+  ones, so the table is stable whether or not optional deps are installed).
+
+Run directly:  PYTHONPATH=src python tools/docs_check.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+# [text](target) — target captured up to the closing paren, no whitespace.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TABLE_MARKER = "<!-- executor-table -->"
+
+
+def check_links(errors: list) -> int:
+    n = 0
+    for doc in DOCS:
+        for m in LINK_RE.finditer(doc.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # same-document anchor
+                continue
+            n += 1
+            if not (doc.parent / path).resolve().exists():
+                errors.append(
+                    f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return n
+
+
+def check_executor_table(errors: list) -> None:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core import known_executors
+
+    text = (ROOT / "README.md").read_text()
+    if TABLE_MARKER not in text:
+        errors.append(f"README.md: missing {TABLE_MARKER} marker")
+        return
+    names = set()
+    for line in text.split(TABLE_MARKER, 1)[1].splitlines():
+        line = line.strip()
+        if names and not line.startswith("|"):
+            break  # end of the table
+        m = re.match(r"\|\s*`(\w+)`", line)
+        if m:
+            names.add(m.group(1))
+    known = set(known_executors())
+    if names != known:
+        errors.append(
+            "README.md executor table does not match the engine registry: "
+            f"table={sorted(names)} registry={sorted(known)}")
+
+
+def main() -> None:
+    errors: list = []
+    n_links = check_links(errors)
+    check_executor_table(errors)
+    if errors:
+        print("docs-check: FAIL")
+        for e in errors:
+            print(f"  - {e}")
+        raise SystemExit(1)
+    print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links, "
+          "executor table matches registry)")
+
+
+if __name__ == "__main__":
+    main()
