@@ -6,16 +6,22 @@
 # `make docs-check` — docs consistency: intra-repo links in README.md/docs/
 #                     resolve, and the README executor table matches the
 #                     engine registry (tools/docs_check.py).
-# `make smoke`      — docs-check + ~2 min real-concurrency benchmark:
-#                     sync-vs-async under a 100 ms straggler measured on the
-#                     thread AND process backends (asserts the paper's >1.5x
-#                     async speedup ordering on measured wall-clock).
+# `make perf`       — coordinator hot-path microbenchmark + regression gate
+#                     (benchmarks/perf_hotpath.py): >=2x arrivals/sec at
+#                     Jacobi g=512 and >=5x faster Anderson fires vs the
+#                     committed pre-PR baseline, warm process pool must
+#                     reuse its workers.  Rewrites BENCH_hotpath.json.
+# `make smoke`      — docs-check + perf gate + ~2 min real-concurrency
+#                     benchmark: sync-vs-async under a 100 ms straggler
+#                     measured on the thread AND process backends (asserts
+#                     the paper's >1.5x async speedup ordering on measured
+#                     wall-clock).
 # `make bench`      — the full benchmark suite, including the measured
 #                     Table 2 delay sweep on every available backend (slow).
 
 PYTHON ?= python
 
-.PHONY: test smoke bench docs-check
+.PHONY: test smoke bench docs-check perf
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -23,7 +29,10 @@ test:
 docs-check:
 	PYTHONPATH=src $(PYTHON) tools/docs_check.py
 
-smoke: docs-check
+perf:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.perf_hotpath --check
+
+smoke: docs-check perf
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

@@ -1,0 +1,294 @@
+"""Coordinator hot-path microbenchmark + regression gate (BENCH_hotpath.json).
+
+Measures the three costs the hot-path overhaul targeted, at small and large
+state sizes:
+
+1. **arrivals/sec** — the coordinator apply path (``apply_return`` +
+   ``arrival_tick``) on precomputed worker returns, with the residual
+   record cadence pushed out of the way so the per-arrival cost itself is
+   visible.  Jacobi g=64 vs g=512 (identity projection: O(block) writes),
+   VI S=2000, and SCF n_ao=32 (non-trivial projection: the per-arrival
+   symmetrization is semantics and stays).
+2. **time per Anderson/DIIS fire** — ``AndersonState.push`` + ``propose``
+   at window m=5, in both Gram modes (``exact`` is bit-compatible with the
+   pre-rewrite trajectories; ``incremental`` is the O(h·n) fire).
+3. **process-pool run latency** — a cold ``run()`` (spawn + JAX import +
+   jit warm-up) vs a warm one on the same problem, plus the worker-pid
+   check proving the warm run spawned zero new interpreters.
+
+``PRE_PR_BASELINE`` pins the same metrics measured at the commit before the
+overhaul (same container, 2-core CPU); ``--check`` (the ``make perf`` gate)
+asserts generous floors against it: >=2x arrivals/sec at Jacobi g=512,
+>=5x faster accel fires at n=262144, and a warm pool run that reuses every
+worker pid.  The ratio gates compare against *this container's* baseline,
+so on very different hardware they may mis-trip in either direction — set
+``REPRO_PERF_SKIP_GATE=1`` to record measurements without gating (the
+pool-reuse check is machine-independent and always applies).  Results are
+written to ``BENCH_hotpath.json`` at the repo root so the perf trajectory
+is tracked in-tree.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hotpath [--check] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    AndersonConfig,
+    FaultProfile,
+    RunConfig,
+    pool_stats,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.core.anderson import AndersonState
+from repro.core.engine.coordinator import Coordinator
+from repro.problems import (
+    GarnetMDP,
+    JacobiProblem,
+    PPPChain,
+    SCFProblem,
+    ValueIterationProblem,
+)
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_hotpath.json"
+
+#: measured at the commit before the hot-path overhaul (PR 3), same machine
+#: (2-core CPU container) — the --check gates compare against these.
+PRE_PR_BASELINE = {
+    "arrivals_per_sec": {
+        "jacobi_g64": 140587.0,
+        "jacobi_g512": 4509.0,
+        "vi_s2000": 238721.0,
+        "scf_n32": 90526.0,
+    },
+    "accel_fire_sec": {
+        "n4096_m5": 3.481e-4,
+        "n262144_m5": 1.205e-1,
+    },
+    "process_run_sec": {"first": 4.29, "second": 3.91},
+}
+
+#: generous regression floors (see module docstring)
+GATE_ARRIVALS_X = 2.0     # jacobi_g512 arrivals/sec vs baseline
+GATE_FIRE_X = 5.0         # accel fire time at n=262144, m=5 vs baseline
+GATE_WARM_RUN_S = 1.0     # a warm pooled run must cost well under a spawn
+
+
+def _bench(fn, min_time=0.25, min_reps=3) -> float:
+    """Best-of-reps seconds per fn() call (fn batches enough work to time).
+
+    The minimum, not the mean: transient load from whatever ran just
+    before (CI steps share these cores) inflates individual reps by 2-3x,
+    and the gate should measure the code, not the neighborhood."""
+    fn()  # warm
+    best, reps, t0 = float("inf"), 0, time.perf_counter()
+    while True:
+        t1 = time.perf_counter()
+        fn()
+        t2 = time.perf_counter()
+        best = min(best, t2 - t1)
+        reps += 1
+        if t2 - t0 >= min_time and reps >= min_reps:
+            return best
+
+
+def arrivals_per_sec(problem, n_workers=4, k=64) -> float:
+    """apply_return + arrival_tick throughput on precomputed returns."""
+    cfg = RunConfig(mode="async", n_workers=n_workers, max_updates=10**9,
+                    max_arrivals=10**9, record_every=10**9, compute_time=1e-3)
+    coord = Coordinator(problem, cfg)
+    prof = FaultProfile()
+    vals = [np.asarray(problem.block_update(coord.x, blk))
+            for blk in coord.blocks]
+
+    def one():
+        for i in range(k):
+            w = i % n_workers
+            coord.apply_return(coord.blocks[w], vals[w], prof, staleness=3)
+            coord.arrival_tick(0.0)
+
+    return k / _bench(one)
+
+
+def accel_fire_sec(n, m=5, beta=1.0, gram="exact", rounds=4) -> float:
+    """Seconds per (push + propose) cycle on a full window."""
+    rng = np.random.default_rng(0)
+    pool = [(rng.standard_normal(n), rng.standard_normal(n))
+            for _ in range(8)]
+    st = AndersonState(AndersonConfig(m=m, beta=beta, gram=gram))
+    for x, g in pool[:m + 1]:
+        st.push(x, g)
+    st.propose()
+    i = [0]
+
+    def one():
+        for _ in range(rounds):
+            x, g = pool[i[0] % len(pool)]
+            i[0] += 1
+            st.push(x, g)
+            st.propose()
+
+    return _bench(one) / rounds
+
+
+def pool_run_latency() -> dict:
+    """Cold vs warm process-backend run on the same problem."""
+    shutdown_pools()  # make the first run honestly cold
+    prob = JacobiProblem(grid=8, sweeps=3, seed=0)
+    cfg = RunConfig(mode="async", executor="process", n_workers=2,
+                    tol=1e-10, max_updates=60)
+    t0 = time.perf_counter()
+    run_fixed_point(prob, cfg)
+    t1 = time.perf_counter()
+    pids_cold = [v["pids"] for v in pool_stats().values()]
+    run_fixed_point(prob, cfg)
+    t2 = time.perf_counter()
+    pids_warm = [v["pids"] for v in pool_stats().values()]
+    shutdown_pools()
+    return {
+        "first": t1 - t0,
+        "second": t2 - t1,
+        "workers_reused": pids_cold == pids_warm and bool(pids_cold),
+    }
+
+
+def measure(fast: bool = False) -> dict:
+    cases = {
+        "jacobi_g64": lambda: JacobiProblem(grid=64, sweeps=5, seed=0),
+        "vi_s2000": lambda: ValueIterationProblem(
+            GarnetMDP(S=2000, A=4, b=5, gamma=0.95, seed=0)),
+        "scf_n32": lambda: SCFProblem(PPPChain(n_atoms=32)),
+    }
+    if not fast:  # the large-n case the --check gate watches
+        cases["jacobi_g512"] = lambda: JacobiProblem(grid=512, sweeps=5,
+                                                     seed=0)
+    cur = {"arrivals_per_sec": {}, "accel_fire_sec": {},
+           "accel_fire_incremental_sec": {}}
+    for name, factory in cases.items():
+        cur["arrivals_per_sec"][name] = arrivals_per_sec(factory())
+    for n in (4096,) if fast else (4096, 262144):
+        key = f"n{n}_m5"
+        cur["accel_fire_sec"][key] = accel_fire_sec(n, gram="exact")
+        cur["accel_fire_incremental_sec"][key] = accel_fire_sec(
+            n, gram="incremental")
+    cur["process_run_sec"] = pool_run_latency()
+    return cur
+
+
+def check(cur: dict) -> list:
+    """Regression gates vs PRE_PR_BASELINE; returns failure strings."""
+    fails = []
+    base = PRE_PR_BASELINE
+    skip_baseline_gates = os.environ.get("REPRO_PERF_SKIP_GATE") == "1"
+    if not skip_baseline_gates:
+        key = "jacobi_g512"
+        if key in cur["arrivals_per_sec"]:
+            x = cur["arrivals_per_sec"][key] / base["arrivals_per_sec"][key]
+            if x < GATE_ARRIVALS_X:
+                fails.append(
+                    f"arrivals/sec {key}: {x:.2f}x < {GATE_ARRIVALS_X}x")
+        key = "n262144_m5"
+        if key in cur["accel_fire_sec"]:
+            x = base["accel_fire_sec"][key] / cur["accel_fire_sec"][key]
+            if x < GATE_FIRE_X:
+                fails.append(f"accel fire {key}: {x:.2f}x < {GATE_FIRE_X}x")
+    pool = cur["process_run_sec"]
+    if not pool["workers_reused"]:
+        fails.append("warm process run did not reuse the worker pool")
+    if not skip_baseline_gates and pool["second"] > GATE_WARM_RUN_S:
+        fails.append(f"warm process run took {pool['second']:.2f}s "
+                     f"> {GATE_WARM_RUN_S}s")
+    return fails
+
+
+def _rows(cur: dict) -> list:
+    rows = []
+    base = PRE_PR_BASELINE
+    for name, v in cur["arrivals_per_sec"].items():
+        b = base["arrivals_per_sec"].get(name)
+        rows.append(row(f"hotpath_arrivals_{name}", 1e6 / v,
+                        f"{v:.0f}/s ({v / b:.1f}x pre-PR)" if b else f"{v:.0f}/s"))
+    for key, v in cur["accel_fire_sec"].items():
+        b = base["accel_fire_sec"].get(key)
+        rows.append(row(f"hotpath_fire_{key}", v * 1e6,
+                        f"{b / v:.1f}x pre-PR" if b else ""))
+    for key, v in cur["accel_fire_incremental_sec"].items():
+        b = base["accel_fire_sec"].get(key)
+        rows.append(row(f"hotpath_fire_incr_{key}", v * 1e6,
+                        f"{b / v:.1f}x pre-PR" if b else ""))
+    pool = cur["process_run_sec"]
+    rows.append(row("hotpath_pool_cold_run", pool["first"] * 1e6,
+                    f"warm={pool['second']*1e3:.0f}ms "
+                    f"reused={pool['workers_reused']}"))
+    return rows
+
+
+def _persist(cur: dict) -> None:
+    """Write BENCH_hotpath.json (the schema tools/docs_check.py gates on)."""
+    out = {
+        "description": "coordinator hot-path microbenchmark "
+                       "(see benchmarks/perf_hotpath.py and "
+                       "docs/architecture.md, 'coordinator cost model')",
+        "baseline_pre_pr": PRE_PR_BASELINE,
+        "current": cur,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point: measure, persist, report, return rows.
+
+    Only the machine-independent pool-reuse contract is a hard failure
+    here; baseline-relative ratios are reported as warning rows (they are
+    pinned to this repo's CI container — `make perf --check` is the strict
+    gate on that machine, `REPRO_PERF_SKIP_GATE=1` its escape hatch)."""
+    cur = measure(fast=fast)
+    _persist(cur)
+    if not cur["process_run_sec"]["workers_reused"]:
+        raise AssertionError(
+            "hot-path regression: warm process run did not reuse the pool")
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("hotpath_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the large-n cases (disables most gates)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when a regression gate fails")
+    args = ap.parse_args()
+    cur = measure(fast=args.fast)
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    _persist(cur)
+    print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("perf-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gates = ("pool-reuse only (--fast skips the large-n ratio gates)"
+                 if args.fast else
+                 "arrivals >=2x, accel fire >=5x, warm pool reused")
+        print(f"perf-check: OK ({gates})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

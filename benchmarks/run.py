@@ -23,6 +23,7 @@ MODULES = [
     "async_dp_lm",        # beyond-paper (EXPERIMENTS §Beyond-paper)
     "kernels_bench",      # kernel micro-bench + agreement
     "real_async",         # measured Table 2 sweep on all real backends
+    "perf_hotpath",       # coordinator hot-path gate (BENCH_hotpath.json)
 ]
 
 # ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and

@@ -22,8 +22,11 @@ from .engine import (
     get_executor,
     known_executors,
     measure_compute,
+    pool_stats,
+    process_pools,
     register_executor,
     run_fixed_point,
+    shutdown_pools,
 )
 from .coupling import (
     block_internal_coupling,
@@ -50,6 +53,9 @@ __all__ = [
     "available_executors",
     "known_executors",
     "measure_compute",
+    "pool_stats",
+    "process_pools",
+    "shutdown_pools",
     "FixedPointProblem",
     "contiguous_blocks",
     "coupling_density",

@@ -27,7 +27,12 @@ from .base import (
     register_unavailable,
 )
 from .coordinator import Coordinator, measure_compute, worker_eval
-from .process import ProcessPoolExecutor
+from .process import (
+    ProcessPoolExecutor,
+    pool_stats,
+    process_pools,
+    shutdown_pools,
+)
 from .threadpool import ThreadPoolExecutor
 from .types import FaultProfile, RunConfig, RunResult
 from .virtual_time import VirtualTimeExecutor
@@ -54,6 +59,9 @@ __all__ = [
     "known_executors",
     "measure_compute",
     "worker_eval",
+    "pool_stats",
+    "process_pools",
+    "shutdown_pools",
 ]
 
 

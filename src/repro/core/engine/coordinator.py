@@ -18,7 +18,7 @@ from typing import List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from ..anderson import AndersonState
-from ..fixedpoint import FixedPointProblem
+from ..fixedpoint import FixedPointProblem, as_block_slice, restrict
 from .types import FaultProfile, RunConfig, RunResult, _fault_for, _writable
 
 __all__ = [
@@ -49,13 +49,13 @@ def worker_eval(
 ) -> np.ndarray:
     """The worker computation (on its stale snapshot)."""
     if cfg.return_mode == "full_map":
-        g = problem.full_map(x_snapshot)
-        return np.asarray(g)[indices]
+        return restrict(np.asarray(problem.full_map(x_snapshot)), indices)
     return np.asarray(problem.block_update(x_snapshot, indices))
 
 
 def warm_problem(problem: FixedPointProblem, cfg: RunConfig,
-                 worker: Optional[int] = None) -> None:
+                 worker: Optional[int] = None,
+                 blocks: Optional[Sequence[np.ndarray]] = None) -> None:
     """Compile every jit specialization a run's dispatches will hit.
 
     Real backends call this before starting the clock so compile time never
@@ -64,9 +64,14 @@ def warm_problem(problem: FixedPointProblem, cfg: RunConfig,
     worker's own block (per-interpreter workers — process, ray — each warm
     themselves).  Selection warming uses plain aranges of the exact index-
     set sizes the run will produce, leaving the coordinator rng untouched.
+
+    ``blocks`` lets callers pass the partition the run will actually
+    dispatch (the coordinator memoizes it at construction); when omitted it
+    is re-derived from the problem's defaults.
     """
     x0 = problem.initial()
-    blocks = problem.default_blocks(cfg.n_workers)
+    if blocks is None:
+        blocks = problem.default_blocks(cfg.n_workers)
     for blk in (blocks if worker is None else [blocks[worker]]):
         worker_eval(problem, cfg, x0, blk)
     if cfg.selection != "fixed":
@@ -133,6 +138,18 @@ class Coordinator:
             AndersonState(cfg.accel) if cfg.accel is not None else None
         )
         self.blocks = problem.default_blocks(cfg.n_workers)
+        # Hot-path bookkeeping: identity projections skip the per-arrival
+        # project/copy round trip entirely, and the memoized partition's
+        # consecutive blocks are written through slices (one memcpy) rather
+        # than integer fancy indexing.  Keyed by id(): the block arrays are
+        # owned by this coordinator for its whole lifetime, and arrivals
+        # hand back the very same objects.
+        self._trivial_project = bool(problem.is_projection_trivial())
+        self._block_slices = {}
+        for blk in self.blocks:
+            sl = as_block_slice(blk)
+            if sl is not None:
+                self._block_slices[id(blk)] = sl
         self.res_norm = problem.residual_norm(self.x)
         self.record_every = cfg.record_every or cfg.n_workers
         self.max_arrivals = (
@@ -202,12 +219,14 @@ class Coordinator:
             # only its owned components from that evaluation (paper §6
             # redesign keeps ownership but evaluates globally).
             pass  # values already restricted by the worker wrapper
+        ind = self._block_slices.get(id(indices), indices)
         if cfg.block_damping is not None:
             a = cfg.block_damping
-            self.x[indices] = (1.0 - a) * self.x[indices] + a * values
+            self.x[ind] = (1.0 - a) * self.x[ind] + a * values
         else:
-            self.x[indices] = values
-        self.x = _writable(self.problem.project(self.x))
+            self.x[ind] = values
+        if not self._trivial_project:
+            self.x = _writable(self.problem.project(self.x))
         self.wu += 1
         self.staleness_sum += staleness
         self.staleness_n += 1
@@ -215,7 +234,13 @@ class Coordinator:
 
     # ----------------------------------------------------------------- #
     def maybe_fire_accel(self) -> None:
-        """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3)."""
+        """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3).
+
+        Per fire this costs one full map, one accel residual, and — only
+        when the safeguard actually has a candidate to judge — the two
+        residual-norm evaluations Eq. 5 needs.  The degenerate-window and
+        safeguard-off paths skip the residual evaluations entirely.
+        """
         cfg, problem = self.cfg, self.problem
         if self.accel is None or cfg.accel_mode == "monitor":
             return
@@ -224,13 +249,13 @@ class Coordinator:
         f = problem.accel_residual(self.x, g)
         self.accel.push(self.x, g, f)
         cand = self.accel.propose()
-        cur_res = problem.residual_norm(self.x)
         if cand is None:
             self.accel.record_reject()
             self.x = _writable(problem.project(g))  # Eq. 5 fallback: G(x)
             return
         cand = _writable(problem.project(cand))
         if cfg.accel.safeguard:
+            cur_res = problem.residual_norm(self.x)
             cand_res = problem.residual_norm(cand)
             if np.isfinite(cand_res) and cand_res < cur_res:
                 self.accel.record_accept()

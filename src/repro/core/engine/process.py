@@ -1,39 +1,61 @@
-"""Real-parallelism process-pool executor.
+"""Real-parallelism process-pool executor with persistent worker pools.
 
 Workers are separate Python interpreters, so evaluations escape the GIL
 entirely — the closest local analogue of the paper's Ray deployment (§4).
 Problem handles do not pickle wholesale (they close over jitted JAX
 callables), so each worker rebuilds its own instance from the problem's
-``factory_spec()`` recipe and warms its jit specializations before the
-clock starts.  The coordinator (parent process) keeps the apply/accel/
-record path of the thread backend; the global iterate ``x`` travels to
-workers through a shared-memory block::
+``factory_spec()`` recipe.  The coordinator (parent process) keeps the
+apply/accel/record path of the thread backend.
 
-    shm[0]  = applied-update counter (wu) at the coordinator's last write
-    shm[1:] = x
+Persistent pools
+----------------
+Spawning a worker costs an interpreter start, a JAX import and a jit
+warm-up — easily seconds per worker, which made process-backend sweeps
+minutes-long.  Workers are therefore pooled and reused across ``run()``
+calls: a pool is keyed on ``(problem-payload fingerprint, n_workers,
+return_mode)`` and survives until :func:`shutdown_pools` (registered via
+``atexit``), an LRU eviction (``REPRO_PROCESS_POOLS`` pools are kept, default
+4), or a worker death.  Each ``run()`` sends a per-run setup message (config,
+fault seeds, the coordinator's memoized block partition) and reuses the
+already-imported, already-jitted interpreters; a warm run spawns zero new
+processes.  A worker whose fault draw says "permanent crash" only *simulates*
+death for the remainder of that run — the interpreter stays pooled.
 
-A worker snapshots ``shm`` (under a cross-process lock — no torn reads)
-when it picks up a dispatch, so staleness is measured exactly as in the
-thread backend: ``coord.wu - wu_at_snapshot``.  Fault semantics mirror the
-thread backend: per-worker rngs (spawned from ``cfg.seed``) drive delay and
-crash draws in async mode, the coordinator rng plans them in sync mode, and
+Shared memory
+-------------
+The global iterate ``x`` travels to workers through a pool-owned
+shared-memory block (``shm[0]`` = applied-update counter at the
+coordinator's last write, ``shm[1:]`` = x; snapshots are taken under a
+cross-process lock so there are no torn reads), and each worker owns a
+shared-memory *result slot* it writes its returned value block into — the
+result queue carries only ``(worker, kind, length, snapshot_wu)``, so value
+blocks are never pickled.  Staleness is measured exactly as in the thread
+backend: ``coord.wu - wu_at_snapshot``.
+
+Fault semantics mirror the thread backend: per-worker rngs (spawned from
+``cfg.seed``, fresh each run for reproducibility) drive delay and crash
+draws in async mode, the coordinator rng plans them in sync mode, and
 drop/noise filtering stays coordinator-side in ``apply_return``.  One
 divergence: an async crash-restart is counted when the crash *arrives*
 (the worker enforces its downtime before taking the next dispatch), so a
 run that stops mid-downtime may count a restart that never rejoined.
 
 ``cfg.compute_time`` is ignored — compute cost is whatever the hardware
-takes.  Process startup (interpreter + JAX import + problem rebuild + jit
-warm-up, easily seconds per worker) happens before ``t0``, so measured
+takes.  Pool startup and per-run warm-up happen before ``t0``, so measured
 wall-clock covers only the iteration itself.
 """
 
 from __future__ import annotations
 
+import atexit
+import hashlib
+import os
+import pickle
 import queue as queue_mod
 import time
+from collections import OrderedDict
 from multiprocessing import get_context, shared_memory
-from typing import Dict, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -48,56 +70,89 @@ from .coordinator import (
 )
 from .types import RunConfig, RunResult, _fault_for
 
-__all__ = ["ProcessPoolExecutor", "problem_payload", "rebuild_problem"]
+__all__ = [
+    "ProcessPoolExecutor",
+    "problem_payload",
+    "rebuild_problem",
+    "shutdown_pools",
+    "process_pools",
+    "pool_stats",
+]
 
 _CTX = get_context("spawn")  # fork is unsafe once JAX/XLA threads exist
 _READY_TIMEOUT_S = 300.0  # interpreter + jax import + jit warm-up per worker
 _POLL_S = 5.0
+#: how many idle pools to keep alive (LRU beyond this is closed)
+_MAX_POOLS = max(1, int(os.environ.get("REPRO_PROCESS_POOLS", "4")))
+
+
+def _attach_shm(name: str) -> shared_memory.SharedMemory:
+    """Attach without registering with the resource tracker.
+
+    Python < 3.13 tracks attached segments too, and the tracker would
+    unlink the block when any child exits, destroying it for everyone
+    (cpython #39959) — suppress registration during attach; the pool owner
+    (the parent) unlinks the segments at pool close.
+    """
+    from multiprocessing import resource_tracker
+
+    _orig_register = resource_tracker.register
+    resource_tracker.register = (
+        lambda name, rtype: None if rtype == "shared_memory"
+        else _orig_register(name, rtype)
+    )
+    try:
+        return shared_memory.SharedMemory(name=name)
+    finally:
+        resource_tracker.register = _orig_register
 
 
 def _worker_main(
-    w: int, payload, cfg: RunConfig, seed_seq, shm_name: str, n: int,
+    w: int, payload, shm_name: str, slot_name: str, n: int,
     shm_lock, task_q, result_q,
 ) -> None:
-    """Worker process body: rebuild, warm, then serve dispatches until poison.
+    """Persistent worker body: rebuild once, then serve runs until poison.
 
     Messages in (``task_q``):
-      ("async", idx)                   — snapshot shm, eval, own-rng faults
-      ("sync", idx, delay, crashed)    — coordinator-planned faults
-      None                             — shut down
+      ("run", cfg, seed_seq, my_block)   — per-run setup: warm + reseed
+      ("async", idx_or_None)             — snapshot shm, eval, own-rng faults
+      ("sync", idx_or_None, delay, crashed) — coordinator-planned faults
+      None                               — shut the interpreter down
+    ``my_block`` is this worker's own row of the coordinator's memoized
+    partition (the only one it ever evaluates); ``idx_or_None`` of None
+    means "your own fixed block", so fixed-selection dispatches never
+    pickle index arrays.
 
-    Messages out (``result_q``): ``(w, kind, vals, snap_wu)`` with kind in
-    {"ready", "ok", "crash", "error"}.
+    Messages out (``result_q``): ``(w, kind, data, snap_wu)`` with kind in
+    {"boot", "ready", "ok", "crash", "error"}; for "ok" the values are in
+    the shared result slot and ``data`` is their length.
     """
-    shm = None
+    shm = slot = None
     try:
         problem = rebuild_problem(payload)
-        warm_problem(problem, cfg, worker=w)
-        # Python < 3.13 tracks attached segments too, and the tracker would
-        # unlink the block when any child exits, destroying it for everyone
-        # (cpython #39959) — suppress registration during attach; the parent
-        # owns the segment and unlinks it.
-        from multiprocessing import resource_tracker
-
-        _orig_register = resource_tracker.register
-        resource_tracker.register = (
-            lambda name, rtype: None if rtype == "shared_memory"
-            else _orig_register(name, rtype)
-        )
-        try:
-            shm = shared_memory.SharedMemory(name=shm_name)
-        finally:
-            resource_tracker.register = _orig_register
+        shm = _attach_shm(shm_name)
+        slot = _attach_shm(slot_name)
         view = np.ndarray(n + 1, dtype=np.float64, buffer=shm.buf)
-        prof = _fault_for(cfg, w)
-        rng = np.random.default_rng(seed_seq)
-        result_q.put((w, "ready", None, 0))
+        slot_view = np.ndarray(n, dtype=np.float64, buffer=slot.buf)
+        result_q.put((w, "boot", None, 0))
+        cfg = prof = rng = my_block = None
         while True:
             task = task_q.get()
             if task is None:
                 return
-            if task[0] == "sync":
+            kind = task[0]
+            if kind == "run":
+                _, cfg, seed_seq, my_block = task
+                # First run pays the jit compiles; later runs hit the
+                # per-interpreter jit cache and this is near-free.
+                warm_problem(problem, cfg, worker=0, blocks=[my_block])
+                prof = _fault_for(cfg, w)
+                rng = np.random.default_rng(seed_seq)
+                result_q.put((w, "ready", None, 0))
+                continue
+            if kind == "sync":
                 _, idx, delay, crashed = task
+                idx = my_block if idx is None else idx
                 with shm_lock:
                     snap = view.copy()
                 vals = worker_eval(problem, cfg, snap[1:], idx)
@@ -110,9 +165,11 @@ def _worker_main(
                         time.sleep(prof.restart_after)
                     result_q.put((w, "crash", None, int(snap[0])))
                 else:
-                    result_q.put((w, "ok", vals, int(snap[0])))
+                    slot_view[:len(vals)] = vals
+                    result_q.put((w, "ok", len(vals), int(snap[0])))
                 continue
             _, idx = task
+            idx = my_block if idx is None else idx
             with shm_lock:
                 snap = view.copy()
             vals = worker_eval(problem, cfg, snap[1:], idx)
@@ -124,10 +181,14 @@ def _worker_main(
             if prof.sample_crash(rng):
                 result_q.put((w, "crash", None, int(snap[0])))
                 if prof.restart_after is None:
-                    return  # permanent crash: interpreter exits
+                    # Simulated permanent crash: dead for the rest of THIS
+                    # run (the parent stops dispatching to us) but the
+                    # interpreter survives for the next pooled run.
+                    continue
                 time.sleep(prof.restart_after)  # downtime before next task
                 continue
-            result_q.put((w, "ok", vals, int(snap[0])))
+            slot_view[:len(vals)] = vals
+            result_q.put((w, "ok", len(vals), int(snap[0])))
     except Exception as e:  # surface rebuild/eval failures to the parent
         import traceback
 
@@ -135,8 +196,204 @@ def _worker_main(
     finally:
         if shm is not None:
             shm.close()
+        if slot is not None:
+            slot.close()
 
 
+class _WorkerPool:
+    """A set of persistent worker interpreters for one (problem, p) pair."""
+
+    def __init__(self, key: Tuple[str, int, str], payload, n: int):
+        self.key = key
+        self.payload = payload
+        self.n = n
+        self.n_workers = key[1]
+        self.runs_served = 0
+        self.shm = shared_memory.SharedMemory(create=True, size=8 * (n + 1))
+        self.slots = [
+            shared_memory.SharedMemory(create=True, size=8 * max(n, 1))
+            for _ in range(self.n_workers)
+        ]
+        self.view = np.ndarray(n + 1, dtype=np.float64, buffer=self.shm.buf)
+        self.slot_views = [
+            np.ndarray(n, dtype=np.float64, buffer=s.buf) for s in self.slots
+        ]
+        self.shm_lock = _CTX.Lock()
+        self.task_qs = [_CTX.Queue() for _ in range(self.n_workers)]
+        self.result_q = _CTX.Queue()
+        self.procs = [
+            _CTX.Process(
+                target=_worker_main,
+                args=(w, payload, self.shm.name, self.slots[w].name, n,
+                      self.shm_lock, self.task_qs[w], self.result_q),
+                daemon=True, name=f"fp-pool-{w}",
+            )
+            for w in range(self.n_workers)
+        ]
+        try:
+            for p in self.procs:
+                p.start()
+            self._await(self.n_workers, {"boot"})
+        except Exception:
+            self.close()  # don't leak half-booted interpreters / segments
+            raise
+
+    # ----------------------------------------------------------------- #
+    def healthy(self) -> bool:
+        return all(p.is_alive() for p in self.procs)
+
+    def pids(self) -> List[int]:
+        return [p.pid for p in self.procs]
+
+    def setup_run(self, cfg: RunConfig, blocks) -> None:
+        """Per-run worker (re)configuration: warm, reseed, re-profile.
+
+        Each worker receives only its own block row — at large n the full
+        partition is O(n) of int64 per queue, real serialization time on
+        the warm-run path."""
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+        for w, q in enumerate(self.task_qs):
+            q.put(("run", cfg, seeds[w], blocks[w]))
+        self._await(self.n_workers, {"ready"})
+        self.runs_served += 1
+
+    def _await(self, count: int, kinds: Set[str]) -> None:
+        deadline = time.monotonic() + _READY_TIMEOUT_S
+        seen: Set[int] = set()
+        while len(seen) < count:
+            w, kind, data, _ = self.get_result(deadline)
+            if kind == "error":
+                raise RuntimeError(f"worker {w} failed during startup: {data}")
+            assert kind in kinds, f"unexpected pre-run message {kind!r}"
+            seen.add(w)
+
+    def get_result(self, deadline: float):
+        """Blocking result read that notices dead children and timeouts."""
+        while True:
+            timeout = min(_POLL_S, deadline - time.monotonic())
+            if timeout <= 0:
+                raise RuntimeError(
+                    "timed out waiting for process-backend worker results")
+            try:
+                return self.result_q.get(timeout=timeout)
+            except queue_mod.Empty:
+                if not any(p.is_alive() for p in self.procs):
+                    try:  # drain results that raced with the exits
+                        return self.result_q.get_nowait()
+                    except queue_mod.Empty:
+                        raise RuntimeError(
+                            "all process-backend workers exited unexpectedly"
+                        ) from None
+
+    def drain(self, pending: Set[int]) -> None:
+        """Consume (and discard) in-flight results so the next pooled run
+        starts from empty queues.  In-flight work at stop time was equally
+        lost by the old spawn-per-run teardown."""
+        deadline = time.monotonic() + _READY_TIMEOUT_S
+        outstanding = set(pending)
+        while outstanding:
+            w, kind, _, _ = self.get_result(deadline)
+            outstanding.discard(w)
+
+    def write_x(self, coord: Coordinator) -> None:
+        with self.shm_lock:
+            self.view[0] = coord.wu
+            self.view[1:] = coord.x
+
+    def close(self) -> None:
+        for q in self.task_qs:
+            try:
+                q.put_nowait(None)
+            except Exception:
+                pass
+        deadline = time.monotonic() + 10.0
+        for p in self.procs:
+            if p._popen is None:  # never started (aborted pool boot)
+                continue
+            p.join(timeout=max(0.1, deadline - time.monotonic()))
+            if p.is_alive():
+                p.terminate()
+        for q in self.task_qs + [self.result_q]:
+            q.cancel_join_thread()
+            q.close()
+        for s in [self.shm] + self.slots:
+            s.close()
+            try:
+                s.unlink()
+            except FileNotFoundError:  # pragma: no cover - double close
+                pass
+
+
+# --------------------------------------------------------------------- #
+# Pool registry (LRU, atexit-cleaned)
+# --------------------------------------------------------------------- #
+_POOLS: "OrderedDict[Tuple[str, int, str], _WorkerPool]" = OrderedDict()
+
+def _pool_key(payload, cfg: RunConfig) -> Tuple[str, int, str]:
+    # The payload is hashed fresh on every run() — an identity-keyed cache
+    # would go silently stale if a caller mutated a problem in place and
+    # hand back a pool built from the OLD operator.  The pickle+sha256 of
+    # a realistic payload (sub-MB) costs ~1-2 ms, noise next to even a
+    # warm run.
+    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+    return (hashlib.sha256(blob).hexdigest(), cfg.n_workers, cfg.return_mode)
+
+
+def _get_pool(payload, cfg: RunConfig, n: int) -> _WorkerPool:
+    key = _pool_key(payload, cfg)
+    pool = _POOLS.get(key)
+    if pool is not None and not pool.healthy():
+        _POOLS.pop(key, None)
+        pool.close()
+        pool = None
+    if pool is None:
+        pool = _WorkerPool(key, payload, n)
+        _POOLS[key] = pool
+    _POOLS.move_to_end(key)  # LRU
+    while len(_POOLS) > _MAX_POOLS:
+        _, old = _POOLS.popitem(last=False)
+        old.close()
+    return pool
+
+
+def _dispose_pool(pool: _WorkerPool) -> None:
+    _POOLS.pop(pool.key, None)
+    pool.close()
+
+
+def shutdown_pools() -> None:
+    """Close every persistent worker pool (also registered via atexit)."""
+    while _POOLS:
+        _, pool = _POOLS.popitem(last=False)
+        pool.close()
+
+
+class process_pools:
+    """Context manager scoping pool lifetime: ``with process_pools(): ...``
+    runs any number of process-backend sweeps on warm pools and closes them
+    all on exit (long-lived drivers that should not keep idle interpreters
+    around; everyone else can rely on the atexit hook)."""
+
+    def __enter__(self) -> "process_pools":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        shutdown_pools()
+
+
+def pool_stats() -> Dict[Tuple[str, int, str], Dict[str, object]]:
+    """Live pool inventory: worker pids and runs served, per pool key."""
+    return {
+        key: {"pids": pool.pids(), "runs_served": pool.runs_served,
+              "n_workers": pool.n_workers, "healthy": pool.healthy()}
+        for key, pool in _POOLS.items()
+    }
+
+
+atexit.register(shutdown_pools)
+
+
+# --------------------------------------------------------------------- #
 @register_executor
 class ProcessPoolExecutor(Executor):
     """Workers in separate interpreters; wall time is real seconds."""
@@ -150,72 +407,23 @@ class ProcessPoolExecutor(Executor):
         coord = Coordinator(problem, cfg)
         if cfg.accel is not None:
             problem.full_map(coord.x)  # compile the parent-side accel path
-            # off-clock (workers warm their own paths before reporting ready)
-        shm = shared_memory.SharedMemory(create=True,
-                                         size=8 * (problem.n + 1))
-        shm_lock = _CTX.Lock()
-        view = np.ndarray(problem.n + 1, dtype=np.float64, buffer=shm.buf)
-        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
-        task_qs = [_CTX.Queue() for _ in range(cfg.n_workers)]
-        result_q = _CTX.Queue()
-        procs = [
-            _CTX.Process(
-                target=_worker_main,
-                args=(w, payload, cfg, seeds[w], shm.name, problem.n,
-                      shm_lock, task_qs[w], result_q),
-                daemon=True, name=f"fp-proc-{w}",
-            )
-            for w in range(cfg.n_workers)
-        ]
+            # off-clock (workers warm their own paths at run setup)
+        pool = _get_pool(payload, cfg, problem.n)
         try:
-            self._write_shm(view, shm_lock, coord)
-            for p in procs:
-                p.start()
-            self._await_ready(procs, result_q, cfg.n_workers)
+            pool.setup_run(cfg, coord.blocks)
+            pool.write_x(coord)
             if cfg.mode == "sync":
-                return self._run_sync(cfg, coord, view, shm_lock, task_qs,
-                                      result_q, procs)
-            return self._run_async(cfg, coord, view, shm_lock, task_qs,
-                                   result_q, procs)
-        finally:
-            for q in task_qs:
-                try:
-                    q.put_nowait(None)
-                except Exception:
-                    pass
-            deadline = time.monotonic() + 10.0
-            for p in procs:
-                p.join(timeout=max(0.1, deadline - time.monotonic()))
-                if p.is_alive():
-                    p.terminate()
-            for q in task_qs + [result_q]:
-                q.cancel_join_thread()
-                q.close()
-            shm.close()
-            shm.unlink()
-
-    # ----------------------------------------------------------------- #
-    @staticmethod
-    def _write_shm(view: np.ndarray, shm_lock, coord: Coordinator) -> None:
-        with shm_lock:
-            view[0] = coord.wu
-            view[1:] = coord.x
-
-    @staticmethod
-    def _await_ready(procs, result_q, n_workers: int) -> None:
-        deadline = time.monotonic() + _READY_TIMEOUT_S
-        ready: Set[int] = set()
-        while len(ready) < n_workers:
-            w, kind, data, _ = _get_result(result_q, procs, deadline)
-            if kind == "error":
-                raise RuntimeError(f"worker {w} failed during startup: {data}")
-            assert kind == "ready", f"unexpected pre-ready message {kind!r}"
-            ready.add(w)
+                return self._run_sync(cfg, coord, pool)
+            return self._run_async(cfg, coord, pool)
+        except Exception:
+            # A worker error (or timeout) leaves queues in an unknown
+            # state: retire the whole pool rather than reuse it.
+            _dispose_pool(pool)
+            raise
 
     # ----------------------------------------------------------------- #
     def _run_sync(
-        self, cfg: RunConfig, coord: Coordinator, view, shm_lock,
-        task_qs, result_q, procs,
+        self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
     ) -> RunResult:
         t0 = time.perf_counter()
         rounds = 0
@@ -224,23 +432,25 @@ class ProcessPoolExecutor(Executor):
         while (coord.wu < cfg.max_updates and alive
                and coord.arrivals < coord.max_arrivals):
             rounds += 1
-            self._write_shm(view, shm_lock, coord)
+            pool.write_x(coord)
             plans = coord.plan_round(alive, coord.select_round_indices())
             by_worker: Dict[int, Tuple] = {}
             for w, prof, idx, delay, crashed in plans:
                 by_worker[w] = (prof, idx, crashed)
-                task_qs[w].put(("sync", idx, delay, crashed))
+                wire_idx = None if idx is coord.blocks[w] else idx
+                pool.task_qs[w].put(("sync", wire_idx, delay, crashed))
             deadline = time.monotonic() + _READY_TIMEOUT_S
             for _ in range(len(plans)):
-                w, kind, vals, _snap = _get_result(result_q, procs, deadline)
+                w, kind, data, _snap = pool.get_result(deadline)
                 if kind == "error":
-                    raise RuntimeError(f"worker {w} failed: {vals}")
+                    raise RuntimeError(f"worker {w} failed: {data}")
                 coord.arrivals += 1
                 prof, idx, crashed = by_worker[w]
                 if crashed:
                     coord.note_sync_crash(prof, w, alive)
                     continue
-                coord.apply_return(idx, vals, prof, staleness=0)
+                coord.apply_return(idx, pool.slot_views[w][:data], prof,
+                                   staleness=0)
             t, verdict = coord.sync_round_tick(
                 rounds, lambda: time.perf_counter() - t0)
             if verdict in ("diverged", "converged"):
@@ -252,8 +462,7 @@ class ProcessPoolExecutor(Executor):
 
     # ----------------------------------------------------------------- #
     def _run_async(
-        self, cfg: RunConfig, coord: Coordinator, view, shm_lock,
-        task_qs, result_q, procs,
+        self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
     ) -> RunResult:
         t0 = time.perf_counter()
         coord.record(0.0)
@@ -265,16 +474,16 @@ class ProcessPoolExecutor(Executor):
         def dispatch(w: int) -> None:
             idx = coord.select_indices(w)
             pending[w] = idx
-            task_qs[w].put(("async", idx))
+            wire_idx = None if idx is coord.blocks[w] else idx
+            pool.task_qs[w].put(("async", wire_idx))
 
-        self._write_shm(view, shm_lock, coord)
         for w in sorted(alive):
             dispatch(w)
         while alive and not stop:
             deadline = time.monotonic() + _READY_TIMEOUT_S
-            w, kind, vals, snap_wu = _get_result(result_q, procs, deadline)
+            w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
-                raise RuntimeError(f"worker {w} failed: {vals}")
+                raise RuntimeError(f"worker {w} failed: {data}")
             prof = _fault_for(cfg, w)
             idx = pending.pop(w)
             redispatch = True
@@ -289,36 +498,21 @@ class ProcessPoolExecutor(Executor):
                     coord.restarts += 1
             else:
                 applied = coord.apply_return(
-                    idx, vals, prof, staleness=coord.wu - snap_wu)
+                    idx, pool.slot_views[w][:data], prof,
+                    staleness=coord.wu - snap_wu)
                 if applied:
                     since_fire += 1
                     if (coord.accel is not None
                             and since_fire >= cfg.fire_every):
                         coord.maybe_fire_accel()
                         since_fire = 0
-                self._write_shm(view, shm_lock, coord)
+                pool.write_x(coord)
             stop = coord.arrival_tick(time.perf_counter() - t0)
             if not stop and redispatch:
                 dispatch(w)
         t = time.perf_counter() - t0
+        # In-flight evaluations are discarded (same as the old teardown);
+        # draining leaves the pool's queues empty for the next run.
+        pool.drain(set(pending))
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
-
-
-def _get_result(result_q, procs, deadline: float):
-    """Blocking ``result_q.get`` that notices dead children and timeouts."""
-    while True:
-        timeout = min(_POLL_S, deadline - time.monotonic())
-        if timeout <= 0:
-            raise RuntimeError(
-                "timed out waiting for process-backend worker results")
-        try:
-            return result_q.get(timeout=timeout)
-        except queue_mod.Empty:
-            if not any(p.is_alive() for p in procs):
-                try:  # drain results that raced with the exits
-                    return result_q.get_nowait()
-                except queue_mod.Empty:
-                    raise RuntimeError(
-                        "all process-backend workers exited unexpectedly"
-                    ) from None

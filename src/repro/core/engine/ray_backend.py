@@ -60,11 +60,14 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
     class _RayWorker:
         """One worker actor: rebuilds the problem, serves eval requests."""
 
-        def __init__(self, w: int, payload, cfg: RunConfig, seed_seq):
+        def __init__(self, w: int, payload, cfg: RunConfig, seed_seq,
+                     blocks=None):
             self.w = w
             self.cfg = cfg
             self.problem = rebuild_problem(payload)
-            warm_problem(self.problem, cfg, worker=w)
+            # ``blocks`` is the coordinator's memoized partition, so the
+            # actor warms exactly the block object the run dispatches.
+            warm_problem(self.problem, cfg, worker=w, blocks=blocks)
             self.prof = _fault_for(cfg, w)
             self.rng = np.random.default_rng(seed_seq)
 
@@ -110,7 +113,7 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 problem.full_map(coord.x)  # compile the accel path off-clock
             seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
             actors = [
-                _RayWorker.remote(w, payload, cfg, seeds[w])
+                _RayWorker.remote(w, payload, cfg, seeds[w], coord.blocks)
                 for w in range(cfg.n_workers)
             ]
             try:

@@ -44,8 +44,10 @@ class ThreadPoolExecutor(Executor):
         coord = Coordinator(problem, cfg)
         # Warm every jit specialization the run will hit (per-block shapes,
         # selection-sized blocks, the accel/residual full-map path) before
-        # the clock starts, so compile time doesn't skew wall-clock.
-        warm_problem(problem, cfg)
+        # the clock starts, so compile time doesn't skew wall-clock.  The
+        # coordinator's memoized partition is passed through so exactly the
+        # dispatched block objects get warmed.
+        warm_problem(problem, cfg, blocks=coord.blocks)
         if cfg.accel is not None:
             problem.full_map(coord.x)
         problem.residual_norm(coord.x)

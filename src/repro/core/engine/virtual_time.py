@@ -43,22 +43,22 @@ class VirtualTimeExecutor(Executor):
     name = "virtual"
 
     def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
-        blocks = problem.default_blocks(cfg.n_workers)
+        if cfg.mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        coord = Coordinator(problem, cfg)
         compute = (
             cfg.compute_time if cfg.compute_time is not None
-            else measure_compute(problem, blocks)
+            else measure_compute(problem, coord.blocks)  # memoized partition
         )
         if cfg.mode == "sync":
-            return self._run_sync(problem, cfg, compute)
-        if cfg.mode == "async":
-            return self._run_async(problem, cfg, compute)
-        raise ValueError(f"unknown mode {cfg.mode!r}")
+            return self._run_sync(problem, cfg, coord, compute)
+        return self._run_async(problem, cfg, coord, compute)
 
     # ----------------------------------------------------------------- #
     def _run_sync(
-        self, problem: FixedPointProblem, cfg: RunConfig, compute: float
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator,
+        compute: float
     ) -> RunResult:
-        coord = Coordinator(problem, cfg)
         t = 0.0
         rounds = 0
         arrivals = 0
@@ -105,9 +105,9 @@ class VirtualTimeExecutor(Executor):
 
     # ----------------------------------------------------------------- #
     def _run_async(
-        self, problem: FixedPointProblem, cfg: RunConfig, compute: float
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator,
+        compute: float
     ) -> RunResult:
-        coord = Coordinator(problem, cfg)
         t = 0.0
         coord.record(t)
         # Event tuples: (done, seq, worker, launch_wu, idx, vals); a restart

@@ -23,13 +23,51 @@ from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["FixedPointProblem", "contiguous_blocks"]
+__all__ = ["FixedPointProblem", "contiguous_blocks", "as_block_slice",
+           "restrict"]
 
 
 def contiguous_blocks(n: int, p: int) -> List[np.ndarray]:
     """Split ``range(n)`` into ``p`` contiguous, near-equal index blocks."""
     bounds = np.linspace(0, n, p + 1).astype(np.int64)
     return [np.arange(bounds[i], bounds[i + 1]) for i in range(p)]
+
+
+def as_block_slice(indices) -> Optional[slice]:
+    """``slice(i0, i1)`` when ``indices`` is a consecutive run, else None.
+
+    The engine's default partitioning (:func:`contiguous_blocks` and the
+    problems' row-block overrides) produces consecutive index arrays, for
+    which slice indexing (one memcpy) beats integer fancy indexing (an
+    index-array read plus a gather/scatter) by a wide margin at large
+    blocks — the coordinator's per-arrival write and the problems' restrict
+    gathers both dispatch through this.  The verification is exact (a full
+    consecutive-run check), so callers may substitute the slice for the
+    index array without changing any value.
+    """
+    if isinstance(indices, slice):
+        return indices
+    idx = np.asarray(indices)
+    if idx.ndim != 1 or idx.size == 0 or idx.dtype == np.bool_:
+        return None  # boolean masks index by position, not value
+    i0, i1 = int(idx[0]), int(idx[-1])
+    if i0 < 0 or i1 - i0 + 1 != idx.size:
+        return None  # negative indices: slice(i0, i1+1) would not agree
+    if idx.size > 1 and not np.array_equal(
+            idx, np.arange(i0, i1 + 1, dtype=idx.dtype)):
+        return None
+    return slice(i0, i1 + 1)
+
+
+def restrict(values: np.ndarray, indices) -> np.ndarray:
+    """``values[indices]`` through a slice when the indices are a block.
+
+    The shared restrict step of every 'evaluate the full map, return the
+    owned components' ``block_update`` (VI, SCF, Jacobi's non-row path)
+    and of ``worker_eval``'s full-map return mode.
+    """
+    sl = as_block_slice(indices)
+    return values[indices] if sl is None else values[sl]
 
 
 class FixedPointProblem(abc.ABC):
@@ -84,6 +122,19 @@ class FixedPointProblem(abc.ABC):
         self-stabilizing ABFT-style state projections also plug in here.
         """
         return x
+
+    def is_projection_trivial(self) -> bool:
+        """True when ``project`` is the base-class identity.
+
+        The coordinator uses this to keep its per-arrival cost O(block):
+        trivially-projected problems (Jacobi, value iteration, …) get their
+        blocks written in place with no ``project``/copy round trip, while
+        overriders (SCF's symmetrization) keep the full post-apply
+        projection.  Subclasses that override ``project`` with something
+        the coordinator may skip (e.g. a debug-only check) can override
+        this to return True explicitly.
+        """
+        return type(self).project is FixedPointProblem.project
 
     # ------------------------------------------------------------------ #
     # Partitioning / reference

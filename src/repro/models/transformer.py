@@ -383,6 +383,26 @@ def _period_axes(cfg):
     return logical_axes(period_spec(cfg, cross))
 
 
+@jax.custom_jvp
+def _loop_barrier(tree):
+    """``optimization_barrier`` that is differentiable on every jax version.
+
+    ``lax.optimization_barrier`` has no JVP rule on some jax releases (this
+    container's 0.4.37 raises ``NotImplementedError: Differentiation rule
+    for 'optimization_barrier'``), which made every training/grad test red.
+    The barrier is purely a scheduling fence — its value is the identity —
+    so the tangent passes straight through while the primal keeps the fence
+    that stops GSPMD hoisting the FSDP all-gather out of the scan body.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+@_loop_barrier.defjvp
+def _loop_barrier_jvp(primals, tangents):
+    (tree,), (dtree,) = primals, tangents
+    return _loop_barrier(tree), dtree
+
+
 def _run_stack(cfg, params, x, positions, aux, *, causal=True, cross_kv=None,
                collect_cache=False, max_len=0, cache_dtype=None, remat=True):
     """Scanned periods + remainder.  Returns (x, aux, caches or None)."""
@@ -400,7 +420,7 @@ def _run_stack(cfg, params, x, positions, aux, *, causal=True, cross_kv=None,
             treedef, [shard(pp, ax) for pp, ax in zip(flat_p, flat_ax)])
         # barrier: the FSDP all-gather of these weights must stay inside
         # the loop body (no loop-invariant code motion of the gather)
-        pparams = jax.lax.optimization_barrier(pparams)
+        pparams = _loop_barrier(pparams)
         pcaches = {}
         for i, sub in enumerate(cfg.period):
             x, aux, c = apply_sublayer_full(

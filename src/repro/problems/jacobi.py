@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fixedpoint import FixedPointProblem
+from repro.core.fixedpoint import FixedPointProblem, restrict
 
 __all__ = ["JacobiProblem"]
 
@@ -112,8 +112,8 @@ class JacobiProblem(FixedPointProblem):
         if r0 is not None:
             out = _block_sweeps(jnp.asarray(x), self._b_j, self.g, r0, r1, self.sweeps)
             return np.asarray(out)
-        # Non-contiguous selection (uniform/greedy): single-sweep restriction.
-        return self.full_map(x)[indices]
+        # Non-whole-rows selection (uniform/greedy): single-sweep restriction.
+        return restrict(self.full_map(x), indices)
 
     def _rows_of(self, indices: np.ndarray) -> Tuple[Optional[int], Optional[int]]:
         """Detect a contiguous whole-rows block; else (None, None)."""

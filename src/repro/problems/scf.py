@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fixedpoint import FixedPointProblem
+from repro.core.fixedpoint import FixedPointProblem, restrict
 
 __all__ = ["PPPChain", "SCFProblem"]
 
@@ -180,7 +180,9 @@ class UHFSCFProblem(FixedPointProblem):
                                np.asarray(Pd2).reshape(-1)])
 
     def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
-        return self.full_map(x)[indices]
+        # Spin blocks concatenate two flat ranges, so a single slice rarely
+        # applies — but uniform/greedy runs still benefit when it does.
+        return restrict(self.full_map(x), indices)
 
     def default_blocks(self, p: int):
         n = self.n_ao
@@ -262,8 +264,9 @@ class SCFProblem(FixedPointProblem):
         return np.asarray(self.chain.scf_map(P)).reshape(-1)
 
     def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
-        # Worker: full SCF map on the stale snapshot, return owned rows only.
-        return self.full_map(x)[indices]
+        # Worker: full SCF map on the stale snapshot, return owned rows only
+        # (row blocks are flat consecutive ranges: restrict via a slice).
+        return restrict(self.full_map(x), indices)
 
     def default_blocks(self, p: int) -> List[np.ndarray]:
         # Row blocks of the density matrix, as flat index ranges.

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fixedpoint import FixedPointProblem
+from repro.core.fixedpoint import FixedPointProblem, restrict
 
 __all__ = [
     "GarnetMDP",
@@ -147,8 +147,9 @@ class ValueIterationProblem(FixedPointProblem):
 
     def block_update(self, x: np.ndarray, indices: np.ndarray) -> np.ndarray:
         # Each state's update IS the full map component at the stale snapshot
-        # (evaluation-level perturbation, paper §3.5).
-        return self.full_map(x)[indices]
+        # (evaluation-level perturbation, paper §3.5).  Contiguous state
+        # blocks restrict via a slice (memcpy) instead of a gather.
+        return restrict(self.full_map(x), indices)
 
     def residual_norm(self, x: np.ndarray) -> float:
         # linf: the Bellman operator contracts in the sup norm.

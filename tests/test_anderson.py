@@ -117,6 +117,100 @@ class TestAndersonOnAffineMaps:
         assert st_.depth == 0
 
 
+class TestSlidingWindowStorage:
+    """The ring/sliding-buffer rewrite: history semantics must be exactly
+    the old deque-of-copies semantics through many wrap-arounds."""
+
+    def test_window_contents_oldest_first_across_wraps(self):
+        m = 3
+        st_ = AndersonState(AndersonConfig(m=m))
+        for i in range(25):  # several buffer compactions at capacity 2(m+1)
+            st_.push(np.full(4, float(i)), np.full(4, float(i + 1)))
+            lo = max(0, i - m)
+            want = [float(j) for j in range(lo, i + 1)]
+            assert [x[0] for x in st_.xs] == want
+            assert [g[0] for g in st_.gs] == [w + 1.0 for w in want]
+            assert [f[0] for f in st_.fs] == [1.0] * len(want)
+
+    def test_push_copies_inputs(self):
+        """The window must own its rows: mutating a pushed array afterwards
+        (the coordinator reuses its live iterate) must not alter history."""
+        st_ = AndersonState(AndersonConfig(m=2))
+        x = np.zeros(4)
+        g = np.ones(4)
+        st_.push(x, g)
+        x[:] = 99.0
+        g[:] = 99.0
+        assert st_.xs[0][0] == 0.0 and st_.gs[0][0] == 1.0
+
+    def test_reset_then_refill(self):
+        st_ = AndersonState(AndersonConfig(m=2))
+        for i in range(5):
+            st_.push(np.full(4, float(i)), np.full(4, float(i + 1)))
+        st_.reset()
+        assert st_.depth == 0 and st_.xs == []
+        st_.push(np.full(4, 7.0), np.full(4, 8.0))
+        assert st_.depth == 1 and st_.xs[0][0] == 7.0
+        assert st_.propose() is not None
+
+    def test_mismatched_shapes_rejected(self):
+        st_ = AndersonState(AndersonConfig(m=2))
+        with pytest.raises(ValueError):
+            st_.push(np.zeros((2, 2)), np.zeros((2, 2)))
+        with pytest.raises(ValueError):
+            st_.push(np.zeros(4), np.zeros(5))
+
+
+class TestIncrementalGram:
+    """gram="incremental" (rank-1 updates) must agree with the exact
+    per-fire rebuild to numerical precision, through eviction and reset."""
+
+    def test_matches_exact_through_wraps(self):
+        rng = np.random.default_rng(3)
+        se = AndersonState(AndersonConfig(m=4, gram="exact"))
+        si = AndersonState(AndersonConfig(m=4, gram="incremental"))
+        for k in range(20):
+            x, g = rng.standard_normal(50), rng.standard_normal(50)
+            se.push(x, g)
+            si.push(x, g)
+            pe, pi = se.propose(), si.propose()
+            assert (pe is None) == (pi is None)
+            if pe is not None and se.depth > 1:
+                np.testing.assert_allclose(pi, pe, rtol=1e-9, atol=1e-12)
+                np.testing.assert_allclose(si.last_alpha, se.last_alpha,
+                                           rtol=1e-7, atol=1e-10)
+
+    def test_incremental_accelerates_like_exact(self):
+        n, rho = 40, 0.99
+        M, b, x_star = make_contraction(n, rho, seed=4)
+        G = _affine_map(M, b)
+        errs = {}
+        for gram in ("exact", "incremental"):
+            st_ = AndersonState(AndersonConfig(m=5, gram=gram))
+            x = np.zeros(n)
+            for _ in range(50):
+                g = G(x)
+                st_.push(x, g)
+                cand = st_.propose()
+                x = cand if cand is not None else g
+            errs[gram] = np.linalg.norm(x - x_star)
+        assert errs["incremental"] < 10 * errs["exact"] + 1e-10
+
+    def test_reset_clears_gram(self):
+        rng = np.random.default_rng(9)
+        si = AndersonState(AndersonConfig(m=3, gram="incremental"))
+        for _ in range(6):
+            si.push(rng.standard_normal(20), rng.standard_normal(20))
+        si.reset()
+        se = AndersonState(AndersonConfig(m=3, gram="exact"))
+        for _ in range(3):
+            x, g = rng.standard_normal(20), rng.standard_normal(20)
+            si.push(x, g)
+            se.push(x, g)
+        np.testing.assert_allclose(si.propose(), se.propose(),
+                                   rtol=1e-9, atol=1e-12)
+
+
 class TestSafeguardNecessity:
     """Paper §4: without Eq. 5, AA on value iteration diverges (res -> 1e68)."""
 

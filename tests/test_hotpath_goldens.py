@@ -1,0 +1,241 @@
+"""Hot-path overhaul regression suite (PR 3).
+
+The coordinator hot path was rebuilt for O(block) arrivals and O(h·n)
+Anderson fires; the hard constraint was that fixed-seed virtual-time runs
+stay *bit-identical* to the pre-rewrite engine.  The golden tuples below
+— (worker_updates, wall_time, sha256 of the iterate bytes, accel fires,
+accel accepts) — were captured at commit 07bcbe1 (the last pre-rewrite
+commit) for all three paper problems, accel on and off, sync and async,
+including a safeguard-reject trajectory (vi_async_accel), damping
+(scf_async_plain), the DIIS commutator residual (scf_async_diis) and a
+non-trivial beta (vi_async_accel_beta05).  Any change to the apply /
+accel / record float sequence breaks these loudly.
+
+Also here: the O(block) arrival machinery (``as_block_slice``, projection
+triviality, slice-vs-fancy write parity) and the persistent process-pool
+reuse contract.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AndersonConfig,
+    FaultProfile,
+    RunConfig,
+    pool_stats,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.core.engine.coordinator import Coordinator
+from repro.core.fixedpoint import as_block_slice
+from repro.problems import (
+    GarnetMDP,
+    JacobiProblem,
+    PPPChain,
+    SCFProblem,
+    UHFSCFProblem,
+    ValueIterationProblem,
+)
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+def _jac():
+    return JacobiProblem(grid=16, sweeps=5, seed=0)
+
+
+def _vi():
+    return ValueIterationProblem(GarnetMDP(S=60, A=4, b=5, gamma=0.9, seed=0))
+
+
+def _scf():
+    return SCFProblem(PPPChain(n_atoms=8, U=2.0, t=1.0))
+
+
+_FAULTS = FaultProfile(delay_mean=0.002, delay_std=0.001)
+
+
+def _aa(**kw):
+    return AndersonConfig(m=5, **kw)
+
+
+# name -> (factory, cfg, (wu, wall, sha256(x), fires, accepts))
+GOLDEN = {
+    "jacobi_async_plain": (
+        _jac,
+        dict(mode="async", tol=1e-10, max_updates=600, compute_time=1e-3,
+             faults=_FAULTS, seed=7),
+        (600, 0.4318607003352541,
+         "af8fd221f9b65b94b6d21a5e5dcc7dbef42cf475a86dd05ad8e08d5b43b1bfc9",
+         0, 0)),
+    "jacobi_async_accel": (
+        _jac,
+        dict(mode="async", tol=1e-10, max_updates=600, compute_time=1e-3,
+             faults=_FAULTS, seed=7, accel=_aa(), fire_every=4),
+        (600, 0.4318607003352541,
+         "a2a85aa93ab7cbfa7bc40cea561b8f37e041002fa88944074eef21e853bba6d4",
+         150, 150)),
+    "jacobi_sync_accel": (
+        _jac,
+        dict(mode="sync", tol=1e-10, max_updates=400, compute_time=1e-3,
+             faults=_FAULTS, seed=7, accel=_aa(), fire_every=1),
+        (172, 0.16224502254268186,
+         "8822405e5549c19758fc416ccfdc854e8e9dedce07baf8f11e3abca1ac20da9b",
+         43, 43)),
+    "vi_async_plain": (
+        _vi,
+        dict(mode="async", tol=1e-12, max_updates=800, compute_time=1e-3,
+             faults=_FAULTS, seed=11),
+        (800, 0.6036670878423925,
+         "9d186119b5fac33263fea5e6fa8d55fffab77e320e1792d79dc3dcad1b0604ff",
+         0, 0)),
+    "vi_async_accel": (
+        _vi,
+        dict(mode="async", tol=1e-12, max_updates=800, compute_time=1e-3,
+             faults=_FAULTS, seed=11, accel=_aa(), fire_every=4),
+        (672, 0.5093856227045174,
+         "a577cbf3a7e9c1b3722e24ce9e9fb3cef3d7b8ce8c6a29fac2a71e6069460830",
+         168, 167)),
+    "vi_async_accel_beta05": (
+        _vi,
+        dict(mode="async", tol=1e-12, max_updates=800, compute_time=1e-3,
+             faults=_FAULTS, seed=11, accel=_aa(beta=0.5), fire_every=4),
+        (692, 0.5245468717291241,
+         "472d337d93ffeb83afcc5de329db0774f051b0ebc970ac28d05fcaa859f39bda",
+         173, 173)),
+    "scf_async_plain": (
+        _scf,
+        dict(mode="async", tol=1e-12, max_updates=400, compute_time=1e-3,
+             faults=_FAULTS, seed=5, block_damping=0.7),
+        (204, 0.1503367274156193,
+         "0aca258e96ff3efcbf62c52f34d583b3ec76beebeb0898b242ec24d34afba8fc",
+         0, 0)),
+    "scf_async_diis": (
+        _scf,
+        dict(mode="async", tol=1e-12, max_updates=400, compute_time=1e-3,
+             faults=_FAULTS, seed=5, accel=_aa(beta=1.0), fire_every=4),
+        (64, 0.045899303566305005,
+         "ae492cef0dbfe2abbdb7b873ac664f4febfa041aed39759536564bc539c20d72",
+         16, 16)),
+}
+
+
+class TestGoldenTrajectories:
+    """Fixed-seed virtual-time runs are bit-identical to the pre-rewrite
+    engine, with and without acceleration."""
+
+    @pytest.mark.parametrize("name", sorted(GOLDEN))
+    def test_bit_identical(self, name):
+        factory, cfg_kw, (wu, wall, sha, fires, accepts) = GOLDEN[name]
+        r = run_fixed_point(factory(), RunConfig(**cfg_kw))
+        assert r.worker_updates == wu
+        assert r.wall_time == wall
+        assert _sha(r.x) == sha, (
+            f"{name}: iterate bytes changed — the rewrite altered the "
+            "float sequence of the apply/accel/record path")
+        assert (r.accel_fires, r.accel_accepts) == (fires, accepts)
+
+
+class TestBlockSlice:
+    """``as_block_slice`` must be an exact consecutive-run detector: a
+    false positive would silently write the wrong components."""
+
+    def test_detects_blocks(self):
+        assert as_block_slice(np.arange(5, 12)) == slice(5, 12)
+        assert as_block_slice(np.array([3])) == slice(3, 4)
+
+    def test_passthrough_and_rejects(self):
+        s = slice(2, 9)
+        assert as_block_slice(s) is s
+        assert as_block_slice(np.array([], dtype=np.int64)) is None
+        assert as_block_slice(np.array([0, 2, 4])) is None
+        assert as_block_slice(np.array([5, 4, 3])) is None
+        # negative indices are consecutive but slice(-3, 0) would be empty
+        assert as_block_slice(np.array([-3, -2, -1])) is None
+        # boolean masks index by position, not value: never sliceable
+        assert as_block_slice(np.array([False, True])) is None
+        assert as_block_slice(np.array([True])) is None
+
+    def test_restrict_matches_fancy(self):
+        from repro.core.fixedpoint import restrict
+
+        g = np.arange(10.0)
+        np.testing.assert_array_equal(restrict(g, np.arange(3, 7)), g[3:7])
+        scattered = np.array([8, 2, 5])
+        np.testing.assert_array_equal(restrict(g, scattered), g[scattered])
+        mask = np.zeros(10, bool)
+        mask[[0, 4]] = True
+        np.testing.assert_array_equal(restrict(g, mask), g[mask])
+        # length/end-point trap: len == last - first + 1 but not a run
+        assert as_block_slice(np.array([0, 2, 2, 3, 4])) is None
+        assert as_block_slice(np.arange(6).reshape(2, 3)) is None
+
+    def test_projection_triviality_detection(self):
+        assert _jac().is_projection_trivial()
+        assert _vi().is_projection_trivial()
+        assert not _scf().is_projection_trivial()  # symmetrizes
+        assert not UHFSCFProblem(PPPChain(n_atoms=4)).is_projection_trivial()
+
+    def test_slice_and_fancy_writes_agree(self):
+        """apply_return through the memoized slice == through fancy
+        indexing with equal index values (same coordinator state after)."""
+        prob = _jac()
+        cfg = RunConfig(mode="async", compute_time=1e-3, record_every=10**9)
+        ca, cb = Coordinator(prob, cfg), Coordinator(prob, cfg)
+        assert ca._block_slices  # contiguous default partition memoized
+        rng = np.random.default_rng(0)
+        prof = FaultProfile()
+        for w, blk in enumerate(ca.blocks):
+            vals = rng.standard_normal(len(blk))
+            ca.apply_return(blk, vals, prof, staleness=0)  # slice path
+            cb.apply_return(blk.copy(), vals, prof, staleness=0)  # fancy
+        np.testing.assert_array_equal(ca.x, cb.x)
+
+
+class TestPoolReuse:
+    """Persistent process pools: a second run() on the same problem spawns
+    zero new interpreters and produces the same RunResult schema."""
+
+    def test_second_run_reuses_workers(self):
+        shutdown_pools()
+        prob = JacobiProblem(grid=8, sweeps=3, seed=123)
+        cfg = RunConfig(mode="async", executor="process", n_workers=2,
+                        tol=1e-10, max_updates=40)
+        try:
+            r1 = run_fixed_point(prob, cfg)
+            stats = pool_stats()
+            assert len(stats) == 1
+            (key, info), = stats.items()
+            pids = list(info["pids"])
+            assert info["runs_served"] == 1 and info["healthy"]
+            r2 = run_fixed_point(prob, cfg)
+            stats = pool_stats()
+            assert set(stats) == {key}          # no second pool
+            assert stats[key]["pids"] == pids   # zero new interpreters
+            assert stats[key]["runs_served"] == 2
+            # identical result schema and statistics semantics
+            assert vars(r1).keys() == vars(r2).keys()
+            assert r1.worker_updates == r2.worker_updates == 40
+            for r in (r1, r2):
+                assert r.rounds == r.worker_updates
+                assert len(r.history) >= 1
+        finally:
+            shutdown_pools()
+        assert pool_stats() == {}
+
+    def test_distinct_config_keys_get_distinct_pools(self):
+        shutdown_pools()
+        prob = JacobiProblem(grid=8, sweeps=3, seed=123)
+        try:
+            for p in (1, 2):
+                run_fixed_point(prob, RunConfig(
+                    mode="async", executor="process", n_workers=p,
+                    tol=1e-10, max_updates=10))
+            assert len(pool_stats()) == 2  # keyed on n_workers
+        finally:
+            shutdown_pools()

@@ -201,3 +201,45 @@ class TestAndersonMixKernel:
                                jnp.asarray(alpha), beta=1.0)
         np.testing.assert_allclose(np.asarray(out), want, rtol=1e-8,
                                    atol=1e-8)
+
+    @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5),
+                                            (jnp.float64, 1e-13)])
+    @pytest.mark.parametrize("N,block_n", [
+        (1000, 256),   # N % block_n != 0: bn must shrink to a divisor
+        (4096, 4096),  # single block
+        (513, 128),    # prime-ish N: worst-case divisor search
+    ])
+    def test_dtypes_and_nondivisible_blocks(self, dtype, rtol, N, block_n):
+        """Pallas vs ref_anderson_mix across dtypes and N % block_n != 0."""
+        jax.config.update("jax_enable_x64", True)
+        r = np.random.default_rng(11)
+        h = 4
+        X = jnp.asarray(r.standard_normal((h, N)), dtype)
+        G = jnp.asarray(r.standard_normal((h, N)), dtype)
+        a = r.standard_normal(h)
+        a = jnp.asarray(a / a.sum(), dtype)
+        out = ops.anderson_mix(X, G, a, beta=0.7, block_n=block_n)
+        want = ref.ref_anderson_mix(X, G, a, beta=0.7)
+        assert out.dtype == dtype and out.shape == (N,)
+        np.testing.assert_allclose(np.asarray(out, np.float64),
+                                   np.asarray(want, np.float64),
+                                   rtol=rtol, atol=rtol)
+
+    def test_state_dispatches_through_kernel(self):
+        """AndersonState with mix_kernel_n set routes the combine through
+        the Pallas kernel and stays within float tolerance of the
+        numpy-path proposal."""
+        from repro.core.anderson import AndersonConfig, AndersonState
+
+        r = np.random.default_rng(6)
+        n = 300
+        kern = AndersonState(AndersonConfig(m=3, beta=0.6, mix_kernel_n=n))
+        ref_st = AndersonState(AndersonConfig(m=3, beta=0.6))
+        for _ in range(5):
+            x, g = r.standard_normal(n), r.standard_normal(n)
+            kern.push(x, g)
+            ref_st.push(x, g)
+        out, want = kern.propose(), ref_st.propose()
+        assert out is not None
+        np.testing.assert_allclose(out, want, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(kern.last_alpha, ref_st.last_alpha)

@@ -4,16 +4,23 @@
 Fails when:
 - an intra-repo markdown link in README.md or docs/*.md points at a file
   that does not exist;
+- a link's ``#anchor`` fragment does not resolve to a heading in the
+  target markdown file (GitHub slug rules), so section renames cannot
+  silently orphan cross-references;
 - the executor table in README.md (the table after the
   ``<!-- executor-table -->`` marker) disagrees with the engine registry
   (``known_executors()``: registered backends plus known-but-unavailable
-  ones, so the table is stable whether or not optional deps are installed).
+  ones, so the table is stable whether or not optional deps are installed);
+- ``BENCH_hotpath.json`` (the committed hot-path perf trajectory,
+  rewritten by ``make perf``) is missing or lacks its baseline/current
+  sections.
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
 
 from __future__ import annotations
 
+import json
 import re
 import sys
 from pathlib import Path
@@ -23,7 +30,30 @@ DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 
 # [text](target) — target captured up to the closing paren, no whitespace.
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 TABLE_MARKER = "<!-- executor-table -->"
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, punctuation out, spaces -> -."""
+    s = re.sub(r"[`*_]", "", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set:
+    """Heading anchors per GitHub rules: fenced code blocks don't produce
+    headings, and duplicate headings get -1, -2, … suffixes."""
+    text = re.sub(r"^```.*?^```", "", md_path.read_text(),
+                  flags=re.MULTILINE | re.DOTALL)
+    anchors: set = set()
+    counts: dict = {}
+    for h in HEADING_RE.findall(text):
+        slug = _slug(h)
+        k = counts.get(slug, 0)
+        counts[slug] = k + 1
+        anchors.add(slug if k == 0 else f"{slug}-{k}")
+    return anchors
 
 
 def check_links(errors: list) -> int:
@@ -33,14 +63,39 @@ def check_links(errors: list) -> int:
             target = m.group(1)
             if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:  # same-document anchor
-                continue
-            n += 1
-            if not (doc.parent / path).resolve().exists():
-                errors.append(
-                    f"{doc.relative_to(ROOT)}: broken link -> {target}")
+            path, _, frag = target.partition("#")
+            dest = (doc.parent / path).resolve() if path else doc
+            if path:
+                n += 1
+                if not dest.exists():
+                    errors.append(
+                        f"{doc.relative_to(ROOT)}: broken link -> {target}")
+                    continue
+            if frag and dest.suffix == ".md":
+                n += 1
+                if frag not in _anchors(dest):
+                    errors.append(
+                        f"{doc.relative_to(ROOT)}: dead anchor -> {target} "
+                        f"(no such heading in {dest.relative_to(ROOT)})")
     return n
+
+
+def check_bench_trajectory(errors: list) -> None:
+    """BENCH_hotpath.json must exist and keep its documented shape."""
+    path = ROOT / "BENCH_hotpath.json"
+    if not path.exists():
+        errors.append("BENCH_hotpath.json missing (run `make perf`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_hotpath.json unparseable: {e}")
+        return
+    for section in ("baseline_pre_pr", "current"):
+        for key in ("arrivals_per_sec", "accel_fire_sec", "process_run_sec"):
+            if key not in data.get(section, {}):
+                errors.append(
+                    f"BENCH_hotpath.json: missing {section}.{key}")
 
 
 def check_executor_table(errors: list) -> None:
@@ -70,13 +125,15 @@ def main() -> None:
     errors: list = []
     n_links = check_links(errors)
     check_executor_table(errors)
+    check_bench_trajectory(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
             print(f"  - {e}")
         raise SystemExit(1)
-    print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links, "
-          "executor table matches registry)")
+    print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
+          "and anchors, executor table matches registry, BENCH_hotpath.json "
+          "schema intact)")
 
 
 if __name__ == "__main__":
