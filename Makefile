@@ -11,6 +11,11 @@
 #                     Jacobi g=512 and >=5x faster Anderson fires vs the
 #                     committed pre-PR baseline, warm process pool must
 #                     reuse its workers.  Rewrites BENCH_hotpath.json.
+#                     Then the evaluation-pipeline offload gate
+#                     (benchmarks/accel_offload.py): worker-eval
+#                     arrivals/sec >= 1.5x coordinator-eval on the process
+#                     backend at Jacobi g=512.  Rewrites BENCH_offload.json.
+#                     REPRO_PERF_SKIP_GATE=1 records without gating.
 # `make smoke`      — docs-check + perf gate + ~2 min real-concurrency
 #                     benchmark: sync-vs-async under a 100 ms straggler
 #                     measured on the thread AND process backends (asserts
@@ -31,6 +36,7 @@ docs-check:
 
 perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.perf_hotpath --check
+	PYTHONPATH=src $(PYTHON) -m benchmarks.accel_offload --check
 
 smoke: docs-check perf
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke

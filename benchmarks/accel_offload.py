@@ -1,0 +1,250 @@
+"""Evaluation-pipeline offload benchmark + regression gate (BENCH_offload.json).
+
+PR 3 made arrivals O(block) and fires ~14x cheaper, but with
+``accel_eval="coordinator"`` every fire still evaluates the full map and
+the Eq. 5 safeguard residuals *inside* the coordinator — while it does, no
+arrivals are applied (the coordinator-serialization regime the async-
+optimization literature warns about).  ``accel_eval="worker"`` offloads
+those evaluations through the backends' EvalService so fires overlap with
+arrivals.  This benchmark measures both placements on the real thread and
+process backends, per (state size n, worker count p):
+
+- **arrivals/sec** — applied worker updates over wall time, the headline
+  throughput a serialized coordinator caps;
+- **arrivals/sec-while-firing** — worker updates applied *inside*
+  begin->commit fire windows over the accumulated window time.  With
+  coordinator-side evaluation this is identically 0 (the window is a
+  blocking evaluation); offload is precisely what makes it nonzero;
+- **coordinator occupancy** — ``RunResult.coordinator_busy_frac``;
+- the **virtual-time prediction** of the same ratio: the simulator's
+  opt-in evaluation-cost model (``cfg.eval_time``) run with both
+  placements, calibrated with this machine's measured per-update and
+  per-evaluation costs.
+
+``--check`` (the ``make perf`` gate) asserts the offload actually buys
+throughput where it matters: on the process backend at Jacobi g=512
+(n=262 144, the largest-n case) worker-eval arrivals/sec must be
+>= 1.5x the coordinator-eval baseline.  The ratio compares two runs
+measured back-to-back on the same warm pool, so it is far less
+machine-sensitive than an absolute baseline; ``REPRO_PERF_SKIP_GATE=1``
+still skips it for pathological environments.  Results are written to
+``BENCH_offload.json`` at the repo root (schema gated by
+``tools/docs_check.py``).
+
+Run:  PYTHONPATH=src python -m benchmarks.accel_offload [--check] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+from repro.core import (
+    AndersonConfig,
+    RunConfig,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.problems import JacobiProblem
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_offload.json"
+
+#: worker-eval over coordinator-eval arrivals/sec on the gate case
+GATE_RATIO = 1.5
+GATE_CASE = "process/jacobi_g512_p4"
+
+#: (backend, grid, workers, max_updates); the gate watches the largest-n
+#: process case, the rest map the p and n axes.
+CASES = [
+    ("thread", 256, 4, 240),
+    ("process", 128, 4, 320),
+    ("process", 512, 2, 120),
+    ("process", 512, 4, 120),
+]
+FAST_CASES = [("thread", 64, 4, 240), ("process", 64, 4, 320)]
+
+
+def _measure_eval_costs(prob) -> tuple:
+    """(per-block-update, per-pipeline-eval) seconds, warm jit."""
+    x = prob.initial()
+    blk = prob.default_blocks(4)[0]
+    prob.block_update(x, blk)
+    prob.full_map(x)
+    prob.residual_norm(x)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        prob.block_update(x, blk)
+    t_block = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    for _ in range(3):
+        prob.full_map(x)
+        prob.residual_norm(x)
+    # the fire pipeline mixes full maps and residual norms; use their mean
+    t_eval = (time.perf_counter() - t0) / 6
+    return max(t_block, 1e-7), max(t_eval, 1e-7)
+
+
+def _cfg(backend: str, p: int, max_updates: int, placement: str,
+         **kw) -> RunConfig:
+    return RunConfig(
+        mode="async", executor=backend, n_workers=p, tol=0.0,  # fixed work
+        max_updates=max_updates, max_wall=120.0,
+        accel=AndersonConfig(m=5), fire_every=p, accel_eval=placement,
+        seed=0, **kw)
+
+
+def _stats(res) -> dict:
+    wall = max(res.wall_time, 1e-9)
+    return {
+        "arrivals_per_sec": res.worker_updates / wall,
+        "arrivals_per_sec_while_firing": (
+            res.fire_window_arrivals / res.fire_window_s
+            if res.fire_window_s > 0 else 0.0),
+        "coordinator_busy_frac": res.coordinator_busy_frac,
+        "wall_s": res.wall_time,
+        "worker_updates": res.worker_updates,
+        "fires": res.accel_fires,
+        "offloaded_evals": res.offloaded_evals,
+        "discards": res.accel_discards,
+    }
+
+
+def _one_case(backend: str, grid: int, p: int, max_updates: int) -> dict:
+    prob = JacobiProblem(grid=grid, sweeps=5, seed=0)
+    t_block, t_eval = _measure_eval_costs(prob)
+    out = {}
+    for placement in ("coordinator", "worker"):
+        res = run_fixed_point(prob, _cfg(backend, p, max_updates, placement))
+        out[placement] = _stats(res)
+    out["ratio_arrivals_per_sec"] = (
+        out["worker"]["arrivals_per_sec"]
+        / max(out["coordinator"]["arrivals_per_sec"], 1e-9))
+    # Virtual-time prediction of the same ratio (evaluation-cost model,
+    # calibrated with this machine's measured costs).
+    pred = {}
+    for placement in ("coordinator", "worker"):
+        res = run_fixed_point(prob, _cfg(
+            "virtual", p, max_updates, placement,
+            compute_time=t_block, eval_time=t_eval))
+        pred[placement] = res.worker_updates / max(res.wall_time, 1e-9)
+    out["predicted_ratio"] = (
+        pred["worker"] / max(pred["coordinator"], 1e-9))
+    out["calibration"] = {"block_s": t_block, "eval_s": t_eval}
+    return out
+
+
+def measure(fast: bool = False) -> dict:
+    cur = {}
+    try:
+        for backend, grid, p, max_updates in (FAST_CASES if fast else CASES):
+            cur[f"{backend}/jacobi_g{grid}_p{p}"] = _one_case(
+                backend, grid, p, max_updates)
+    finally:
+        shutdown_pools()
+    return cur
+
+
+def check(cur: dict) -> list:
+    """Regression gate; returns failure strings."""
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    case = cur.get(GATE_CASE)
+    if case is None:
+        fails.append(f"gate case {GATE_CASE} not measured (--fast run?)")
+        return fails
+    ratio = case["ratio_arrivals_per_sec"]
+    if ratio < GATE_RATIO:
+        fails.append(
+            f"{GATE_CASE}: worker-eval arrivals/sec only {ratio:.2f}x "
+            f"coordinator-eval (< {GATE_RATIO}x) — offloaded fires are "
+            "not overlapping with arrivals")
+    if case["worker"]["arrivals_per_sec_while_firing"] <= 0.0:
+        fails.append(
+            f"{GATE_CASE}: no arrivals were applied inside worker-eval "
+            "fire windows")
+    return fails
+
+
+def _rows(cur: dict) -> list:
+    rows = []
+    for name, case in cur.items():
+        for placement in ("coordinator", "worker"):
+            s = case[placement]
+            rows.append(row(
+                f"accel_offload/{name}/{placement}",
+                1e6 / max(s["arrivals_per_sec"], 1e-9),
+                f"arrivals/s={s['arrivals_per_sec']:.0f};"
+                f"awf={s['arrivals_per_sec_while_firing']:.0f}/s;"
+                f"busy={s['coordinator_busy_frac']:.2f};"
+                f"fires={s['fires']};offl={s['offloaded_evals']};"
+                f"disc={s['discards']}"))
+        rows.append(row(
+            f"accel_offload/{name}/ratio", 0.0,
+            f"measured={case['ratio_arrivals_per_sec']:.2f}x;"
+            f"predicted={case['predicted_ratio']:.2f}x"))
+    return rows
+
+
+def _persist(cur: dict) -> None:
+    """Write BENCH_offload.json (the schema tools/docs_check.py gates on)."""
+    out = {
+        "description": "evaluation-pipeline offload benchmark: "
+                       "coordinator- vs worker-evaluated accel/record on "
+                       "the real backends (see benchmarks/accel_offload.py "
+                       "and docs/architecture.md, 'evaluation pipeline')",
+        "gate": {"case": GATE_CASE, "min_ratio_arrivals_per_sec": GATE_RATIO},
+        "current": cur,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point: measure, persist, report rows.
+
+    The placement ratio is reported, not asserted, here (same-machine
+    back-to-back ratio gates belong to `make perf` via --check)."""
+    cur = measure(fast=fast)
+    if not fast:
+        _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("accel_offload_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="small cases only (skips the gate case)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the offload gate fails")
+    args = ap.parse_args()
+    cur = measure(fast=args.fast)
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if not args.fast:
+        _persist(cur)
+        print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("accel-offload-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                f"{GATE_CASE} worker/coordinator arrivals/sec >= {GATE_RATIO}x")
+        print(f"accel-offload-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

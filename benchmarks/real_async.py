@@ -14,12 +14,20 @@ The paper's claim (async > 1.5x sync under a 100 ms straggler) must hold
 on the *measured* rows: the thread gate is ISSUE 1, the process gate —
 workers in separate interpreters, no GIL sharing — is ISSUE 2.
 
-``--fast`` trims the sweep to {0, 100 ms}, shrinks the problems, and runs
+An accel-placement section (ISSUE 4) closes the sweep: Jacobi and VI with
+Anderson(m=5) under the 100 ms straggler, for BOTH evaluation placements
+(``accel_eval="coordinator"`` vs ``"worker"``), each measured row carrying
+the virtual evaluation-cost model's prediction — and the same >1.5x
+async-over-sync gates re-asserted with the evaluations offloaded.
+
+``--fast`` trims the sweep to {0, 100 ms}, shrinks the problems, runs
 the process backend only on the Jacobi gate (its pool startup pays a JAX
-import per worker); the full run sweeps every combination.
+import per worker), and keeps only the worker placement of the accel
+section; the full run sweeps every combination.
 """
 
 from repro.core import (
+    AndersonConfig,
     FaultProfile,
     RunConfig,
     available_executors,
@@ -52,9 +60,10 @@ def _problems(fast: bool):
     ]
 
 
-def _pair(prob, tol, executor, faults, compute=None):
+def _pair(prob, tol, executor, faults, compute=None, **extra):
     """One sync + one async run; returns (sync_result, async_result)."""
-    kw = dict(executor=executor, tol=tol, max_updates=10**6, faults=faults)
+    kw = dict(executor=executor, tol=tol, max_updates=10**6, faults=faults,
+              **extra)
     if compute is not None:  # the simulator needs a cost model
         kw["compute_time"] = compute
     s = run_fixed_point(prob, RunConfig(mode="sync", **kw))
@@ -108,6 +117,49 @@ def run(fast: bool = False):
                     # Measured acceptance gates (paper §5.1 ordering).
                     assert sp > 1.5, (
                         f"{backend}: measured async speedup {sp:.2f}x <= 1.5x")
+    # ---- accel placement sweep (paper §6: worker-offloaded eval) -------- #
+    # Jacobi + VI with Anderson under the gate straggler, both evaluation
+    # placements; virtual rows use the evaluation-cost model (eval_time =
+    # the calibrated per-update cost) so each placement has a real
+    # prediction, and the >1.5x async-over-sync gates are re-asserted with
+    # the evaluations offloaded to workers.
+    accel_backends = [b for b in ("thread", "process") if b in real]
+    placements = ("worker",) if fast else ("coordinator", "worker")
+    straggler = {0: FaultProfile(delay_mean=GATE_DELAY_S)}
+    for name, prob, tol, compute in probs:
+        if name == "scf" or (fast and name != "jacobi"):
+            continue
+        accel_kw = dict(accel=AndersonConfig(m=5), fire_every=4)
+        for placement in placements:
+            tag = f"real_async/{name}/accel/{placement}"
+            vs, va = _pair(prob, tol, "virtual", straggler, compute=compute,
+                           accel_eval=placement, eval_time=compute,
+                           **accel_kw)
+            assert vs.converged and va.converged, f"{tag}/virtual diverged"
+            _emit(rows, f"{tag}/virtual/sync", vs)
+            _emit(rows, f"{tag}/virtual/async", va,
+                  f";speedup={vs.wall_time / va.wall_time:.2f}x")
+            pred = {"sync": vs.wall_time, "async": va.wall_time}
+            for backend in accel_backends:
+                s, a = _pair(prob, tol, backend, straggler,
+                             accel_eval=placement, **accel_kw)
+                assert s.converged and a.converged, f"{tag}/{backend} diverged"
+                sp = s.wall_time / a.wall_time
+                for mode, res in (("sync", s), ("async", a)):
+                    ratio = res.wall_time / max(pred[mode], 1e-12)
+                    _emit(rows, f"{tag}/{backend}/{mode}", res,
+                          f";pred={pred[mode]:.2f}s;"
+                          f"meas_over_pred={ratio:.2f}"
+                          + (f";speedup={sp:.2f}x;"
+                             f"offl={res.offloaded_evals};"
+                             f"busy={res.coordinator_busy_frac:.2f}"
+                             if mode == "async" else ""))
+                if name == "jacobi" and placement == "worker":
+                    # The paper-§5.1 ordering must survive offloaded
+                    # evaluation (acceptance gate, ISSUE 4).
+                    assert sp > 1.5, (
+                        f"{backend}: async speedup with accel_eval='worker' "
+                        f"only {sp:.2f}x <= 1.5x")
     # ---- crash/restart churn profile (async fault tolerance) ----------- #
     churn_backends = ["thread"] if fast else real
     for name, prob, tol, compute in probs:

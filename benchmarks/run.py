@@ -24,6 +24,7 @@ MODULES = [
     "kernels_bench",      # kernel micro-bench + agreement
     "real_async",         # measured Table 2 sweep on all real backends
     "perf_hotpath",       # coordinator hot-path gate (BENCH_hotpath.json)
+    "accel_offload",      # evaluation-pipeline offload gate (BENCH_offload.json)
 ]
 
 # ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and

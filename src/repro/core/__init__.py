@@ -24,9 +24,12 @@ from .engine import (
     measure_compute,
     pool_stats,
     process_pools,
+    ray_pool_stats,
+    ray_pools,
     register_executor,
     run_fixed_point,
     shutdown_pools,
+    shutdown_ray_pools,
 )
 from .coupling import (
     block_internal_coupling,
@@ -56,6 +59,9 @@ __all__ = [
     "pool_stats",
     "process_pools",
     "shutdown_pools",
+    "ray_pool_stats",
+    "ray_pools",
+    "shutdown_ray_pools",
     "FixedPointProblem",
     "contiguous_blocks",
     "coupling_density",

@@ -26,7 +26,15 @@ from .base import (
     register_executor,
     register_unavailable,
 )
-from .coordinator import Coordinator, measure_compute, worker_eval
+from .coordinator import (
+    AccelPlan,
+    Coordinator,
+    EvalItem,
+    RecordPlan,
+    measure_compute,
+    worker_eval,
+)
+from .poolreg import PoolRegistry, payload_key
 from .process import (
     ProcessPoolExecutor,
     pool_stats,
@@ -38,6 +46,7 @@ from .types import FaultProfile, RunConfig, RunResult
 from .virtual_time import VirtualTimeExecutor
 
 from . import ray_backend as _ray_backend  # registers "ray" or its absence
+from .ray_backend import ray_pool_stats, ray_pools, shutdown_ray_pools
 
 RayExecutor = getattr(_ray_backend, "RayExecutor", None)
 
@@ -52,6 +61,9 @@ __all__ = [
     "ProcessPoolExecutor",
     "RayExecutor",
     "Coordinator",
+    "EvalItem",
+    "AccelPlan",
+    "RecordPlan",
     "register_executor",
     "register_unavailable",
     "get_executor",
@@ -59,9 +71,14 @@ __all__ = [
     "known_executors",
     "measure_compute",
     "worker_eval",
+    "PoolRegistry",
+    "payload_key",
     "pool_stats",
     "process_pools",
     "shutdown_pools",
+    "ray_pool_stats",
+    "ray_pools",
+    "shutdown_ray_pools",
 ]
 
 

@@ -8,6 +8,30 @@ worker evaluations are scheduled (virtual event queue vs real threads); the
 apply/accel/record path below is byte-for-byte the behaviour of the
 pre-refactor monolithic engine, so fixed-seed virtual-time runs stay
 bit-identical.
+
+Evaluation pipeline
+-------------------
+The accel/record path is a *pure state machine* so its expensive
+evaluations (the full map at the fire's pinned iterate, the Eq. 5
+safeguard residual norms, the residual-history records) can run anywhere:
+
+- :meth:`Coordinator.accel_begin` pins the current iterate and emits the
+  first :class:`EvalItem`; :meth:`Coordinator.accel_feed` consumes one
+  evaluated item and emits the next (the safeguard residuals appear only
+  when there is a candidate to judge); :meth:`Coordinator.accel_commit`
+  applies the accept/reject verdict against the *live* iterate — guarded
+  by ``cfg.accel_stale_limit``: a fire whose evaluations took too many
+  applied arrivals to come back is discarded rather than allowed to
+  overwrite fresher blocks.
+- :meth:`Coordinator.record_begin` / :meth:`Coordinator.record_commit`
+  give residual-history evaluations the same treatment.
+
+:meth:`maybe_fire_accel` (the inline, coordinator-evaluated path every
+sync loop and the default async mode use) drives exactly this machine with
+immediate local evaluations, which keeps it bit-identical to the
+pre-split code.  Backends running with ``cfg.accel_eval == "worker"``
+drive it with offloaded evaluations instead — their EvalService — so
+fires and records overlap with arrivals.
 """
 
 from __future__ import annotations
@@ -23,6 +47,9 @@ from .types import FaultProfile, RunConfig, RunResult, _fault_for, _writable
 
 __all__ = [
     "Coordinator",
+    "EvalItem",
+    "AccelPlan",
+    "RecordPlan",
     "worker_eval",
     "measure_compute",
     "warm_problem",
@@ -74,6 +101,11 @@ def warm_problem(problem: FixedPointProblem, cfg: RunConfig,
         blocks = problem.default_blocks(cfg.n_workers)
     for blk in (blocks if worker is None else [blocks[worker]]):
         worker_eval(problem, cfg, x0, blk)
+    if cfg.accel_eval == "worker":
+        # Offloaded evaluation pipeline: workers also serve full-map and
+        # residual-norm items, so those jit specializations must be warm.
+        problem.full_map(x0)
+        problem.residual_norm(x0)
     if cfg.selection != "fixed":
         k = cfg.selection_k or max(1, problem.n // cfg.n_workers)
         sizes = {min(k, problem.n)}
@@ -118,10 +150,104 @@ def rebuild_problem(payload) -> FixedPointProblem:
     return data
 
 
+class _BusyTimer:
+    """Re-entrant-enough timer behind :meth:`Coordinator.busy` (each enter
+    opens its own interval; backends never nest them)."""
+
+    __slots__ = ("_coord", "_t0")
+
+    def __init__(self, coord: "Coordinator"):
+        self._coord = coord
+        self._t0 = 0.0
+
+    def __enter__(self) -> "_BusyTimer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._coord.busy_s += time.perf_counter() - self._t0
+
+
+# --------------------------------------------------------------------- #
+# Evaluation pipeline work items / plans
+# --------------------------------------------------------------------- #
+class EvalItem:
+    """One evaluation the accel/record pipeline needs.
+
+    ``kind`` is ``"full_map"`` (evaluate ``G`` at ``x``, returns an array)
+    or ``"res_norm"`` (``problem.residual_norm(x)``, returns a float).
+    Items are backend-agnostic: the coordinator evaluates them inline via
+    :meth:`Coordinator.eval_item`, the real backends ship ``x`` to a worker
+    (shared-memory slot, object store, pool thread) and feed the value back.
+    """
+
+    __slots__ = ("kind", "x")
+    FULL_MAP = "full_map"
+    RES_NORM = "res_norm"
+
+    def __init__(self, kind: str, x: np.ndarray):
+        self.kind = kind
+        self.x = x
+
+
+class AccelPlan:
+    """State of one in-flight Anderson/DIIS fire (begin -> feed* -> commit).
+
+    Pins the iterate and applied-update count at ``accel_begin`` so the
+    pipeline's evaluations are well-defined even while arrivals keep
+    landing; ``next_item()`` is an idempotent peek at the evaluation the
+    plan currently needs (None once the verdict is decided and the plan is
+    ready for :meth:`Coordinator.accel_commit`).
+    """
+
+    __slots__ = ("x_pin", "wu_begin", "t_begin", "stage", "g", "cand",
+                 "cur_res", "verdict", "done", "_item")
+
+    def __init__(self, x_pin: np.ndarray, wu_begin: int, t_begin: float):
+        self.x_pin = x_pin
+        self.wu_begin = wu_begin
+        self.t_begin = t_begin
+        self.stage = "map"  # "map" -> ("cur" -> "cand")? -> done
+        self.g: Optional[np.ndarray] = None
+        self.cand: Optional[np.ndarray] = None
+        self.cur_res: Optional[float] = None
+        self.verdict: Optional[str] = None  # "accept" | "fallback"
+        self.done = False
+        self._item: Optional[EvalItem] = EvalItem(EvalItem.FULL_MAP, x_pin)
+
+    def next_item(self) -> Optional[EvalItem]:
+        return self._item
+
+
+class RecordPlan:
+    """One in-flight residual-history record (begin -> commit).
+
+    The residual is evaluated at the iterate pinned at ``record_begin``;
+    the history entry keeps the begin-time ``(t, wu)`` coordinates, so an
+    offloaded record is the residual *of that moment*, delivered late.
+    """
+
+    __slots__ = ("t", "wu", "x_version", "done", "_item")
+
+    def __init__(self, x_pin: np.ndarray, wu: int, t: float, x_version: int):
+        self.t = t
+        self.wu = wu
+        self.x_version = x_version
+        self.done = False
+        self._item: Optional[EvalItem] = EvalItem(EvalItem.RES_NORM, x_pin)
+
+    def next_item(self) -> Optional[EvalItem]:
+        return self._item
+
+
 class Coordinator:
     """Shared coordinator state and apply/accel/record logic."""
 
     def __init__(self, problem: FixedPointProblem, cfg: RunConfig):
+        if cfg.accel_eval not in ("coordinator", "worker"):
+            raise ValueError(
+                f"unknown accel_eval {cfg.accel_eval!r}; "
+                "expected 'coordinator' or 'worker'")
         self.problem = problem
         self.cfg = cfg
         self.x = _writable(problem.initial())
@@ -159,6 +285,40 @@ class Coordinator:
         self.coordinator_evals = 0
         self.arrivals = 0  # worker returns seen (applied, dropped or crashed)
         self.since_record = 0  # arrivals since the last residual check
+        # --- evaluation pipeline bookkeeping --------------------------- #
+        self.offloaded_evals = 0
+        self.accel_discards = 0
+        self.busy_s = 0.0  # coordinator-occupied time (backend clock)
+        self.fire_window_s = 0.0
+        self.fire_window_arrivals = 0
+        # Real backends flip this on so inline fires measure their blocking
+        # window with perf_counter; the virtual backend keeps it off — its
+        # clock is virtual seconds, and mixing nondeterministic wall time
+        # into a fixed-seed RunResult would break reproducibility (its
+        # eval-cost model charges modeled time through accel_commit instead).
+        self.measure_fire_windows = False
+        self._fires_inflight = 0
+        self._accel_stale_limit = (
+            cfg.accel_stale_limit if cfg.accel_stale_limit is not None
+            else 4 * cfg.n_workers
+        )
+        # Residual-staleness tracking: _x_version bumps on every mutation
+        # of x; result() may reuse self.res_norm iff nothing moved since it
+        # was evaluated (saves the redundant full map the old code paid).
+        self._x_version = 0
+        self._res_version = 0
+
+    # ----------------------------------------------------------------- #
+    def busy(self):
+        """Context manager accumulating coordinator-occupied wall time.
+
+        Real backends wrap their coordinator-side sections (apply, inline
+        fires, commits) with it; ``RunResult.coordinator_busy_frac`` is the
+        accumulated time over the run's wall clock.  The virtual backend's
+        eval-cost loop charges modeled virtual seconds into ``busy_s``
+        directly instead.
+        """
+        return _BusyTimer(self)
 
     # ----------------------------------------------------------------- #
     # Index selection
@@ -214,11 +374,10 @@ class Coordinator:
             return False
         if profile.noise_std > 0.0:
             values = values + self.rng.normal(0.0, profile.noise_std, values.shape)
-        if cfg.return_mode == "full_map":
-            # Worker returned a full map evaluation on stale data: replace
-            # only its owned components from that evaluation (paper §6
-            # redesign keeps ownership but evaluates globally).
-            pass  # values already restricted by the worker wrapper
+        # (full_map returns arrive already restricted to the worker's owned
+        # components by the worker_eval wrapper — paper §6 redesign keeps
+        # ownership but evaluates globally — so both return modes apply
+        # identically here.)
         ind = self._block_slices.get(id(indices), indices)
         if cfg.block_damping is not None:
             a = cfg.block_damping
@@ -228,44 +387,133 @@ class Coordinator:
         if not self._trivial_project:
             self.x = _writable(self.problem.project(self.x))
         self.wu += 1
+        self._x_version += 1
+        if self._fires_inflight > 0:
+            self.fire_window_arrivals += 1
         self.staleness_sum += staleness
         self.staleness_n += 1
         return True
 
     # ----------------------------------------------------------------- #
+    # Evaluation pipeline: the accel fire as a begin/feed/commit state
+    # machine, and the residual record as begin/commit.  maybe_fire_accel
+    # drives it inline (coordinator-evaluated, bit-identical to the
+    # pre-split code); backends with cfg.accel_eval == "worker" feed it
+    # offloaded evaluations instead.
+    # ----------------------------------------------------------------- #
+    def eval_item(self, item: EvalItem):
+        """Coordinator-side evaluation of one pipeline work item."""
+        if item.kind == EvalItem.FULL_MAP:
+            return self.problem.full_map(item.x)
+        return self.problem.residual_norm(item.x)
+
+    def accel_begin(self, t: float = 0.0) -> Optional[AccelPlan]:
+        """Open a fire: pin the iterate, emit the full-map work item.
+
+        Returns None when acceleration is off (or monitor-mode).  The pin
+        is a copy, so arrivals applied while the plan's evaluations are in
+        flight never leak into them — offloaded staleness stays at the
+        evaluation level.
+        """
+        if self.accel is None or self.cfg.accel_mode == "monitor":
+            return None
+        plan = AccelPlan(self.x.copy(), self.wu, t)
+        self._fires_inflight += 1
+        return plan
+
+    def accel_feed(self, plan: AccelPlan, value, offloaded: bool = False) -> None:
+        """Feed one evaluated item; advances the plan's state machine.
+
+        Stage order (identical float sequence to the pre-split inline
+        code): full map -> push/propose (+ candidate projection) -> the
+        Eq. 5 safeguard's current-then-candidate residual norms, emitted
+        only when there is a candidate to judge.
+        """
+        cfg, problem = self.cfg, self.problem
+        item = plan._item
+        plan._item = None
+        if offloaded:
+            self.offloaded_evals += 1
+        elif item is not None and item.kind == EvalItem.FULL_MAP:
+            self.coordinator_evals += 1
+        if plan.stage == "map":
+            g = value
+            plan.g = g
+            f = problem.accel_residual(plan.x_pin, g)
+            self.accel.push(plan.x_pin, g, f)
+            cand = self.accel.propose()
+            if cand is None:
+                plan.verdict = "fallback"  # Eq. 5 fallback: G(x)
+                plan.done = True
+                return
+            plan.cand = _writable(problem.project(cand))
+            if cfg.accel.safeguard:
+                plan.stage = "cur"
+                plan._item = EvalItem(EvalItem.RES_NORM, plan.x_pin)
+            else:
+                plan.verdict = "accept"
+                plan.done = True
+            return
+        if plan.stage == "cur":
+            plan.cur_res = float(value)
+            plan.stage = "cand"
+            plan._item = EvalItem(EvalItem.RES_NORM, plan.cand)
+            return
+        # stage "cand": the safeguard has both norms — decide.
+        cand_res = float(value)
+        if np.isfinite(cand_res) and cand_res < plan.cur_res:
+            plan.verdict = "accept"
+        else:
+            plan.verdict = "fallback"
+        plan.done = True
+
+    def accel_commit(self, plan: AccelPlan, t: Optional[float] = None) -> str:
+        """Apply the fire's verdict against the live iterate.
+
+        Staleness guard: if more than ``cfg.accel_stale_limit`` worker
+        updates were applied since ``accel_begin`` (only possible with
+        offloaded evaluations), the fire is *discarded* — neither the
+        candidate nor the G(x_pin) fallback may overwrite blocks that are
+        fresher than the pinned iterate they were computed from.  Returns
+        the applied verdict: "accept" | "fallback" | "discard".
+        """
+        self._fires_inflight -= 1
+        if t is not None:
+            self.fire_window_s += max(0.0, t - plan.t_begin)
+        stale = self.wu - plan.wu_begin
+        if stale > self._accel_stale_limit:
+            self.accel_discards += 1
+            self.accel.record_reject()
+            return "discard"
+        if plan.verdict == "accept":
+            self.accel.record_accept()
+            self.x = plan.cand
+        else:
+            self.accel.record_reject()
+            self.x = _writable(self.problem.project(plan.g))
+        self._x_version += 1
+        return plan.verdict
+
     def maybe_fire_accel(self) -> None:
         """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3).
 
-        Per fire this costs one full map, one accel residual, and — only
-        when the safeguard actually has a candidate to judge — the two
+        Drives the begin/feed/commit machine with inline evaluations.  Per
+        fire this costs one full map, one accel residual, and — only when
+        the safeguard actually has a candidate to judge — the two
         residual-norm evaluations Eq. 5 needs.  The degenerate-window and
         safeguard-off paths skip the residual evaluations entirely.
         """
-        cfg, problem = self.cfg, self.problem
-        if self.accel is None or cfg.accel_mode == "monitor":
+        plan = self.accel_begin()
+        if plan is None:
             return
-        g = problem.full_map(self.x)
-        self.coordinator_evals += 1
-        f = problem.accel_residual(self.x, g)
-        self.accel.push(self.x, g, f)
-        cand = self.accel.propose()
-        if cand is None:
-            self.accel.record_reject()
-            self.x = _writable(problem.project(g))  # Eq. 5 fallback: G(x)
-            return
-        cand = _writable(problem.project(cand))
-        if cfg.accel.safeguard:
-            cur_res = problem.residual_norm(self.x)
-            cand_res = problem.residual_norm(cand)
-            if np.isfinite(cand_res) and cand_res < cur_res:
-                self.accel.record_accept()
-                self.x = cand
-            else:
-                self.accel.record_reject()
-                self.x = _writable(problem.project(g))
-        else:
-            self.accel.record_accept()
-            self.x = cand
+        t0 = time.perf_counter()
+        item = plan.next_item()
+        while item is not None:
+            self.accel_feed(plan, self.eval_item(item))
+            item = plan.next_item()
+        if self.measure_fire_windows:
+            self.fire_window_s += time.perf_counter() - t0
+        self.accel_commit(plan)
 
     # ----------------------------------------------------------------- #
     # Shared real-backend loop machinery (thread / process / ray).  The
@@ -342,9 +590,50 @@ class Coordinator:
             stop = True
         return stop
 
+    def arrival_tick_offload(self, t: float) -> Tuple[bool, bool]:
+        """Worker-eval variant of :meth:`arrival_tick`.
+
+        Same counters and inline stop checks, but a due residual record is
+        *reported* (second return value) instead of evaluated on the spot —
+        the backend turns it into a :meth:`record_begin` plan and feeds the
+        offloaded value back through :meth:`record_commit`, where the
+        convergence/divergence verdict is taken.
+        """
+        self.arrivals += 1
+        self.since_record += 1
+        stop = self.arrivals >= self.max_arrivals
+        record_due = False
+        if self.since_record >= self.record_every:
+            record_due = True
+            self.since_record = 0
+        if self.wu >= self.cfg.max_updates:
+            stop = True
+        if self.cfg.max_wall is not None and t > self.cfg.max_wall:
+            stop = True
+        return stop, record_due
+
     def record(self, t: float) -> float:
         self.res_norm = self.problem.residual_norm(self.x)
+        self._res_version = self._x_version
         self.history.append((t, self.wu, self.res_norm))
+        return self.res_norm
+
+    def record_begin(self, t: float) -> RecordPlan:
+        """Open an offloaded residual record at the current iterate."""
+        return RecordPlan(self.x.copy(), self.wu, t, self._x_version)
+
+    def record_commit(self, plan: RecordPlan, value,
+                      offloaded: bool = False) -> float:
+        """Feed the evaluated residual norm back; returns it (the backend
+        applies the same finite/divergence/convergence verdict the inline
+        ``record`` callers do)."""
+        if offloaded:
+            self.offloaded_evals += 1
+        plan.done = True
+        plan._item = None
+        self.res_norm = float(value)
+        self._res_version = plan.x_version
+        self.history.append((plan.t, plan.wu, self.res_norm))
         return self.res_norm
 
     def converged(self) -> bool:
@@ -356,12 +645,20 @@ class Coordinator:
     def result(self, t: float, rounds: int, converged: bool) -> RunResult:
         mean_stale = self.staleness_sum / max(self.staleness_n, 1)
         acc = self.accel
+        # Reuse the recorded residual when x has not moved since record()
+        # evaluated it (the common case: every run path records right
+        # before assembling the result) — recomputing it at the same x
+        # would return the identical float for one more full map.
+        if self._res_version == self._x_version:
+            res = self.res_norm
+        else:
+            res = self.problem.residual_norm(self.x)
         return RunResult(
             x=self.x,
             converged=converged,
             worker_updates=self.wu,
             wall_time=t,
-            residual_norm=self.problem.residual_norm(self.x),
+            residual_norm=res,
             history=self.history,
             rounds=rounds,
             drops=self.drops,
@@ -374,4 +671,10 @@ class Coordinator:
             error_norm=self.problem.error_norm(self.x),
             crashes=self.crashes,
             restarts=self.restarts,
+            offloaded_evals=self.offloaded_evals,
+            accel_discards=self.accel_discards,
+            coordinator_busy_frac=(
+                min(1.0, self.busy_s / t) if t > 0 else 0.0),
+            fire_window_s=self.fire_window_s,
+            fire_window_arrivals=self.fire_window_arrivals,
         )

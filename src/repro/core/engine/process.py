@@ -40,6 +40,21 @@ divergence: an async crash-restart is counted when the crash *arrives*
 (the worker enforces its downtime before taking the next dispatch), so a
 run that stops mid-downtime may count a restart that never rejoined.
 
+EvalService (``cfg.accel_eval == "worker"``, async mode)
+--------------------------------------------------------
+Accel-fire and residual-record evaluations are offloaded to the pool over
+an ``("eval", kind)`` message: the coordinator writes the pinned iterate
+into the chosen worker's shared-memory *result slot*, the worker evaluates
+the full map (result written back into the same slot — full-map arrays are
+never pickled) or the residual norm (a scalar over the queue), and the
+coordinator feeds the value through the begin/feed/commit pipeline while
+every other worker's arrivals keep being applied.  The worker serving an
+eval item is simply not redispatched a block task until the item returns —
+offload diverts one worker, it never blocks the coordinator.  A simulated
+eval-service fault (``FaultProfile.eval_crash_prob``, drawn by the worker)
+reports ``eval_crash`` and the coordinator falls back to evaluating that
+item itself; a run can lose every offloaded evaluation and still converge.
+
 ``cfg.compute_time`` is ignored — compute cost is whatever the hardware
 takes.  Pool startup and per-run warm-up happen before ``t0``, so measured
 wall-clock covers only the iteration itself.
@@ -48,12 +63,10 @@ wall-clock covers only the iteration itself.
 from __future__ import annotations
 
 import atexit
-import hashlib
 import os
-import pickle
 import queue as queue_mod
 import time
-from collections import OrderedDict
+from collections import deque
 from multiprocessing import get_context, shared_memory
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -62,12 +75,16 @@ import numpy as np
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor
 from .coordinator import (
+    AccelPlan,
     Coordinator,
+    EvalItem,
+    RecordPlan,
     problem_payload,
     rebuild_problem,
     warm_problem,
     worker_eval,
 )
+from .poolreg import PoolRegistry, payload_key
 from .types import RunConfig, RunResult, _fault_for
 
 __all__ = [
@@ -117,6 +134,9 @@ def _worker_main(
       ("run", cfg, seed_seq, my_block)   — per-run setup: warm + reseed
       ("async", idx_or_None)             — snapshot shm, eval, own-rng faults
       ("sync", idx_or_None, delay, crashed) — coordinator-planned faults
+      ("eval", kind)                     — EvalService item: the input x is
+                                           in this worker's result slot;
+                                           kind is "full_map" | "res_norm"
       None                               — shut the interpreter down
     ``my_block`` is this worker's own row of the coordinator's memoized
     partition (the only one it ever evaluates); ``idx_or_None`` of None
@@ -124,8 +144,10 @@ def _worker_main(
     pickle index arrays.
 
     Messages out (``result_q``): ``(w, kind, data, snap_wu)`` with kind in
-    {"boot", "ready", "ok", "crash", "error"}; for "ok" the values are in
-    the shared result slot and ``data`` is their length.
+    {"boot", "ready", "ok", "crash", "eval_ok", "eval_crash", "error"};
+    for "ok" the values are in the shared result slot and ``data`` is
+    their length; for "eval_ok" the full-map result is in the slot
+    (``data`` = its length) or ``data`` is the residual-norm scalar.
     """
     shm = slot = None
     try:
@@ -149,6 +171,23 @@ def _worker_main(
                 prof = _fault_for(cfg, w)
                 rng = np.random.default_rng(seed_seq)
                 result_q.put((w, "ready", None, 0))
+                continue
+            if kind == "eval":
+                # Offloaded accel/record evaluation: input x is whatever
+                # the coordinator wrote into our (otherwise idle) slot.
+                _, ekind = task
+                xin = slot_view[:n].copy()
+                if (prof.eval_crash_prob > 0.0
+                        and rng.random() < prof.eval_crash_prob):
+                    result_q.put((w, "eval_crash", None, 0))
+                    continue
+                if ekind == "full_map":
+                    g = np.asarray(problem.full_map(xin), dtype=np.float64)
+                    slot_view[:n] = g
+                    result_q.put((w, "eval_ok", n, 0))
+                else:
+                    result_q.put(
+                        (w, "eval_ok", float(problem.residual_norm(xin)), 0))
                 continue
             if kind == "sync":
                 _, idx, delay, crashed = task
@@ -325,47 +364,23 @@ class _WorkerPool:
 
 
 # --------------------------------------------------------------------- #
-# Pool registry (LRU, atexit-cleaned)
+# Pool registry (shared LRU logic in .poolreg, atexit-cleaned)
 # --------------------------------------------------------------------- #
-_POOLS: "OrderedDict[Tuple[str, int, str], _WorkerPool]" = OrderedDict()
-
-def _pool_key(payload, cfg: RunConfig) -> Tuple[str, int, str]:
-    # The payload is hashed fresh on every run() — an identity-keyed cache
-    # would go silently stale if a caller mutated a problem in place and
-    # hand back a pool built from the OLD operator.  The pickle+sha256 of
-    # a realistic payload (sub-MB) costs ~1-2 ms, noise next to even a
-    # warm run.
-    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
-    return (hashlib.sha256(blob).hexdigest(), cfg.n_workers, cfg.return_mode)
+_POOLS = PoolRegistry(_MAX_POOLS)
 
 
 def _get_pool(payload, cfg: RunConfig, n: int) -> _WorkerPool:
-    key = _pool_key(payload, cfg)
-    pool = _POOLS.get(key)
-    if pool is not None and not pool.healthy():
-        _POOLS.pop(key, None)
-        pool.close()
-        pool = None
-    if pool is None:
-        pool = _WorkerPool(key, payload, n)
-        _POOLS[key] = pool
-    _POOLS.move_to_end(key)  # LRU
-    while len(_POOLS) > _MAX_POOLS:
-        _, old = _POOLS.popitem(last=False)
-        old.close()
-    return pool
+    key = payload_key(payload, cfg)
+    return _POOLS.get(key, lambda: _WorkerPool(key, payload, n))
 
 
 def _dispose_pool(pool: _WorkerPool) -> None:
-    _POOLS.pop(pool.key, None)
-    pool.close()
+    _POOLS.dispose(pool.key)
 
 
 def shutdown_pools() -> None:
     """Close every persistent worker pool (also registered via atexit)."""
-    while _POOLS:
-        _, pool = _POOLS.popitem(last=False)
-        pool.close()
+    _POOLS.shutdown()
 
 
 class process_pools:
@@ -405,6 +420,7 @@ class ProcessPoolExecutor(Executor):
             raise ValueError(f"unknown mode {cfg.mode!r}")
         payload = problem_payload(problem)
         coord = Coordinator(problem, cfg)
+        coord.measure_fire_windows = True  # real clock: time inline fires
         if cfg.accel is not None:
             problem.full_map(coord.x)  # compile the parent-side accel path
             # off-clock (workers warm their own paths at run setup)
@@ -414,6 +430,8 @@ class ProcessPoolExecutor(Executor):
             pool.write_x(coord)
             if cfg.mode == "sync":
                 return self._run_sync(cfg, coord, pool)
+            if cfg.accel_eval == "worker":
+                return self._run_async_offload(cfg, coord, pool)
             return self._run_async(cfg, coord, pool)
         except Exception:
             # A worker error (or timeout) leaves queues in an unknown
@@ -484,35 +502,185 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
-            prof = _fault_for(cfg, w)
-            idx = pending.pop(w)
-            redispatch = True
-            if kind == "crash":
-                coord.crashes += 1
-                if prof.restart_after is None:
-                    alive.discard(w)
-                    redispatch = False
+            with coord.busy():
+                prof = _fault_for(cfg, w)
+                idx = pending.pop(w)
+                redispatch = True
+                if kind == "crash":
+                    coord.crashes += 1
+                    if prof.restart_after is None:
+                        alive.discard(w)
+                        redispatch = False
+                    else:
+                        # Counted on arrival; the worker enforces its
+                        # downtime before picking up the redispatched task.
+                        coord.restarts += 1
                 else:
-                    # Counted on arrival; the worker enforces its downtime
-                    # before it will pick up the redispatched task.
-                    coord.restarts += 1
-            else:
-                applied = coord.apply_return(
-                    idx, pool.slot_views[w][:data], prof,
-                    staleness=coord.wu - snap_wu)
-                if applied:
-                    since_fire += 1
-                    if (coord.accel is not None
-                            and since_fire >= cfg.fire_every):
-                        coord.maybe_fire_accel()
-                        since_fire = 0
-                pool.write_x(coord)
-            stop = coord.arrival_tick(time.perf_counter() - t0)
-            if not stop and redispatch:
-                dispatch(w)
+                    applied = coord.apply_return(
+                        idx, pool.slot_views[w][:data], prof,
+                        staleness=coord.wu - snap_wu)
+                    if applied:
+                        since_fire += 1
+                        if (coord.accel is not None
+                                and since_fire >= cfg.fire_every):
+                            coord.maybe_fire_accel()
+                            since_fire = 0
+                    pool.write_x(coord)
+                stop = coord.arrival_tick(time.perf_counter() - t0)
+                if not stop and redispatch:
+                    dispatch(w)
         t = time.perf_counter() - t0
         # In-flight evaluations are discarded (same as the old teardown);
         # draining leaves the pool's queues empty for the next run.
         pool.drain(set(pending))
+        coord.record(t)
+        return coord.result(t, coord.wu, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async_offload(
+        self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
+    ) -> RunResult:
+        """Async loop with accel/record evaluations offloaded to the pool.
+
+        The coordinator keeps applying arrivals while at most one eval
+        item is in flight on one (momentarily idle) worker; an accel fire
+        or residual record is a FIFO of such items (``plans``).  The
+        serving worker is not redispatched block work until its item
+        returns; every other worker's arrive->apply->redispatch loop is
+        untouched — fires overlap with arrivals instead of stalling them.
+        """
+        t0 = time.perf_counter()
+        coord.record(0.0)
+        since_fire = 0
+        alive = set(range(cfg.n_workers))
+        pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
+        plans: "deque" = deque()  # eval pipelines; front is being served
+        eval_worker: Optional[int] = None
+        eval_item: Optional[EvalItem] = None
+        stop = False
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def dispatch(w: int) -> None:
+            idx = coord.select_indices(w)
+            pending[w] = idx
+            wire_idx = None if idx is coord.blocks[w] else idx
+            pool.task_qs[w].put(("async", wire_idx))
+
+        def service_eval(w: int) -> bool:
+            """Hand idle worker ``w`` the front plan's next item, if any.
+
+            The input iterate goes through w's result slot, which is safe
+            to write exactly now: w's last result has been consumed and it
+            has no queued task that could write the slot concurrently.
+            """
+            nonlocal eval_worker, eval_item
+            if eval_worker is not None:
+                return False
+            while plans:
+                item = plans[0].next_item()
+                if item is None:  # already complete (committed elsewhere)
+                    plans.popleft()
+                    continue
+                pool.slot_views[w][:] = item.x
+                pool.task_qs[w].put(("eval", item.kind))
+                eval_worker, eval_item = w, item
+                return True
+            return False
+
+        for w in sorted(alive):
+            dispatch(w)
+        while alive and not stop:
+            deadline = time.monotonic() + _READY_TIMEOUT_S
+            w, kind, data, snap_wu = pool.get_result(deadline)
+            if kind == "error":
+                raise RuntimeError(f"worker {w} failed: {data}")
+            if kind in ("eval_ok", "eval_crash"):
+                with coord.busy():
+                    plan = plans[0]
+                    item = eval_item
+                    eval_worker = eval_item = None
+                    if kind == "eval_crash":
+                        # Crash fallback: the offloaded evaluation was
+                        # lost — the coordinator evaluates the item itself
+                        # and the pipeline continues.
+                        val = coord.eval_item(item)
+                        offloaded = False
+                    elif item.kind == EvalItem.FULL_MAP:
+                        val = pool.slot_views[w][:data].copy()
+                        offloaded = True
+                    else:
+                        val = data  # residual-norm scalar over the queue
+                        offloaded = True
+                    if isinstance(plan, AccelPlan):
+                        coord.accel_feed(plan, val, offloaded=offloaded)
+                        if plan.next_item() is None:
+                            plans.popleft()
+                            coord.accel_commit(plan, t=elapsed())
+                            pool.write_x(coord)
+                    else:
+                        plans.popleft()
+                        res = coord.record_commit(plan, val,
+                                                  offloaded=offloaded)
+                        if not np.isfinite(res) or res > 1e60:
+                            stop = True
+                        elif coord.converged():
+                            # Confirm at the live iterate: the offloaded
+                            # record judged the pinned one and arrivals
+                            # may have landed since (inline-mode contract).
+                            res = coord.record(elapsed())
+                            if (not np.isfinite(res) or res > 1e60
+                                    or coord.converged()):
+                                stop = True
+                    if not stop and not service_eval(w):
+                        dispatch(w)
+                continue
+            with coord.busy():
+                prof = _fault_for(cfg, w)
+                idx = pending.pop(w)
+                redispatch = True
+                if kind == "crash":
+                    coord.crashes += 1
+                    if prof.restart_after is None:
+                        alive.discard(w)
+                        redispatch = False
+                    else:
+                        coord.restarts += 1
+                else:
+                    applied = coord.apply_return(
+                        idx, pool.slot_views[w][:data], prof,
+                        staleness=coord.wu - snap_wu)
+                    if applied:
+                        since_fire += 1
+                        if (coord.accel is not None
+                                and since_fire >= cfg.fire_every):
+                            since_fire = 0
+                            # One fire in flight at a time; due fires
+                            # while one is pending are coalesced.
+                            if not any(isinstance(p, AccelPlan)
+                                       for p in plans):
+                                plan = coord.accel_begin(elapsed())
+                                if plan is not None:
+                                    plans.append(plan)
+                    pool.write_x(coord)
+                tick_stop, record_due = coord.arrival_tick_offload(elapsed())
+                if record_due and not any(isinstance(p, RecordPlan)
+                                          for p in plans):
+                    plans.append(coord.record_begin(elapsed()))
+                if tick_stop:
+                    stop = True
+                if not stop and redispatch:
+                    # A restartable crash redispatches block work only: the
+                    # worker sleeps out its downtime before its next task,
+                    # and parking the single-slot eval service behind that
+                    # sleep would systematically stale-discard fires.
+                    if kind == "crash" or not service_eval(w):
+                        dispatch(w)
+        t = time.perf_counter() - t0
+        outstanding = set(pending)
+        if eval_worker is not None:
+            outstanding.add(eval_worker)
+        pool.drain(outstanding)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())

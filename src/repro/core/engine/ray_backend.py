@@ -13,6 +13,29 @@ crash downtime is enforced by a coordinator-side rejoin schedule (the
 actor itself never sleeps through its downtime, so a kill/stop never waits
 on it).
 
+Persistent actor pools
+----------------------
+Actors are pooled and reused across ``run()`` calls with the same
+per-run setup-message protocol as the process backend: a pool is keyed on
+``(problem-payload fingerprint, n_workers, return_mode)`` (see
+:mod:`repro.core.engine.poolreg`), each ``run()`` calls ``setup_run`` on
+the already-warm actors (config, fault seed, the coordinator's memoized
+block row), and a warm run creates zero new actors.  Lifecycle mirrors
+``shutdown_pools``: pools survive until :func:`shutdown_ray_pools`
+(atexit-registered), the ``with ray_pools():`` scope exits, an LRU
+eviction (``REPRO_RAY_POOLS`` pools kept, default 2), or an actor failure
+retires the pool.  :func:`ray_pool_stats` reports the live inventory.
+These helpers exist (as no-ops) even when ray is absent, so generic
+cleanup code never needs to guard the import.
+
+EvalService (``cfg.accel_eval == "worker"``, async mode)
+--------------------------------------------------------
+Accel-fire and residual-record evaluations dispatch to the actor that
+just returned a result (it is idle until its item comes back), exactly
+the process backend's discipline: one eval item in flight, coalesced
+plans, ``FaultProfile.eval_crash_prob`` losses fall back to
+coordinator-side evaluation.
+
 ``ray`` is an optional dependency: when it is not importable this module
 registers the name as *unavailable* instead of an executor class —
 ``available_executors()`` omits it (tests and benchmarks skip cleanly) and
@@ -24,21 +47,27 @@ initialized, a local instance is started with defaults.
 
 from __future__ import annotations
 
+import atexit
 import heapq
+import os
 import time
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor, register_unavailable
 from .coordinator import (
+    AccelPlan,
     Coordinator,
+    EvalItem,
+    RecordPlan,
     problem_payload,
     rebuild_problem,
     warm_problem,
     worker_eval,
 )
+from .poolreg import PoolRegistry, payload_key
 from .types import RunConfig, RunResult, _fault_for
 
 try:
@@ -46,32 +75,61 @@ try:
 except ImportError:  # pragma: no cover - exercised when ray is installed
     ray = None
 
+#: how many idle actor pools to keep alive (LRU beyond this is closed)
+_MAX_RAY_POOLS = max(1, int(os.environ.get("REPRO_RAY_POOLS", "2")))
+
 if ray is None:
     register_unavailable(
         "ray",
         "requires the optional 'ray' package (pip install 'ray>=2.0'); "
         "no other backend depends on it",
     )
-    __all__: List[str] = []
+
+    def shutdown_ray_pools() -> None:
+        """No-op without ray: there are no actor pools to close."""
+
+    def ray_pool_stats() -> Dict:
+        """No-op without ray: there are no actor pools to report."""
+        return {}
+
+    class ray_pools:
+        """No-op scope without ray (mirrors ``process_pools``)."""
+
+        def __enter__(self) -> "ray_pools":
+            return self
+
+        def __exit__(self, *exc) -> None:
+            pass
+
+    __all__: List[str] = ["shutdown_ray_pools", "ray_pool_stats", "ray_pools"]
 else:  # pragma: no cover - this environment has no ray; tested on clusters
-    __all__ = ["RayExecutor"]
+    __all__ = ["RayExecutor", "shutdown_ray_pools", "ray_pool_stats",
+               "ray_pools"]
 
     @ray.remote
     class _RayWorker:
-        """One worker actor: rebuilds the problem, serves eval requests."""
+        """One pooled worker actor: rebuilds the problem once, then serves
+        any number of runs via per-run ``setup_run`` messages."""
 
-        def __init__(self, w: int, payload, cfg: RunConfig, seed_seq,
-                     blocks=None):
+        def __init__(self, w: int, payload):
             self.w = w
-            self.cfg = cfg
             self.problem = rebuild_problem(payload)
-            # ``blocks`` is the coordinator's memoized partition, so the
-            # actor warms exactly the block object the run dispatches.
-            warm_problem(self.problem, cfg, worker=w, blocks=blocks)
-            self.prof = _fault_for(cfg, w)
-            self.rng = np.random.default_rng(seed_seq)
+            self.cfg = self.prof = self.rng = self.block = None
 
         def ready(self) -> bool:
+            return True
+
+        def setup_run(self, cfg: RunConfig, seed_seq, block) -> bool:
+            """Per-run reconfiguration: warm, reseed, re-profile.
+
+            The first run pays the jit compiles; later runs hit the
+            actor's jit cache and this is near-free.
+            """
+            self.cfg = cfg
+            self.block = block
+            warm_problem(self.problem, cfg, worker=0, blocks=[block])
+            self.prof = _fault_for(cfg, self.w)
+            self.rng = np.random.default_rng(seed_seq)
             return True
 
         def eval_sync(self, x, idx, delay: float, crashed: bool):
@@ -96,9 +154,95 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 return ("crash", None)
             return ("ok", vals)
 
+        def eval_item(self, x, kind: str):
+            """EvalService item: offloaded full-map / residual-norm."""
+            if (self.prof.eval_crash_prob > 0.0
+                    and self.rng.random() < self.prof.eval_crash_prob):
+                return ("eval_crash", None)
+            if kind == EvalItem.FULL_MAP:
+                return ("eval_ok", np.asarray(self.problem.full_map(x),
+                                              dtype=np.float64))
+            return ("eval_ok", float(self.problem.residual_norm(x)))
+
+    class _RayActorPool:
+        """A set of persistent worker actors for one (problem, p) pair."""
+
+        def __init__(self, key: Tuple[str, int, str], payload, n_workers: int):
+            self.key = key
+            self.n_workers = n_workers
+            self.runs_served = 0
+            self.actors = [
+                _RayWorker.remote(w, payload) for w in range(n_workers)
+            ]
+            try:
+                ray.get([a.ready.remote() for a in self.actors])
+            except Exception:
+                self.close()  # don't leak half-booted actors
+                raise
+
+        def setup_run(self, cfg: RunConfig, blocks) -> None:
+            seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+            ray.get([
+                a.setup_run.remote(cfg, seeds[w], blocks[w])
+                for w, a in enumerate(self.actors)
+            ])
+            self.runs_served += 1
+
+        def healthy(self, timeout: float = 30.0) -> bool:
+            try:
+                ray.get([a.ready.remote() for a in self.actors],
+                        timeout=timeout)
+                return True
+            except Exception:
+                return False
+
+        def close(self) -> None:
+            for a in self.actors:
+                try:
+                    ray.kill(a, no_restart=True)
+                except Exception:
+                    pass
+
+    _RAY_POOLS = PoolRegistry(_MAX_RAY_POOLS)
+
+    def _get_ray_pool(payload, cfg: RunConfig) -> _RayActorPool:
+        key = payload_key(payload, cfg)
+        return _RAY_POOLS.get(
+            key, lambda: _RayActorPool(key, payload, cfg.n_workers))
+
+    def shutdown_ray_pools() -> None:
+        """Close every persistent actor pool (also registered via atexit)."""
+        _RAY_POOLS.shutdown()
+
+    def ray_pool_stats() -> Dict[Tuple[str, int, str], Dict[str, object]]:
+        """Live actor-pool inventory, per pool key.
+
+        A read-only stats call must not hang on a dead pool, so the
+        health probe here uses a short timeout (reuse-time checks keep
+        the generous one)."""
+        return {
+            key: {"n_workers": pool.n_workers,
+                  "runs_served": pool.runs_served,
+                  "healthy": pool.healthy(timeout=1.0)}
+            for key, pool in _RAY_POOLS.items()
+        }
+
+    class ray_pools:
+        """Scope actor-pool lifetime: ``with ray_pools(): ...`` runs any
+        number of ray-backend sweeps on warm actors and closes them all on
+        exit (mirrors ``process_pools``)."""
+
+        def __enter__(self) -> "ray_pools":
+            return self
+
+        def __exit__(self, *exc) -> None:
+            shutdown_ray_pools()
+
+    atexit.register(shutdown_ray_pools)
+
     @register_executor
     class RayExecutor(Executor):
-        """Workers as Ray actors; wall time is real seconds."""
+        """Workers as pooled Ray actors; wall time is real seconds."""
 
         name = "ray"
 
@@ -109,22 +253,25 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 ray.init(include_dashboard=False, log_to_driver=False)
             payload = problem_payload(problem)
             coord = Coordinator(problem, cfg)
+            coord.measure_fire_windows = True  # real clock: time inline fires
             if cfg.accel is not None:
                 problem.full_map(coord.x)  # compile the accel path off-clock
-            seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
-            actors = [
-                _RayWorker.remote(w, payload, cfg, seeds[w], coord.blocks)
-                for w in range(cfg.n_workers)
-            ]
+            pool = _get_ray_pool(payload, cfg)
             try:
-                # Startup barrier: rebuild + jit warm-up happens off-clock.
-                ray.get([a.ready.remote() for a in actors])
+                # Startup barrier: rebuild + jit warm-up happens off-clock
+                # (near-free on a warm pool).
+                pool.setup_run(cfg, coord.blocks)
+                actors = pool.actors
                 if cfg.mode == "sync":
                     return self._run_sync(cfg, coord, actors)
+                if cfg.accel_eval == "worker":
+                    return self._run_async_offload(cfg, coord, actors)
                 return self._run_async(cfg, coord, actors)
-            finally:
-                for a in actors:
-                    ray.kill(a, no_restart=True)
+            except Exception:
+                # An actor error leaves futures in an unknown state:
+                # retire the whole pool rather than reuse it.
+                _RAY_POOLS.dispose(pool.key)
+                raise
 
         # ------------------------------------------------------------- #
         def _run_sync(
@@ -199,28 +346,164 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 fut = done[0]
                 w, idx, launch_wu = futures.pop(fut)
                 kind, vals = ray.get(fut)
-                prof = _fault_for(cfg, w)
-                redispatch = True
-                if kind == "crash":
-                    coord.crashes += 1
-                    redispatch = False
-                    if prof.restart_after is None:
-                        alive.discard(w)
+                with coord.busy():
+                    prof = _fault_for(cfg, w)
+                    redispatch = True
+                    if kind == "crash":
+                        coord.crashes += 1
+                        redispatch = False
+                        if prof.restart_after is None:
+                            alive.discard(w)
+                        else:
+                            heapq.heappush(
+                                rejoin, (elapsed() + prof.restart_after, w))
                     else:
-                        heapq.heappush(rejoin,
-                                       (elapsed() + prof.restart_after, w))
-                else:
-                    applied = coord.apply_return(
-                        idx, vals, prof, staleness=coord.wu - launch_wu)
-                    if applied:
-                        since_fire += 1
-                        if (coord.accel is not None
-                                and since_fire >= cfg.fire_every):
-                            coord.maybe_fire_accel()
-                            since_fire = 0
-                stop = coord.arrival_tick(elapsed())
-                if not stop and redispatch:
+                        applied = coord.apply_return(
+                            idx, vals, prof, staleness=coord.wu - launch_wu)
+                        if applied:
+                            since_fire += 1
+                            if (coord.accel is not None
+                                    and since_fire >= cfg.fire_every):
+                                coord.maybe_fire_accel()
+                                since_fire = 0
+                    stop = coord.arrival_tick(elapsed())
+                    if not stop and redispatch:
+                        dispatch(w)
+            t = elapsed()
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())
+
+        # ------------------------------------------------------------- #
+        def _run_async_offload(
+            self, cfg: RunConfig, coord: Coordinator, actors
+        ) -> RunResult:
+            """Async loop with accel/record evaluations on the actors.
+
+            Mirrors the process backend's offload loop: the actor that
+            just returned is idle, so it serves the front plan's next eval
+            item instead of being redispatched block work; every other
+            actor's arrive->apply->redispatch loop is untouched.
+            """
+            t0 = time.perf_counter()
+            coord.record(0.0)
+            since_fire = 0
+            alive: Set[int] = set(range(cfg.n_workers))
+            futures: Dict = {}  # ObjectRef -> ("block", w, idx, wu) | ("eval", w)
+            rejoin: List[Tuple[float, int]] = []
+            plans: List = []  # eval pipelines; front is being served
+            eval_inflight: Optional[EvalItem] = None
+            stop = False
+
+            def elapsed() -> float:
+                return time.perf_counter() - t0
+
+            def dispatch(w: int) -> None:
+                idx = coord.select_indices(w)
+                x_ref = ray.put(np.asarray(coord.x))
+                fut = actors[w].eval_async.remote(x_ref, idx)
+                futures[fut] = ("block", w, idx, coord.wu)
+
+            def service_eval(w: int) -> bool:
+                """Hand the idle actor ``w`` the front plan's next item."""
+                nonlocal eval_inflight
+                if eval_inflight is not None:
+                    return False
+                while plans:
+                    item = plans[0].next_item()
+                    if item is None:
+                        plans.pop(0)
+                        continue
+                    fut = actors[w].eval_item.remote(item.x, item.kind)
+                    futures[fut] = ("eval", w)
+                    eval_inflight = item
+                    return True
+                return False
+
+            for w in sorted(alive):
+                dispatch(w)
+            while not stop and alive and (futures or rejoin):
+                now = elapsed()
+                while rejoin and rejoin[0][0] <= now:
+                    _, w = heapq.heappop(rejoin)
+                    coord.restarts += 1
                     dispatch(w)
+                if not futures:
+                    time.sleep(max(0.0, rejoin[0][0] - now))
+                    continue
+                timeout = (max(0.0, rejoin[0][0] - now) if rejoin else None)
+                done, _ = ray.wait(list(futures), num_returns=1,
+                                   timeout=timeout)
+                if not done:
+                    continue
+                fut = done[0]
+                tag = futures.pop(fut)
+                if tag[0] == "eval":
+                    _, w = tag
+                    kind, value = ray.get(fut)
+                    with coord.busy():
+                        plan = plans[0]
+                        item = eval_inflight
+                        eval_inflight = None
+                        if kind == "eval_crash":
+                            value = coord.eval_item(item)  # crash fallback
+                            offloaded = False
+                        else:
+                            offloaded = True
+                        if isinstance(plan, AccelPlan):
+                            coord.accel_feed(plan, value, offloaded=offloaded)
+                            if plan.next_item() is None:
+                                plans.pop(0)
+                                coord.accel_commit(plan, t=elapsed())
+                        else:
+                            plans.pop(0)
+                            res = coord.record_commit(plan, value,
+                                                      offloaded=offloaded)
+                            if not np.isfinite(res) or res > 1e60:
+                                stop = True
+                            elif coord.converged():
+                                res = coord.record(elapsed())
+                                if (not np.isfinite(res) or res > 1e60
+                                        or coord.converged()):
+                                    stop = True
+                        if not stop and not service_eval(w):
+                            dispatch(w)
+                    continue
+                _, w, idx, launch_wu = tag
+                kind, vals = ray.get(fut)
+                with coord.busy():
+                    prof = _fault_for(cfg, w)
+                    redispatch = True
+                    if kind == "crash":
+                        coord.crashes += 1
+                        redispatch = False
+                        if prof.restart_after is None:
+                            alive.discard(w)
+                        else:
+                            heapq.heappush(
+                                rejoin, (elapsed() + prof.restart_after, w))
+                    else:
+                        applied = coord.apply_return(
+                            idx, vals, prof, staleness=coord.wu - launch_wu)
+                        if applied:
+                            since_fire += 1
+                            if (coord.accel is not None
+                                    and since_fire >= cfg.fire_every):
+                                since_fire = 0
+                                if not any(isinstance(p, AccelPlan)
+                                           for p in plans):
+                                    plan = coord.accel_begin(elapsed())
+                                    if plan is not None:
+                                        plans.append(plan)
+                    tick_stop, record_due = coord.arrival_tick_offload(
+                        elapsed())
+                    if record_due and not any(isinstance(p, RecordPlan)
+                                              for p in plans):
+                        plans.append(coord.record_begin(elapsed()))
+                    if tick_stop:
+                        stop = True
+                    if not stop and redispatch:
+                        if not service_eval(w):
+                            dispatch(w)
             t = elapsed()
             coord.record(t)
             return coord.result(t, coord.wu, coord.converged())

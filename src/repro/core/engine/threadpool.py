@@ -15,6 +15,14 @@ cost is whatever the hardware takes.  Runs are NOT bit-reproducible across
 invocations (arrival order is real scheduling), but with ``n_workers=1`` the
 trajectory matches the synchronous one and converges to the same fixed
 point, which is the parity contract tested in ``tests/test_executors.py``.
+
+EvalService (``cfg.accel_eval == "worker"``, async mode): accel fires and
+residual records run through the coordinator's begin/feed/commit pipeline
+on a dedicated eval thread instead of inline under the lock — the full-map
+and safeguard evaluations (which release the GIL) overlap with arrivals,
+so the coordinator's lock-held work stays O(block).  A simulated eval-
+service fault (``FaultProfile.eval_crash_prob``) makes the pipeline fall
+back to coordinator-side evaluation for that item.
 """
 
 from __future__ import annotations
@@ -42,6 +50,7 @@ class ThreadPoolExecutor(Executor):
 
     def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
         coord = Coordinator(problem, cfg)
+        coord.measure_fire_windows = True  # real clock: time inline fires
         # Warm every jit specialization the run will hit (per-block shapes,
         # selection-sized blocks, the accel/residual full-map path) before
         # the clock starts, so compile time doesn't skew wall-clock.  The
@@ -54,6 +63,8 @@ class ThreadPoolExecutor(Executor):
         if cfg.mode == "sync":
             return self._run_sync(problem, cfg, coord)
         if cfg.mode == "async":
+            if cfg.accel_eval == "worker":
+                return self._run_async_offload(problem, cfg, coord)
             return self._run_async(problem, cfg, coord)
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
@@ -130,7 +141,7 @@ class ThreadPoolExecutor(Executor):
             prof = _fault_for(cfg, w)
             rng = worker_rngs[w]
             while not stop.is_set():
-                with lock:
+                with lock, coord.busy():
                     if stop.is_set():
                         return
                     x_snap = coord.x.copy()
@@ -156,7 +167,7 @@ class ThreadPoolExecutor(Executor):
                     with lock:
                         coord.restarts += 1
                     continue
-                with lock:
+                with lock, coord.busy():
                     if stop.is_set():
                         return
                     applied = coord.apply_return(
@@ -180,6 +191,149 @@ class ThreadPoolExecutor(Executor):
             th.start()
         for th in threads:
             th.join()
+        t = elapsed()
+        with lock:
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async_offload(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator
+    ) -> RunResult:
+        """Async loop with the EvalService on a dedicated eval thread.
+
+        Worker threads behave exactly as in :meth:`_run_async`, but a due
+        fire only *opens* an :class:`AccelPlan` under the lock (an O(n)
+        pin) — its full-map/safeguard evaluations run on the eval thread,
+        which feeds results back and commits with the staleness guard.
+        Residual records take the same path.  At most one fire and one
+        record are in flight; further due fires/records are coalesced.
+        """
+        lock = threading.Lock()
+        stop = threading.Event()
+        state = {"since_fire": 0, "fire_plan": None, "rec_plan": None}
+        # Per-worker generators for delay/crash draws (as in _run_async);
+        # one extra stream drives the eval service's simulated faults.
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers + 1)
+        worker_rngs = [np.random.default_rng(s) for s in seeds[:-1]]
+        eval_rng = np.random.default_rng(seeds[-1])
+        eval_pool = _Pool(max_workers=1, thread_name_prefix="fp-eval")
+        t0 = time.perf_counter()
+        coord.record(0.0)
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def eval_one(item, prof: FaultProfile):
+            """Evaluate one pipeline item, simulating eval-service loss.
+
+            Returns ``(value, offloaded)``: a crashed evaluation falls
+            back to coordinator-side evaluation of the same item.
+            """
+            if (prof.eval_crash_prob > 0.0
+                    and eval_rng.random() < prof.eval_crash_prob):
+                return coord.eval_item(item), False
+            return coord.eval_item(item), True
+
+        def run_fire(plan, prof: FaultProfile) -> None:
+            item = plan.next_item()
+            while item is not None:
+                val, offloaded = eval_one(item, prof)
+                with lock, coord.busy():
+                    coord.accel_feed(plan, val, offloaded=offloaded)
+                item = plan.next_item()
+            with lock, coord.busy():
+                if not stop.is_set():
+                    coord.accel_commit(plan, t=elapsed())
+                state["fire_plan"] = None
+
+        def run_record(plan, prof: FaultProfile) -> None:
+            val, offloaded = eval_one(plan.next_item(), prof)
+            with lock, coord.busy():
+                state["rec_plan"] = None
+                if stop.is_set():
+                    return
+                res = coord.record_commit(plan, val, offloaded=offloaded)
+                if not np.isfinite(res) or res > 1e60:
+                    stop.set()
+                elif coord.converged():
+                    # The offloaded record judged the *pinned* iterate;
+                    # arrivals may have landed since.  Confirm at the live
+                    # iterate so the final verdict matches the state the
+                    # run actually returns (same contract as inline mode).
+                    res = coord.record(elapsed())
+                    if (not np.isfinite(res) or res > 1e60
+                            or coord.converged()):
+                        stop.set()
+
+        def worker_loop(w: int) -> None:
+            prof = _fault_for(cfg, w)
+            rng = worker_rngs[w]
+            while not stop.is_set():
+                with lock, coord.busy():
+                    if stop.is_set():
+                        return
+                    x_snap = coord.x.copy()
+                    launch_wu = coord.wu
+                    idx = coord.select_indices(w)
+                vals = worker_eval(problem, cfg, x_snap, idx)
+                if cfg.async_overhead > 0.0:
+                    time.sleep(cfg.async_overhead)
+                delay = prof.sample_delay(rng)
+                if delay > 0.0:
+                    time.sleep(delay)
+                if prof.sample_crash(rng):
+                    with lock, coord.busy():
+                        coord.crashes += 1
+                        tick_stop, record_due = coord.arrival_tick_offload(
+                            elapsed())
+                        if record_due and state["rec_plan"] is None:
+                            state["rec_plan"] = coord.record_begin(elapsed())
+                            eval_pool.submit(run_record, state["rec_plan"],
+                                             prof)
+                        if tick_stop:
+                            stop.set()
+                    if prof.restart_after is None or stop.is_set():
+                        return
+                    time.sleep(prof.restart_after)
+                    with lock:
+                        coord.restarts += 1
+                    continue
+                with lock, coord.busy():
+                    if stop.is_set():
+                        return
+                    applied = coord.apply_return(
+                        idx, vals, prof, staleness=coord.wu - launch_wu
+                    )
+                    if applied:
+                        state["since_fire"] += 1
+                        if (coord.accel is not None
+                                and state["since_fire"] >= cfg.fire_every):
+                            state["since_fire"] = 0
+                            if state["fire_plan"] is None:
+                                plan = coord.accel_begin(elapsed())
+                                if plan is not None:
+                                    state["fire_plan"] = plan
+                                    eval_pool.submit(run_fire, plan, prof)
+                    tick_stop, record_due = coord.arrival_tick_offload(
+                        elapsed())
+                    if record_due and state["rec_plan"] is None:
+                        state["rec_plan"] = coord.record_begin(elapsed())
+                        eval_pool.submit(run_record, state["rec_plan"], prof)
+                    if tick_stop:
+                        stop.set()
+
+        threads = [
+            threading.Thread(target=worker_loop, args=(w,), daemon=True,
+                             name=f"fp-worker-{w}")
+            for w in range(cfg.n_workers)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        stop.set()  # in-flight plans must not commit after the final record
+        eval_pool.shutdown(wait=True)
         t = elapsed()
         with lock:
             coord.record(t)

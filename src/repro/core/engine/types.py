@@ -41,6 +41,11 @@ class FaultProfile:
     max_staleness: Optional[int] = None  # in worker-updates; older => dropped
     crash_prob: float = 0.0  # probability per update the worker crashes
     restart_after: Optional[float] = None  # seconds down; None => permanent
+    # Evaluation-service fault channel (``RunConfig.accel_eval="worker"``):
+    # probability that one offloaded full-map / residual-norm evaluation is
+    # lost in flight.  The coordinator falls back to evaluating that item
+    # itself, so a lossy eval service degrades throughput, never correctness.
+    eval_crash_prob: float = 0.0
 
     def sample_delay(self, rng: np.random.Generator) -> float:
         if self.delay_mean == 0.0 and self.delay_std == 0.0:
@@ -71,6 +76,29 @@ class RunConfig:
     selection_k: Optional[int] = None  # block size for uniform/greedy
     # --- worker return mode (paper §6 future work) ----------------------- #
     return_mode: str = "block"  # "block" | "full_map"
+    # --- evaluation pipeline placement (paper §6 redesign) ---------------- #
+    # Where the accel/record full-map and safeguard-residual evaluations run
+    # in async mode.  "coordinator" (default) evaluates them inline — the
+    # pre-existing behaviour, bit-identical on the virtual backend — while
+    # "worker" offloads them through the backend's EvalService so fires and
+    # residual records overlap with arrivals (the evaluations then see a
+    # pinned, slightly stale iterate: evaluation-level staleness only).
+    # Sync mode always evaluates coordinator-side (workers idle at the
+    # barrier anyway, so there is nothing to overlap with).
+    accel_eval: str = "coordinator"  # "coordinator" | "worker"
+    # Staleness guard for offloaded fires: if more than this many worker
+    # updates were applied between accel_begin and accel_commit, the fire is
+    # discarded instead of overwriting the fresher blocks (this is what
+    # keeps offload an evaluation-level perturbation rather than
+    # iterate-level corruption).  None => 4 * n_workers.
+    accel_stale_limit: Optional[int] = None
+    # Virtual backend only: seconds of virtual time one offloaded (or, with
+    # accel_eval="coordinator", one coordinator-side) full-map /
+    # residual-norm evaluation costs.  Setting it (or accel_eval="worker")
+    # opts the async virtual loop into the evaluation-cost event model that
+    # predicts the offload speedup; None with coordinator eval keeps the
+    # golden-tested event loop byte-for-byte.
+    eval_time: Optional[float] = None
     # --- termination ------------------------------------------------------ #
     tol: float = 1e-6
     max_updates: int = 200_000
@@ -109,6 +137,19 @@ class RunResult:
     error_norm: Optional[float] = None
     crashes: int = 0  # worker crash events (in-flight update lost)
     restarts: int = 0  # crashed workers that rejoined
+    # --- evaluation pipeline (accel_eval="worker") ------------------------ #
+    offloaded_evals: int = 0  # eval items served worker-side
+    accel_discards: int = 0  # fires dropped by the commit staleness guard
+    # Fraction of the run the coordinator spent doing its own work (apply,
+    # inline fires/records, commit bookkeeping) — measured on the real
+    # backends, modeled on the virtual eval-cost loop, 0.0 otherwise.
+    coordinator_busy_frac: float = 0.0
+    # Accumulated fire-window time (begin -> commit, backend clock) and the
+    # worker updates applied inside those windows: arrivals/sec-while-firing
+    # is fire_window_arrivals / fire_window_s (0 when fires are evaluated
+    # inline — the coordinator blocks arrivals for the whole window).
+    fire_window_s: float = 0.0
+    fire_window_arrivals: int = 0
 
     def summary(self) -> str:
         return (

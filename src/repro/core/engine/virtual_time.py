@@ -19,18 +19,43 @@ Fixes folded into the extraction (relative to the monolith):
 - ``max_wall`` is checked before relaunching a worker;
 - async results report applied-update count in ``rounds`` (was hardcoded 0);
 - worker crash/restart churn (``FaultProfile.crash_prob``/``restart_after``).
+
+Evaluation-cost model (opt-in)
+------------------------------
+The default async event loop charges *zero* virtual time for coordinator
+work — fires and records are instantaneous — which is exactly the
+golden-tested behaviour and must stay byte-for-byte.  Setting
+``cfg.eval_time`` (seconds per full-map/residual-norm evaluation) or
+``cfg.accel_eval="worker"`` opts into a second event loop that models the
+evaluation pipeline explicitly, so the simulator can *predict* the offload
+speedup the real backends measure:
+
+- ``accel_eval="coordinator"``: each fire/record blocks the coordinator
+  for its items' total eval time; arrivals popping inside that window are
+  applied (and their workers relaunched) only when it ends — the
+  coordinator-serialization regime.
+- ``accel_eval="worker"``: eval items run on a modeled single-server eval
+  queue that never blocks the coordinator; fires commit (with the same
+  staleness guard as the real backends) when their last item completes,
+  and due fires/records are coalesced while one is in flight.
 """
 
 from __future__ import annotations
 
 import heapq
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor
-from .coordinator import Coordinator, measure_compute, worker_eval
+from .coordinator import (
+    AccelPlan,
+    Coordinator,
+    RecordPlan,
+    measure_compute,
+    worker_eval,
+)
 from .types import RunConfig, RunResult, _fault_for
 
 __all__ = ["VirtualTimeExecutor"]
@@ -52,6 +77,10 @@ class VirtualTimeExecutor(Executor):
         )
         if cfg.mode == "sync":
             return self._run_sync(problem, cfg, coord, compute)
+        if cfg.accel_eval == "worker" or cfg.eval_time is not None:
+            # Opt-in evaluation-cost model; the default loop below stays
+            # byte-for-byte the golden-tested code.
+            return self._run_async_evalmodel(problem, cfg, coord, compute)
         return self._run_async(problem, cfg, coord, compute)
 
     # ----------------------------------------------------------------- #
@@ -173,5 +202,173 @@ class VirtualTimeExecutor(Executor):
                     schedule_restart(worker, t + prof.restart_after)
                 continue  # permanent crash: worker never relaunches
             launch(worker, t)
+        coord.record(t)
+        return coord.result(t, coord.wu, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async_evalmodel(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator,
+        compute: float
+    ) -> RunResult:
+        """Async loop with the opt-in evaluation-cost model (see module
+        docstring).  Deterministic for a fixed seed, but NOT bit-identical
+        to the default loop — it charges virtual time for evaluations the
+        default loop treats as free.
+
+        Eval items cost ``cfg.eval_time`` (default: the per-update compute
+        cost) each.  With ``accel_eval="coordinator"`` they serialize the
+        coordinator (arrivals wait out the window); with ``"worker"`` they
+        run on a modeled single-server eval queue that overlaps with
+        arrivals — the same one-eval-in-flight, coalesced-plans discipline
+        the real offload backends use.  Eval-service faults
+        (``eval_crash_prob``) are not modeled here.
+        """
+        eval_cost = cfg.eval_time if cfg.eval_time is not None else compute
+        worker_eval_mode = cfg.accel_eval == "worker"
+        t = 0.0
+        coord.record(0.0)
+        heap: List[Tuple[float, int, str, tuple]] = []
+        seq = 0
+        coord_free = 0.0  # coordinator busy until (coordinator placement)
+        server_free = 0.0  # eval-server busy until (worker placement)
+        plans: List = []  # in-flight/queued eval pipelines (worker mode)
+        since_fire = 0
+
+        def push(done: float, tag: str, data: tuple) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (done, seq, tag, data))
+            seq += 1
+
+        def launch(worker: int, now: float) -> None:
+            prof = _fault_for(cfg, worker)
+            idx = coord.select_indices(worker)
+            vals = worker_eval(problem, cfg, coord.x, idx)
+            done = (now + compute + cfg.async_overhead
+                    + prof.sample_delay(coord.rng))
+            push(done, "work", (worker, coord.wu, idx, vals))
+
+        def submit_next_eval(now: float) -> None:
+            """Start the front plan's next item on the eval server."""
+            nonlocal server_free
+            while plans:
+                item = plans[0].next_item()
+                if item is None:
+                    plans.pop(0)
+                    continue
+                start = max(now, server_free)
+                server_free = start + eval_cost
+                push(server_free, "eval", ())
+                return
+
+        def fire_inline(now: float) -> float:
+            """Coordinator-placement fire: evaluate inline, charge time."""
+            plan = coord.accel_begin(now)
+            if plan is None:
+                return now
+            items = 0
+            item = plan.next_item()
+            while item is not None:
+                coord.accel_feed(plan, coord.eval_item(item))
+                items += 1
+                item = plan.next_item()
+            coord.busy_s += items * eval_cost
+            coord.accel_commit(plan, t=now + items * eval_cost)
+            return now + items * eval_cost
+
+        def begin_fire(now: float) -> None:
+            if worker_eval_mode:
+                if any(isinstance(p, AccelPlan) for p in plans):
+                    return  # coalesce: one fire in flight at a time
+                plan = coord.accel_begin(now)
+                if plan is not None:
+                    plans.append(plan)
+                    if len(plans) == 1:
+                        submit_next_eval(now)
+            else:
+                nonlocal coord_free
+                coord_free = fire_inline(now)
+
+        for w in range(cfg.n_workers):
+            launch(w, 0.0)
+
+        arrivals = 0
+        while (heap and coord.wu < cfg.max_updates
+               and arrivals < coord.max_arrivals):
+            te, _, tag, data = heapq.heappop(heap)
+            if tag == "eval":
+                # One eval-server item finished (worker placement only).
+                t = te
+                plan = plans[0]
+                value = coord.eval_item(plan.next_item())
+                if isinstance(plan, AccelPlan):
+                    coord.accel_feed(plan, value, offloaded=True)
+                    if plan.next_item() is None:
+                        plans.pop(0)
+                        coord.accel_commit(plan, t=te)
+                else:
+                    plans.pop(0)
+                    coord.record_commit(plan, value, offloaded=True)
+                    if not np.isfinite(coord.res_norm) or coord.res_norm > 1e60:
+                        break
+                    if coord.converged():
+                        # Confirm at the live iterate (inline contract).
+                        res = coord.record(te)
+                        if (not np.isfinite(res) or res > 1e60
+                                or coord.converged()):
+                            break
+                submit_next_eval(te)
+                continue
+            if tag == "restart":
+                (worker,) = data
+                t = te
+                coord.restarts += 1
+                launch(worker, te)
+                continue
+            worker, launch_wu, idx, vals = data
+            prof = _fault_for(cfg, worker)
+            # Coordinator-placement evals serialize arrival processing:
+            # a result landing inside the busy window waits it out.
+            t_eff = max(te, coord_free) if not worker_eval_mode else te
+            t = t_eff
+            arrivals += 1
+            crashed = prof.sample_crash(coord.rng)
+            if crashed:
+                coord.crashes += 1
+            else:
+                applied = coord.apply_return(
+                    idx, vals, prof, staleness=coord.wu - launch_wu
+                )
+                if applied:
+                    since_fire += 1
+                    if coord.accel is not None and since_fire >= cfg.fire_every:
+                        since_fire = 0
+                        begin_fire(t_eff)
+                        t_eff = t = max(t_eff, coord_free)
+            tick_stop, record_due = coord.arrival_tick_offload(t_eff)
+            if record_due:
+                if worker_eval_mode:
+                    if not any(isinstance(p, RecordPlan) for p in plans):
+                        plans.append(coord.record_begin(t_eff))
+                        if len(plans) == 1:
+                            submit_next_eval(t_eff)
+                else:
+                    coord.busy_s += eval_cost
+                    coord_free = t_eff + eval_cost
+                    # the recording worker waits out the busy window too
+                    t_eff = t = coord_free
+                    res = coord.record(coord_free)
+                    if not np.isfinite(res) or res > 1e60:
+                        break
+                    if coord.converged():
+                        break
+            if tick_stop:
+                break
+            if cfg.max_wall is not None and t > cfg.max_wall:
+                break
+            if crashed:
+                if prof.restart_after is not None:
+                    push(t_eff + prof.restart_after, "restart", (worker,))
+                continue  # permanent crash: worker never relaunches
+            launch(worker, t_eff)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())

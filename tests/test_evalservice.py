@@ -1,0 +1,424 @@
+"""Evaluation pipeline (EvalService) + persistent-pool registry tests.
+
+The accel/record path is a begin/feed/commit state machine
+(``repro.core.engine.coordinator``) so its expensive evaluations can run
+worker-side (``RunConfig.accel_eval="worker"``).  Pinned here:
+
+- the inline driver (``maybe_fire_accel``) and a manually-driven plan
+  produce bit-identical coordinator state;
+- the commit staleness guard: a discarded fire never overwrites arrivals
+  applied after ``accel_begin``;
+- ``result()`` reuses the recorded residual instead of paying a redundant
+  full map when the iterate has not moved;
+- offloaded evaluation on the real backends, including the
+  crash-during-offloaded-eval fallback (``FaultProfile.eval_crash_prob``)
+  on thread AND process;
+- the virtual backend's opt-in evaluation-cost model (deterministic, and
+  it predicts the offload speedup);
+- the shared LRU pool registry (``poolreg``) that backs both the process
+  pools and the persistent Ray actor pools — unit-tested without ray.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AndersonConfig,
+    FaultProfile,
+    RunConfig,
+    available_executors,
+    ray_pool_stats,
+    run_fixed_point,
+    shutdown_pools,
+    shutdown_ray_pools,
+)
+from repro.core.engine import AccelPlan, Coordinator, EvalItem, RecordPlan
+from repro.core.engine.poolreg import PoolRegistry, payload_key
+from conftest import ToyContraction
+
+
+class CountingToy(ToyContraction):
+    """ToyContraction that counts full-map evaluations (residual_norm and
+    component_residual route through full_map, so one counter covers every
+    coordinator-side evaluation)."""
+
+    def __init__(self):
+        super().__init__()
+        self.map_calls = 0
+
+    def full_map(self, x):
+        self.map_calls += 1
+        return super().full_map(x)
+
+
+def _drive_plan_inline(coord: Coordinator, plan: AccelPlan) -> None:
+    item = plan.next_item()
+    while item is not None:
+        coord.accel_feed(plan, coord.eval_item(item))
+        item = plan.next_item()
+
+
+def _accel_cfg(**kw):
+    base = dict(mode="async", compute_time=1e-3, accel=AndersonConfig(m=3),
+                fire_every=4, record_every=10**9)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+class TestAccelStateMachine:
+    """begin/feed/commit must be the inline fire, exactly."""
+
+    def test_manual_plan_matches_maybe_fire_accel(self):
+        """Driving the state machine by hand produces bit-identical
+        coordinator state to the inline driver, accept and reject paths
+        included (several consecutive fires walk through both)."""
+        pa, pb = ToyContraction(), ToyContraction()
+        ca = Coordinator(pa, _accel_cfg())
+        cb = Coordinator(pb, _accel_cfg())
+        prof = FaultProfile()
+        rng = np.random.default_rng(0)
+        for _ in range(6):
+            for w, blk in enumerate(ca.blocks):
+                vals = rng.standard_normal(len(blk)) * 0.1
+                ca.apply_return(blk, ca.x[blk] + vals, prof, staleness=0)
+                cb.apply_return(blk, cb.x[blk] + vals, prof, staleness=0)
+            ca.maybe_fire_accel()
+            plan = cb.accel_begin()
+            _drive_plan_inline(cb, plan)
+            cb.accel_commit(plan)
+            np.testing.assert_array_equal(ca.x, cb.x)
+        assert ca.accel.n_fire == cb.accel.n_fire > 0
+        assert ca.accel.n_accept == cb.accel.n_accept
+        assert ca.coordinator_evals == cb.coordinator_evals > 0
+
+    def test_safeguard_emits_current_then_candidate_residual(self):
+        prob = ToyContraction()
+        coord = Coordinator(prob, _accel_cfg())
+        prof = FaultProfile()
+        # Two fires so the window has history and propose() has a candidate.
+        coord.maybe_fire_accel()
+        for w, blk in enumerate(coord.blocks):
+            coord.apply_return(blk, prob.block_update(coord.x, blk), prof,
+                               staleness=0)
+        plan = coord.accel_begin()
+        item = plan.next_item()
+        assert item.kind == EvalItem.FULL_MAP
+        np.testing.assert_array_equal(item.x, plan.x_pin)
+        coord.accel_feed(plan, coord.eval_item(item))
+        item = plan.next_item()
+        assert item is not None and item.kind == EvalItem.RES_NORM
+        np.testing.assert_array_equal(item.x, plan.x_pin)  # current first
+        coord.accel_feed(plan, coord.eval_item(item))
+        item = plan.next_item()
+        assert item.kind == EvalItem.RES_NORM
+        np.testing.assert_array_equal(item.x, plan.cand)  # then candidate
+        coord.accel_feed(plan, coord.eval_item(item))
+        assert plan.next_item() is None and plan.done
+
+    def test_begin_returns_none_without_accel_or_in_monitor_mode(self):
+        prob = ToyContraction()
+        cfg = RunConfig(mode="async", compute_time=1e-3)
+        assert Coordinator(prob, cfg).accel_begin() is None
+        cfg = _accel_cfg(accel_mode="monitor")
+        assert Coordinator(prob, cfg).accel_begin() is None
+
+    def test_unknown_accel_eval_raises(self):
+        with pytest.raises(ValueError, match="accel_eval"):
+            Coordinator(ToyContraction(), RunConfig(accel_eval="nope"))
+
+
+class TestStalenessGuard:
+    """The commit guard is what keeps offload evaluation-level: a fire
+    that raced too many arrivals must be discarded, not applied."""
+
+    def _plan_with_arrivals(self, n_arrivals, **cfg_kw):
+        prob = ToyContraction()
+        coord = Coordinator(prob, _accel_cfg(**cfg_kw))
+        prof = FaultProfile()
+        plan = coord.accel_begin(0.0)
+        _drive_plan_inline(coord, plan)
+        for w, blk in enumerate(coord.blocks[:n_arrivals]):
+            coord.apply_return(blk, prob.block_update(coord.x, blk), prof,
+                               staleness=0)
+        return coord, plan
+
+    def test_discarded_fire_never_overwrites_fresh_arrivals(self):
+        coord, plan = self._plan_with_arrivals(3, accel_stale_limit=2)
+        x_fresh = coord.x.copy()
+        verdict = coord.accel_commit(plan, t=1.0)
+        assert verdict == "discard"
+        assert coord.accel_discards == 1
+        np.testing.assert_array_equal(coord.x, x_fresh)
+        # the discard is still accounted as a rejected fire
+        assert coord.accel.n_reject >= 1
+
+    def test_commit_applies_at_or_below_limit(self):
+        coord, plan = self._plan_with_arrivals(2, accel_stale_limit=2)
+        x_before = coord.x.copy()
+        verdict = coord.accel_commit(plan, t=1.0)
+        assert verdict in ("accept", "fallback")
+        assert coord.accel_discards == 0
+        assert not np.array_equal(coord.x, x_before)
+
+    def test_default_limit_scales_with_workers(self):
+        coord = Coordinator(ToyContraction(), _accel_cfg(n_workers=3))
+        assert coord._accel_stale_limit == 12  # 4 * n_workers
+
+    def test_inline_fires_never_discard(self):
+        """Coordinator-evaluated fires commit at zero staleness, so the
+        guard can never trip on the default path."""
+        prob = ToyContraction()
+        r = run_fixed_point(prob, _accel_cfg(
+            tol=1e-10, max_updates=2000, seed=1, accel_stale_limit=0))
+        assert r.accel_fires > 0
+        assert r.accel_discards == 0
+
+
+class TestRecordPipeline:
+    def test_record_commit_keeps_pinned_coordinates(self):
+        prob = ToyContraction()
+        coord = Coordinator(prob, RunConfig(mode="async", compute_time=1e-3))
+        prof = FaultProfile()
+        plan = coord.record_begin(1.5)
+        wu_pin = coord.wu
+        # arrivals land while the record evaluation is "in flight"
+        for blk in coord.blocks[:2]:
+            coord.apply_return(blk, prob.block_update(coord.x, blk), prof,
+                               staleness=0)
+        val = prob.residual_norm(plan.next_item().x)
+        res = coord.record_commit(plan, val, offloaded=True)
+        assert coord.history[-1] == (1.5, wu_pin, res)
+        assert coord.offloaded_evals == 1
+        assert plan.next_item() is None and plan.done
+
+    def test_result_reuses_recorded_residual(self):
+        prob = CountingToy()
+        coord = Coordinator(prob, RunConfig(mode="async", compute_time=1e-3))
+        prof = FaultProfile()
+        coord.record(0.0)
+        calls = prob.map_calls
+        r = coord.result(0.0, 0, False)
+        assert prob.map_calls == calls  # reused, no redundant full map
+        assert r.residual_norm == coord.res_norm
+        vals = prob.block_update(coord.x, coord.blocks[0])
+        calls = prob.map_calls  # (block_update pays its own map call)
+        coord.apply_return(coord.blocks[0], vals, prof, staleness=0)
+        coord.result(0.0, 0, False)
+        assert prob.map_calls == calls + 1  # x moved: recomputed once
+
+
+class TestWorkerEvalBackends:
+    """Offloaded evaluation end-to-end on the real backends."""
+
+    def test_thread_worker_eval_offloads_and_converges(self):
+        prob = ToyContraction()
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", executor="thread", n_workers=2, tol=1e-8,
+            max_updates=50000, accel=AndersonConfig(m=3), fire_every=4,
+            accel_eval="worker"))
+        assert r.converged
+        assert np.linalg.norm(r.x - prob.x_star) < 1e-6
+        assert r.offloaded_evals > 0
+
+    def test_process_worker_eval_offloads_and_converges(self):
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=8, sweeps=3, seed=0)
+        try:
+            r = run_fixed_point(prob, RunConfig(
+                mode="async", executor="process", n_workers=2, tol=1e-8,
+                max_updates=50000, accel=AndersonConfig(m=3), fire_every=4,
+                accel_eval="worker"))
+        finally:
+            shutdown_pools()
+        assert r.converged
+        assert prob.residual_norm(r.x) < 1e-8
+        assert r.offloaded_evals > 0
+
+    @pytest.mark.parametrize("executor", ["thread", "process"])
+    def test_eval_crash_falls_back_to_coordinator(self, executor):
+        """A run that loses EVERY offloaded evaluation must fall back to
+        coordinator-side evaluation and still converge."""
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=8, sweeps=3, seed=0)
+        faults = FaultProfile(eval_crash_prob=1.0)
+        try:
+            r = run_fixed_point(prob, RunConfig(
+                mode="async", executor=executor, n_workers=2, tol=1e-8,
+                max_updates=50000, accel=AndersonConfig(m=3), fire_every=4,
+                accel_eval="worker", faults=faults))
+        finally:
+            if executor == "process":
+                shutdown_pools()
+        assert r.converged
+        assert prob.residual_norm(r.x) < 1e-8
+        assert r.offloaded_evals == 0  # every item crashed ...
+        assert r.coordinator_evals > 0  # ... and fell back
+
+    def test_worker_eval_with_crash_churn_converges_on_process(self):
+        """Regression: a worker that just reported a restartable crash is
+        sleeping out its downtime — handing it the next eval item would
+        park the single-slot eval service behind that sleep and stale-
+        discard every crash-adjacent fire.  Churn + offload must coexist."""
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=8, sweeps=3, seed=0)
+        faults = FaultProfile(crash_prob=0.2, restart_after=0.001)
+        try:
+            r = run_fixed_point(prob, RunConfig(
+                mode="async", executor="process", n_workers=2, tol=1e-8,
+                max_updates=50000, accel=AndersonConfig(m=3), fire_every=4,
+                accel_eval="worker", faults=faults))
+        finally:
+            shutdown_pools()
+        assert r.converged
+        assert r.crashes > 0
+        assert prob.residual_norm(r.x) < 1e-8
+
+    def test_fire_windows_overlap_arrivals_on_process(self):
+        """The point of the offload: arrivals are applied while a fire is
+        in flight (impossible in coordinator mode, where the window is a
+        blocking evaluation)."""
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=16, sweeps=5, seed=0)
+        kw = dict(mode="async", executor="process", n_workers=2, tol=0.0,
+                  max_updates=200, accel=AndersonConfig(m=3), fire_every=4)
+        try:
+            rc = run_fixed_point(prob, RunConfig(accel_eval="coordinator", **kw))
+            rw = run_fixed_point(prob, RunConfig(accel_eval="worker", **kw))
+        finally:
+            shutdown_pools()
+        assert rc.fire_window_arrivals == 0
+        assert rw.fire_window_arrivals > 0
+        assert rw.offloaded_evals > 0
+
+
+class TestVirtualEvalModel:
+    """The opt-in evaluation-cost event loop (cfg.eval_time /
+    accel_eval="worker") on the virtual backend."""
+
+    BASE = dict(mode="async", tol=1e-10, max_updates=4000, compute_time=1e-3,
+                seed=3, fire_every=4, eval_time=4e-3)
+
+    def _run(self, **kw):
+        from repro.problems import GarnetMDP, ValueIterationProblem
+
+        prob = ValueIterationProblem(
+            GarnetMDP(S=120, A=4, b=5, gamma=0.9, seed=0))
+        base = dict(self.BASE)
+        base.update(kw)
+        return run_fixed_point(prob, RunConfig(
+            accel=AndersonConfig(m=5), **base))
+
+    def test_deterministic(self):
+        a = self._run(accel_eval="worker")
+        b = self._run(accel_eval="worker")
+        assert a.wall_time == b.wall_time
+        assert a.worker_updates == b.worker_updates
+        np.testing.assert_array_equal(a.x, b.x)
+
+    def test_predicts_offload_speedup(self):
+        rc = self._run(accel_eval="coordinator")
+        rw = self._run(accel_eval="worker")
+        assert rc.converged and rw.converged
+        assert rw.wall_time < rc.wall_time  # offload overlaps the evals
+        assert rw.offloaded_evals > 0
+        assert rw.fire_window_arrivals > 0
+        # coordinator placement serializes: high modeled occupancy
+        assert rc.coordinator_busy_frac > 0.5
+        assert rw.coordinator_busy_frac < rc.coordinator_busy_frac
+
+    def test_default_loop_untouched_without_opt_in(self):
+        """eval_time=None + coordinator placement must take the golden
+        event loop (same trajectory with accel_eval set explicitly)."""
+        a = self._run(accel_eval="coordinator", eval_time=None)
+        b = self._run(eval_time=None)
+        assert a.wall_time == b.wall_time
+        np.testing.assert_array_equal(a.x, b.x)
+
+
+class _DummyPool:
+    def __init__(self, key):
+        self.key = key
+        self.closed = False
+        self.alive = True
+
+    def healthy(self):
+        return self.alive
+
+    def close(self):
+        self.closed = True
+
+
+class TestPoolRegistry:
+    """The LRU registry shared by process pools and Ray actor pools —
+    unit-tested here precisely because it must not require ray."""
+
+    def _no_factory(self):  # pragma: no cover - must never be called
+        raise AssertionError("factory called for a cached pool")
+
+    def test_reuses_cached_pool(self):
+        reg = PoolRegistry(2)
+        a = reg.get("a", lambda: _DummyPool("a"))
+        assert reg.get("a", self._no_factory) is a
+        assert len(reg) == 1
+
+    def test_lru_eviction_closes_oldest(self):
+        reg = PoolRegistry(2)
+        a = reg.get("a", lambda: _DummyPool("a"))
+        b = reg.get("b", lambda: _DummyPool("b"))
+        c = reg.get("c", lambda: _DummyPool("c"))
+        assert a.closed and not b.closed and not c.closed
+        assert len(reg) == 2
+        reg.get("b", self._no_factory)  # touch b: c becomes LRU
+        d = reg.get("d", lambda: _DummyPool("d"))
+        assert c.closed and not b.closed and not d.closed
+
+    def test_unhealthy_pool_is_replaced(self):
+        reg = PoolRegistry(2)
+        b = reg.get("b", lambda: _DummyPool("b"))
+        b.alive = False
+        b2 = reg.get("b", lambda: _DummyPool("b"))
+        assert b2 is not b
+        assert b.closed and not b2.closed
+
+    def test_dispose_and_shutdown(self):
+        reg = PoolRegistry(4)
+        a = reg.get("a", lambda: _DummyPool("a"))
+        b = reg.get("b", lambda: _DummyPool("b"))
+        reg.dispose("a")
+        assert a.closed and len(reg) == 1
+        reg.dispose("missing")  # no-op
+        reg.shutdown()
+        assert b.closed and len(reg) == 0
+
+    def test_payload_key_separates_configs_and_payloads(self):
+        p1 = ("factory", ("spec", (1, 2), {}))
+        p2 = ("factory", ("spec", (1, 3), {}))
+        c_a = RunConfig(n_workers=2)
+        c_b = RunConfig(n_workers=4)
+        c_c = RunConfig(n_workers=2, return_mode="full_map")
+        assert payload_key(p1, c_a) == payload_key(p1, RunConfig(n_workers=2))
+        assert payload_key(p1, c_a) != payload_key(p2, c_a)
+        assert payload_key(p1, c_a) != payload_key(p1, c_b)
+        assert payload_key(p1, c_a) != payload_key(p1, c_c)
+
+
+class TestRayPoolLifecycle:
+    """Actor-pool lifecycle gating: usable (as no-ops) without ray."""
+
+    def test_helpers_exist_without_ray(self):
+        if "ray" in available_executors():
+            pytest.skip("ray is installed; absence behaviour untestable")
+        assert ray_pool_stats() == {}
+        shutdown_ray_pools()  # must be a harmless no-op
+
+    def test_ray_pools_scope_is_reentrant(self):
+        from repro.core import ray_pools
+
+        with ray_pools():
+            with ray_pools():
+                pass
+        shutdown_ray_pools()

@@ -214,6 +214,47 @@ class TestBackendParity:
         assert r.error_norm < tol / (1 - 0.8) * np.sqrt(prob.n) * 1.01
 
 
+class TestWorkerEvalParity:
+    """``accel_eval="worker"`` rows of the backend-parity matrix: with the
+    accel/record evaluations offloaded to workers, every real backend must
+    still converge the paper's problems to tolerance (ray rows skip
+    cleanly when the dependency is absent).  The default virtual path is
+    pinned separately by tests/test_hotpath_goldens.py."""
+
+    WORKER_EVAL_BACKENDS = ["thread", "process", "ray"]
+
+    @pytest.mark.parametrize("backend", backend_params(WORKER_EVAL_BACKENDS))
+    def test_jacobi_worker_eval_parity(self, backend):
+        from repro.core import AndersonConfig
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=8, sweeps=5)
+        tol = 1e-6
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", executor=backend, n_workers=2, tol=tol,
+            max_updates=10**5, accel=AndersonConfig(m=3), fire_every=4,
+            accel_eval="worker"))
+        assert r.converged
+        assert prob.residual_norm(r.x) < tol
+        assert r.error_norm < 1e-3
+
+    @pytest.mark.parametrize("backend", backend_params(WORKER_EVAL_BACKENDS))
+    def test_value_iteration_worker_eval_parity(self, backend):
+        from repro.core import AndersonConfig
+        from repro.problems import GarnetMDP, ValueIterationProblem
+
+        prob = ValueIterationProblem(
+            GarnetMDP(S=60, A=4, b=5, gamma=0.8, seed=0))
+        tol = 1e-5
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", executor=backend, n_workers=2, tol=tol,
+            max_updates=10**5, accel=AndersonConfig(m=3), fire_every=4,
+            accel_eval="worker"))
+        assert r.converged
+        assert prob.residual_norm(r.x) < tol
+        assert r.error_norm < tol / (1 - 0.8) * np.sqrt(prob.n) * 1.01
+
+
 class TestProcessBackend:
     """Process-specific machinery: payloads, shared-memory snapshots."""
 

@@ -140,6 +140,22 @@ class TestGoldenTrajectories:
             "float sequence of the apply/accel/record path")
         assert (r.accel_fires, r.accel_accepts) == (fires, accepts)
 
+    @pytest.mark.parametrize("name", ["vi_async_accel", "scf_async_diis"])
+    def test_explicit_coordinator_eval_matches_golden(self, name):
+        """The evaluation-pipeline refactor's hard constraint: the default
+        ``accel_eval="coordinator"`` virtual-time path (here set
+        explicitly) is bit-identical to the pre-refactor goldens — the
+        begin/feed/commit split changed where fires *can* run, not one
+        float of where they run by default."""
+        assert RunConfig().accel_eval == "coordinator"
+        factory, cfg_kw, (wu, wall, sha, fires, accepts) = GOLDEN[name]
+        r = run_fixed_point(factory(), RunConfig(accel_eval="coordinator",
+                                                 **cfg_kw))
+        assert (r.worker_updates, r.wall_time, _sha(r.x),
+                r.accel_fires, r.accel_accepts) == (wu, wall, sha, fires,
+                                                    accepts)
+        assert r.accel_discards == 0 and r.offloaded_evals == 0
+
 
 class TestBlockSlice:
     """``as_block_slice`` must be an exact consecutive-run detector: a

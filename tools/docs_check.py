@@ -13,7 +13,10 @@ Fails when:
   ones, so the table is stable whether or not optional deps are installed);
 - ``BENCH_hotpath.json`` (the committed hot-path perf trajectory,
   rewritten by ``make perf``) is missing or lacks its baseline/current
-  sections.
+  sections;
+- ``BENCH_offload.json`` (the evaluation-pipeline offload trajectory,
+  also rewritten by ``make perf``) is missing, lacks its gate spec, or
+  has a case without both placements' measurements and their ratio.
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
@@ -98,6 +101,35 @@ def check_bench_trajectory(errors: list) -> None:
                     f"BENCH_hotpath.json: missing {section}.{key}")
 
 
+def check_offload_trajectory(errors: list) -> None:
+    """BENCH_offload.json must exist and keep its documented shape."""
+    path = ROOT / "BENCH_offload.json"
+    if not path.exists():
+        errors.append("BENCH_offload.json missing (run `make perf`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_offload.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("case", "min_ratio_arrivals_per_sec"):
+        if key not in gate:
+            errors.append(f"BENCH_offload.json: missing gate.{key}")
+    cur = data.get("current", {})
+    if not cur:
+        errors.append("BENCH_offload.json: empty 'current' section")
+    for name, case in cur.items():
+        for placement in ("coordinator", "worker"):
+            if "arrivals_per_sec" not in case.get(placement, {}):
+                errors.append(
+                    f"BENCH_offload.json: {name} missing "
+                    f"{placement}.arrivals_per_sec")
+        if "ratio_arrivals_per_sec" not in case:
+            errors.append(
+                f"BENCH_offload.json: {name} missing ratio_arrivals_per_sec")
+
+
 def check_executor_table(errors: list) -> None:
     sys.path.insert(0, str(ROOT / "src"))
     from repro.core import known_executors
@@ -126,6 +158,7 @@ def main() -> None:
     n_links = check_links(errors)
     check_executor_table(errors)
     check_bench_trajectory(errors)
+    check_offload_trajectory(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
@@ -133,7 +166,7 @@ def main() -> None:
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
           "and anchors, executor table matches registry, BENCH_hotpath.json "
-          "schema intact)")
+          "and BENCH_offload.json schemas intact)")
 
 
 if __name__ == "__main__":
