@@ -16,17 +16,24 @@
 #                     arrivals/sec >= 1.5x coordinator-eval on the process
 #                     backend at Jacobi g=512.  Rewrites BENCH_offload.json.
 #                     REPRO_PERF_SKIP_GATE=1 records without gating.
-# `make smoke`      — docs-check + perf gate + ~2 min real-concurrency
-#                     benchmark: sync-vs-async under a 100 ms straggler
-#                     measured on the thread AND process backends (asserts
-#                     the paper's >1.5x async speedup ordering on measured
-#                     wall-clock).
+# `make chaos-smoke`— fast chaos-scenario sanity: every scenario in the
+#                     registered library (spot_wave, rolling_restart,
+#                     bimodal_stragglers, flash_crowd) runs sync + async on
+#                     the VIRTUAL backend only, asserting convergence and
+#                     membership accounting (benchmarks/chaos_scenarios.py
+#                     --virtual-only; the measured real-backend sweep +
+#                     BENCH_chaos.json rewrite is `make chaos-bench`).
+# `make smoke`      — docs-check + perf gate + chaos-smoke + ~2 min
+#                     real-concurrency benchmark: sync-vs-async under a
+#                     100 ms straggler measured on the thread AND process
+#                     backends (asserts the paper's >1.5x async speedup
+#                     ordering on measured wall-clock).
 # `make bench`      — the full benchmark suite, including the measured
 #                     Table 2 delay sweep on every available backend (slow).
 
 PYTHON ?= python
 
-.PHONY: test smoke bench docs-check perf
+.PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -38,7 +45,13 @@ perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.perf_hotpath --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.accel_offload --check
 
-smoke: docs-check perf
+chaos-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.chaos_scenarios --virtual-only
+
+chaos-bench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.chaos_scenarios --check
+
+smoke: docs-check perf chaos-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

@@ -51,7 +51,7 @@ from repro.core import (
 )
 from repro.problems import JacobiProblem
 
-from .common import row
+from .common import result_stats, row
 
 ROOT = Path(__file__).resolve().parents[1]
 OUT_PATH = ROOT / "BENCH_offload.json"
@@ -101,18 +101,18 @@ def _cfg(backend: str, p: int, max_updates: int, placement: str,
 
 
 def _stats(res) -> dict:
-    wall = max(res.wall_time, 1e-9)
+    """Case stats straight off the RunResult.to_dict() schema (plus the
+    derived arrival rates) — see benchmarks.common.result_stats."""
+    d = result_stats(res)
     return {
-        "arrivals_per_sec": res.worker_updates / wall,
-        "arrivals_per_sec_while_firing": (
-            res.fire_window_arrivals / res.fire_window_s
-            if res.fire_window_s > 0 else 0.0),
-        "coordinator_busy_frac": res.coordinator_busy_frac,
-        "wall_s": res.wall_time,
-        "worker_updates": res.worker_updates,
-        "fires": res.accel_fires,
-        "offloaded_evals": res.offloaded_evals,
-        "discards": res.accel_discards,
+        "arrivals_per_sec": d["arrivals_per_sec"],
+        "arrivals_per_sec_while_firing": d["arrivals_per_sec_while_firing"],
+        "coordinator_busy_frac": d["coordinator_busy_frac"],
+        "wall_s": d["wall_time"],
+        "worker_updates": d["worker_updates"],
+        "fires": d["accel_fires"],
+        "offloaded_evals": d["offloaded_evals"],
+        "discards": d["accel_discards"],
     }
 
 

@@ -1,0 +1,298 @@
+"""Chaos scenario benchmark + gate (BENCH_chaos.json).
+
+Runs every scenario registered in the chaos library
+(``repro.chaos.scenario_library()``: ``spot_wave``, ``rolling_restart``,
+``bimodal_stragglers``, ``flash_crowd``) on block Jacobi, sync and async,
+on the virtual + thread + process backends:
+
+- the **virtual** rows are calibrated with this machine's measured
+  per-update compute cost, so they are *predictions* of each scenario's
+  sync/async behaviour (the same script is interpreted against virtual
+  time there and wall time on the real backends);
+- the **thread** and **process** rows are measured wall-clock, with
+  membership accounting (preemptions / joins / reassigned blocks /
+  preempt discards / per-worker service fractions) straight off
+  ``RunResult.to_dict()``;
+- the async **thread** run additionally captures its event trace
+  (``cfg.capture_trace``) and replays it deterministically through the
+  virtual backend (``repro.chaos.replay_trace``); the measured-over-replay
+  residual-trajectory agreement is reported per scenario.
+
+``--check`` (the ``make perf``-style gate) asserts the paper's headline
+ordering survives scripted chaos: under ``spot_wave`` (a preemption wave
+plus a straggling survivor) async must beat sync by >= 1.5x measured
+wall-clock on at least one real backend, and the captured thread trace
+must replay with sub-order-of-magnitude residual agreement.
+``REPRO_PERF_SKIP_GATE=1`` records without gating.
+
+``--virtual-only`` is the fast CI path (``make chaos-smoke``): every
+library scenario on the virtual backend only, asserting convergence and
+membership-metric sanity — no real-backend wall-clock, no JSON rewrite.
+
+Run:  PYTHONPATH=src python -m benchmarks.chaos_scenarios
+          [--check] [--virtual-only] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from repro.chaos import (
+    get_scenario,
+    replay_trace,
+    scenario_library,
+    trace_agreement,
+)
+from repro.core import (
+    RunConfig,
+    available_executors,
+    measure_compute,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.problems import JacobiProblem
+
+from .common import result_row, result_stats, row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_chaos.json"
+
+GATE_SCENARIO = "spot_wave"
+GATE_MIN_SPEEDUP = 1.5  # async over sync, measured, on >= 1 real backend
+GATE_MAX_REPLAY_LOG10 = 1.0  # mean |log10(measured/replay)| per record
+
+P = 4
+TOL = 1e-3
+#: Library scenario timings are authored for a run of roughly this length.
+#: Per backend, the script is rescaled by (measured no-fault sync wall /
+#: this horizon), so every backend — including the virtual predictor —
+#: meets each event at the same *relative* phase of its run, instead of a
+#: fast backend converging before the wave even starts.
+NOMINAL_HORIZON_S = 2.0
+
+#: RunResult.to_dict() keys kept per run in BENCH_chaos.json
+_KEYS = ("converged", "worker_updates", "wall_time", "arrivals_per_sec",
+         "crashes", "restarts", "preemptions", "joins", "reassigned_blocks",
+         "preempt_discards", "service_fractions")
+
+
+def _problem(fast: bool) -> JacobiProblem:
+    return JacobiProblem(grid=12 if fast else 16, sweeps=10, seed=0)
+
+
+def _cfg(executor: str, mode: str, scenario, **kw) -> RunConfig:
+    return RunConfig(mode=mode, executor=executor, n_workers=P, tol=TOL,
+                     max_updates=10**6, max_wall=120.0, seed=0,
+                     scenario=scenario, **kw)
+
+
+def _pair(prob, executor: str, scenario_factory, **kw):
+    """One sync + one async run; each gets a fresh scenario object (the
+    ScenarioClock consumes events, so scripts are not reusable across
+    runs)."""
+    s = run_fixed_point(prob, _cfg(executor, "sync", scenario_factory(), **kw))
+    a = run_fixed_point(prob, _cfg(executor, "async", scenario_factory(), **kw))
+    return s, a
+
+
+def measure(fast: bool = False) -> dict:
+    prob = _problem(fast)
+    compute = measure_compute(prob, prob.default_blocks(P))
+    real = [b for b in ("thread", "process") if b in available_executors()]
+    backends = [("virtual", {"compute_time": compute})]
+    backends += [(b, {}) for b in real]
+    out: dict = {}
+    try:
+        # No-fault sync baseline per backend -> per-backend scenario scale
+        # (see NOMINAL_HORIZON_S).
+        scales = {}
+        for backend, kw in backends:
+            base = run_fixed_point(prob, _cfg(backend, "sync", None, **kw))
+            scales[backend] = max(base.wall_time, 1e-3) / NOMINAL_HORIZON_S
+        for name in scenario_library():
+            entry: dict = {}
+            for backend, kw in backends:
+                scale = scales[backend]
+                cap = backend == "thread"  # capture + replay the thread run
+                s = run_fixed_point(prob, _cfg(
+                    backend, "sync", get_scenario(name, P).scaled(scale),
+                    **kw))
+                acfg = _cfg(backend, "async",
+                            get_scenario(name, P).scaled(scale),
+                            capture_trace=cap, **kw)
+                a = run_fixed_point(prob, acfg)
+                entry[backend] = {
+                    "sync": result_stats(s, *_KEYS),
+                    "async": result_stats(a, *_KEYS),
+                    "speedup": s.wall_time / max(a.wall_time, 1e-9),
+                    "scenario_scale": scale,
+                }
+                if backend != "virtual":
+                    entry[backend]["predicted_speedup"] = (
+                        entry["virtual"]["speedup"])
+                if cap and a.trace is not None:
+                    rep = replay_trace(_problem(fast), a.trace, acfg)
+                    entry[backend]["replay"] = trace_agreement(a, rep)
+                    entry[backend]["trace_events"] = a.trace.counts()
+            out[name] = entry
+    finally:
+        shutdown_pools()
+    return out
+
+
+def check(cur: dict) -> list:
+    """Acceptance gate; returns failure strings."""
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    entry = cur.get(GATE_SCENARIO)
+    if entry is None:
+        fails.append(f"gate scenario {GATE_SCENARIO!r} not measured")
+        return fails
+    speedups = {b: entry[b]["speedup"] for b in ("thread", "process")
+                if b in entry}
+    if not speedups:
+        fails.append(f"{GATE_SCENARIO}: no real backend measured")
+    elif max(speedups.values()) < GATE_MIN_SPEEDUP:
+        fails.append(
+            f"{GATE_SCENARIO}: async-over-sync speedup "
+            f"{ {b: round(v, 2) for b, v in speedups.items()} } "
+            f"< {GATE_MIN_SPEEDUP}x on every real backend — elastic "
+            "membership is not absorbing the preemption wave")
+    for name, entry in cur.items():
+        rep = entry.get("thread", {}).get("replay")
+        if rep is None:
+            continue
+        if rep["mean_abs_log10_ratio"] > GATE_MAX_REPLAY_LOG10:
+            fails.append(
+                f"{name}: thread trace replays with mean residual "
+                f"disagreement 10^{rep['mean_abs_log10_ratio']:.2f} "
+                f"(> 10^{GATE_MAX_REPLAY_LOG10}) — capture/replay drifted")
+    return fails
+
+
+def run_virtual_only(fast: bool = False) -> list:
+    """The ``make chaos-smoke`` path: every library scenario, virtual
+    backend only, with convergence + membership-accounting assertions."""
+    prob = _problem(fast)
+    rows = []
+    for name in scenario_library():
+        # Library timings assume second-scale runs; compress them onto the
+        # smoke's short virtual horizon so every script actually fires.
+        factory = lambda: get_scenario(name, P).scaled(0.1)  # noqa: E731
+        vs, va = _pair(prob, "virtual", factory, compute_time=2e-3)
+        assert vs.converged and va.converged, f"{name}/virtual diverged"
+        scn = factory()
+        n_pre = sum(1 for ev in scn.events if ev.kind == "preempt")
+        # Runs may converge mid-script, so observed counts are bounded by
+        # the scripted ones — and a scripted preemption that fires must
+        # reassign blocks.
+        assert va.preemptions <= n_pre
+        assert va.joins <= va.preemptions or va.preemptions == 0
+        if va.preemptions and va.preemptions < P:
+            assert va.reassigned_blocks > 0, f"{name}: no blocks reassigned"
+        assert abs(sum(va.service_fractions.values()) - 1.0) < 1e-6
+        for mode, r in (("sync", vs), ("async", va)):
+            rows.append(result_row(
+                f"chaos_smoke/{name}/virtual/{mode}", r,
+                f";pre={r.preemptions};joins={r.joins};"
+                f"reassigned={r.reassigned_blocks}"))
+        rows.append(row(f"chaos_smoke/{name}/virtual/speedup", 0.0,
+                        f"pred={vs.wall_time / max(va.wall_time, 1e-9):.2f}x"))
+    return rows
+
+
+def _rows(cur: dict) -> list:
+    rows = []
+    for name, entry in cur.items():
+        for backend, data in entry.items():
+            for mode in ("sync", "async"):
+                d = data[mode]
+                rows.append(row(
+                    f"chaos/{name}/{backend}/{mode}",
+                    1e6 / max(d["arrivals_per_sec"], 1e-9),
+                    f"WU={d['worker_updates']};T={d['wall_time']:.2f}s;"
+                    f"pre={d['preemptions']};joins={d['joins']};"
+                    f"reassigned={d['reassigned_blocks']};"
+                    f"disc={d['preempt_discards']}"))
+            extra = ""
+            if "replay" in data:
+                rep = data["replay"]
+                extra = (f";replay_log10={rep['mean_abs_log10_ratio']:.3f}"
+                         f";replay_final={rep['final_ratio']:.3f}")
+            rows.append(row(
+                f"chaos/{name}/{backend}/speedup", 0.0,
+                f"speedup={data['speedup']:.2f}x" + extra))
+    return rows
+
+
+def _persist(cur: dict) -> None:
+    """Write BENCH_chaos.json (schema gated by tools/docs_check.py)."""
+    out = {
+        "description": "chaos scenario benchmark: the registered scenario "
+                       "library measured sync/async on virtual + thread + "
+                       "process, with thread-trace replay agreement (see "
+                       "benchmarks/chaos_scenarios.py and "
+                       "docs/architecture.md, 'Chaos scenarios & elastic "
+                       "membership')",
+        "gate": {"scenario": GATE_SCENARIO,
+                 "min_speedup": GATE_MIN_SPEEDUP,
+                 "max_replay_log10": GATE_MAX_REPLAY_LOG10},
+        "scenarios": cur,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point: measure, persist, report rows."""
+    if fast:
+        return run_virtual_only(fast=True)
+    cur = measure()
+    _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("chaos_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--virtual-only", action="store_true",
+                    help="fast CI smoke: virtual-backend scenarios only")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem (skips nothing else)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the spot_wave gate fails")
+    args = ap.parse_args()
+    if args.virtual_only:
+        for r in run_virtual_only(fast=args.fast):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print("chaos-smoke: OK (library scenarios converge on the virtual "
+              "backend with sane membership accounting)", file=sys.stderr)
+        return
+    cur = measure(fast=args.fast)
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if not args.fast:
+        _persist(cur)
+        print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("chaos-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                f"{GATE_SCENARIO} async/sync >= {GATE_MIN_SPEEDUP}x on a "
+                "real backend + trace replay agreement")
+        print(f"chaos-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,3 +14,27 @@ SYNC_OVERHEAD_S = 2.7e-3
 def row(name: str, us_per_call: float, derived) -> dict:
     return {"name": name, "us_per_call": round(float(us_per_call), 3),
             "derived": derived}
+
+
+def result_row(name: str, res, extra: str = "") -> dict:
+    """One benchmark row from a ``RunResult`` via its ``to_dict()`` schema.
+
+    Every run-shaped benchmark (real_async, accel_offload, chaos_scenarios)
+    derives its row from the same serialized result dict instead of
+    fishing attributes ad hoc, so the row schema and the committed JSON
+    artifacts stay in one place (``RunResult.to_dict``/``from_dict``)."""
+    d = res.to_dict(include_history=False)
+    us = d["wall_time"] * 1e6 / max(d["worker_updates"], 1)
+    return row(name, us,
+               f"WU={d['worker_updates']};T={d['wall_time']:.2f}s" + extra)
+
+
+def result_stats(res, *keys: str) -> dict:
+    """Subset of ``RunResult.to_dict()`` plus derived arrival rates."""
+    d = res.to_dict(include_history=False)
+    wall = max(d["wall_time"], 1e-9)
+    d["arrivals_per_sec"] = d["worker_updates"] / wall
+    d["arrivals_per_sec_while_firing"] = (
+        res.fire_window_arrivals / res.fire_window_s
+        if res.fire_window_s > 0 else 0.0)
+    return {k: d[k] for k in keys} if keys else d

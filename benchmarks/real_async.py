@@ -42,7 +42,7 @@ from repro.problems import (
     ValueIterationProblem,
 )
 
-from .common import row
+from .common import result_row
 
 DELAY_SWEEP_S = (0.0, 0.005, 0.02, 0.1)  # the paper's Table 2 delays
 GATE_DELAY_S = 0.1  # the 100 ms straggler both speedup gates run under
@@ -72,8 +72,7 @@ def _pair(prob, tol, executor, faults, compute=None, **extra):
 
 
 def _emit(rows, tag, res, extra=""):
-    rows.append(row(tag, res.wall_time * 1e6 / max(res.worker_updates, 1),
-                    f"WU={res.worker_updates};T={res.wall_time:.2f}s" + extra))
+    rows.append(result_row(tag, res, extra))
 
 
 def run(fast: bool = False):

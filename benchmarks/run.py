@@ -25,6 +25,7 @@ MODULES = [
     "real_async",         # measured Table 2 sweep on all real backends
     "perf_hotpath",       # coordinator hot-path gate (BENCH_hotpath.json)
     "accel_offload",      # evaluation-pipeline offload gate (BENCH_offload.json)
+    "chaos_scenarios",    # chaos scenario library sweep (BENCH_chaos.json)
 ]
 
 # ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and

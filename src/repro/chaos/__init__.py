@@ -1,0 +1,53 @@
+"""Chaos scenario subsystem: scripted time-varying faults, elastic worker
+membership, and deterministic trace capture/replay.
+
+The paper's subject is fault tolerance on *flexible* infrastructure; this
+package supplies the flexibility: declarative :class:`FaultScenario`
+scripts (timestamped profile changes, preemptions, joins, pauses and
+delay-trace segments) interpreted identically by every engine backend
+(virtual seconds on the simulator, wall seconds on thread/process/ray), a
+registered scenario library (``spot_wave``, ``rolling_restart``,
+``bimodal_stragglers``, ``flash_crowd``), and trace capture/replay for
+postmortem comparison of a measured real-backend run against its
+deterministic virtual re-execution.
+
+Entry points:
+
+- attach a scenario:  ``RunConfig(scenario=get_scenario("spot_wave", p))``
+- capture a trace:    ``RunConfig(capture_trace=True)`` -> ``RunResult.trace``
+- replay it:          ``replay_trace(problem, trace, cfg)``
+- compare:            ``trace_agreement(measured, replayed)``
+
+See docs/architecture.md ("Chaos scenarios & elastic membership") and
+``benchmarks/chaos_scenarios.py`` / ``BENCH_chaos.json``.
+"""
+
+from .library import (
+    bimodal_stragglers,
+    flash_crowd,
+    get_scenario,
+    rolling_restart,
+    scenario,
+    scenario_library,
+    spot_wave,
+)
+from .scenario import EVENT_KINDS, FaultScenario, ScenarioClock, ScenarioEvent
+from .trace import RunTrace, TraceRecorder, replay_trace, trace_agreement
+
+__all__ = [
+    "ScenarioEvent",
+    "FaultScenario",
+    "ScenarioClock",
+    "EVENT_KINDS",
+    "scenario",
+    "scenario_library",
+    "get_scenario",
+    "spot_wave",
+    "rolling_restart",
+    "bimodal_stragglers",
+    "flash_crowd",
+    "RunTrace",
+    "TraceRecorder",
+    "replay_trace",
+    "trace_agreement",
+]

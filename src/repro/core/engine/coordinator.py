@@ -32,6 +32,18 @@ immediate local evaluations, which keeps it bit-identical to the
 pre-split code.  Backends running with ``cfg.accel_eval == "worker"``
 drive it with offloaded evaluations instead — their EvalService — so
 fires and records overlap with arrivals.
+
+Elastic membership (repro.chaos)
+--------------------------------
+The coordinator also owns the worker -> blocks assignment.  Statically it
+is the identity (block ``w`` served by worker ``w``, the pre-chaos
+behaviour, bit-identical); chaos scenarios move it: ``preempt_worker``
+rebalances a leaver's blocks onto the least-loaded survivors,
+``join_worker`` hands the home block back, ``next_dispatch`` walks a
+worker's assignment round-robin, and ``preempt_gen`` lets backends
+recognize (and discard) results computed by a preempted incarnation.
+``accel_commit``'s staleness guard doubles as the reassignment-window
+guard: a fire spanning a membership change is discarded.
 """
 
 from __future__ import annotations
@@ -200,13 +212,15 @@ class AccelPlan:
     ready for :meth:`Coordinator.accel_commit`).
     """
 
-    __slots__ = ("x_pin", "wu_begin", "t_begin", "stage", "g", "cand",
+    __slots__ = ("x_pin", "wu_begin", "t_begin", "mver", "stage", "g", "cand",
                  "cur_res", "verdict", "done", "_item")
 
-    def __init__(self, x_pin: np.ndarray, wu_begin: int, t_begin: float):
+    def __init__(self, x_pin: np.ndarray, wu_begin: int, t_begin: float,
+                 mver: int = 0):
         self.x_pin = x_pin
         self.wu_begin = wu_begin
         self.t_begin = t_begin
+        self.mver = mver  # membership version at begin (reassignment guard)
         self.stage = "map"  # "map" -> ("cur" -> "cand")? -> done
         self.g: Optional[np.ndarray] = None
         self.cand: Optional[np.ndarray] = None
@@ -248,6 +262,31 @@ class Coordinator:
             raise ValueError(
                 f"unknown accel_eval {cfg.accel_eval!r}; "
                 "expected 'coordinator' or 'worker'")
+        if cfg.scenario is not None or cfg.capture_trace:
+            # Chaos scenarios / trace replay pin the dispatch schedule to
+            # the memoized block partition and to inline (coordinator-side)
+            # accel evaluation; see repro.chaos.
+            if cfg.selection != "fixed":
+                raise ValueError(
+                    "chaos scenarios and trace capture require "
+                    f"selection='fixed' (got {cfg.selection!r})")
+            if cfg.eval_time is not None:
+                raise ValueError(
+                    "chaos scenarios / trace capture do not compose with "
+                    "the virtual eval-cost model (cfg.eval_time)")
+        if cfg.capture_trace and cfg.mode == "sync":
+            raise ValueError(
+                "capture_trace records async schedules only (a sync run is "
+                "already reproducible from its round plan)")
+        if cfg.scenario is not None:
+            if cfg.accel_eval == "worker":
+                raise ValueError(
+                    "chaos scenarios require accel_eval='coordinator' "
+                    "(offloaded fires across membership changes are "
+                    "discarded wholesale; run them separately)")
+            validate = getattr(cfg.scenario, "validate", None)
+            if validate is not None:
+                validate(cfg.n_workers)
         self.problem = problem
         self.cfg = cfg
         self.x = _writable(problem.initial())
@@ -307,6 +346,34 @@ class Coordinator:
         # was evaluated (saves the redundant full map the old code paid).
         self._x_version = 0
         self._res_version = 0
+        # --- elastic membership (repro.chaos scenarios) ----------------- #
+        # The block partition is fixed; the worker -> blocks assignment is
+        # not.  Initially block w is served by worker w; a preemption
+        # reassigns the leaver's blocks to the least-loaded survivors and
+        # a join hands the home block back.  Static-membership runs never
+        # touch any of this, so the default paths stay bit-identical.
+        p = cfg.n_workers
+        self.active: set = set(range(p))  # workers currently in membership
+        self.paused: set = set()  # in membership but not taking new work
+        self.worker_blocks: dict = {w: [w] for w in range(p)}
+        self.block_owner: dict = {b: b for b in range(len(self.blocks))}
+        self._orphan_blocks: list = []  # blocks with no live server
+        self._rr: dict = {w: 0 for w in range(p)}  # multi-block round-robin
+        self.preempt_gen: dict = {w: 0 for w in range(p)}
+        self.preemptions = 0
+        self.joins = 0
+        self.reassigned_blocks = 0
+        self.preempt_discards = 0
+        self.applied_by_worker: dict = {}
+        self._membership_version = 0
+        # Scenario set_profile overrides (worker -> live FaultProfile); the
+        # base profiles from cfg.faults apply where there is no override.
+        self.live_profiles: dict = {}
+        # Trace recorder (repro.chaos.TraceRecorder), set by backends when
+        # cfg.capture_trace; record/fire/offload/scenario events are
+        # emitted from the coordinator so every loop captures them in
+        # arrival order for free.
+        self.tracer = None
 
     # ----------------------------------------------------------------- #
     def busy(self):
@@ -321,13 +388,140 @@ class Coordinator:
         return _BusyTimer(self)
 
     # ----------------------------------------------------------------- #
+    # Elastic membership (repro.chaos scenarios)
+    # ----------------------------------------------------------------- #
+    def fault_for(self, worker: int) -> FaultProfile:
+        """The worker's *live* fault profile: a scenario ``set_profile``
+        override when one is in effect, else the static ``cfg.faults``."""
+        prof = self.live_profiles.get(worker)
+        return prof if prof is not None else _fault_for(self.cfg, worker)
+
+    def preempt_worker(self, worker: int) -> int:
+        """Remove a worker from the membership; rebalance its blocks onto
+        the least-loaded survivors.  Returns the number of blocks moved.
+        In-flight results from the old incarnation are recognized (and
+        discarded) through ``preempt_gen``."""
+        if worker not in self.active:
+            return 0
+        self.active.discard(worker)
+        self.paused.discard(worker)
+        self.preemptions += 1
+        self.preempt_gen[worker] += 1
+        moved = self.worker_blocks.get(worker, [])
+        self.worker_blocks[worker] = []
+        survivors = sorted(self.active)
+        if not survivors:
+            self._orphan_blocks.extend(moved)
+        else:
+            for b in moved:
+                tgt = min(survivors,
+                          key=lambda s: (len(self.worker_blocks[s]), s))
+                self.worker_blocks[tgt].append(b)
+                self.block_owner[b] = tgt
+            self.reassigned_blocks += len(moved)
+        self._membership_version += 1
+        return len(moved)
+
+    def join_worker(self, worker: int) -> int:
+        """(Re)admit a worker: it takes back its home block (plus any
+        orphaned blocks).  Returns the number of blocks it received."""
+        if worker in self.active:
+            return 0
+        self.active.add(worker)
+        self.joins += 1
+        self.worker_blocks.setdefault(worker, [])
+        back = list(self._orphan_blocks)
+        self._orphan_blocks = []
+        home = worker if worker in self.block_owner else None
+        if (home is not None and home not in back
+                and self.block_owner[home] != worker):
+            holder = self.block_owner[home]
+            if home in self.worker_blocks.get(holder, []):
+                self.worker_blocks[holder].remove(home)
+            back.append(home)
+        for b in back:
+            self.block_owner[b] = worker
+            self.worker_blocks[worker].append(b)
+        self.reassigned_blocks += len(back)
+        self._membership_version += 1
+        return len(back)
+
+    def dispatchable(self, worker: int) -> bool:
+        """True when the worker may be handed new work right now."""
+        return (worker in self.active and worker not in self.paused
+                and bool(self.worker_blocks.get(worker)))
+
+    def apply_scenario_event(self, ev, t: float = 0.0) -> None:
+        """Apply one :class:`repro.chaos.ScenarioEvent` to the membership /
+        live-profile state.  Backend-specific plumbing (waking parked
+        threads, re-dispatching joined workers, pushing profiles into
+        worker processes) stays in the backends."""
+        if ev.kind == "set_profile":
+            targets = ([ev.worker] if ev.worker is not None
+                       else range(self.cfg.n_workers))
+            for w in targets:
+                self.live_profiles[w] = ev.profile
+        elif ev.kind == "preempt":
+            self.preempt_worker(ev.worker)
+        elif ev.kind == "join":
+            self.join_worker(ev.worker)
+        elif ev.kind == "pause":
+            targets = ([ev.worker] if ev.worker is not None
+                       else list(self.active))
+            self.paused.update(w for w in targets if w in self.active)
+        elif ev.kind == "resume":
+            if ev.worker is None:
+                self.paused.clear()
+            else:
+                self.paused.discard(ev.worker)
+        else:
+            raise ValueError(f"unknown scenario event kind {ev.kind!r}")
+        if self.tracer is not None:
+            self.tracer.scenario_event(t, ev)
+
+    def round_participants(self) -> List[int]:
+        """Sync mode: the workers that take part in the next round."""
+        return sorted(self.active - self.paused)
+
+    def round_assignment(self, worker: int) -> np.ndarray:
+        """Sync mode: all indices the worker serves this round (its
+        assigned blocks concatenated; the single-home-block default
+        returns the memoized block object itself)."""
+        bs = self.worker_blocks.get(worker) or []
+        if len(bs) == 1:
+            return self.blocks[bs[0]]
+        return np.concatenate([self.blocks[b] for b in bs])
+
+    # ----------------------------------------------------------------- #
     # Index selection
     # ----------------------------------------------------------------- #
-    def select_indices(self, worker: int) -> np.ndarray:
-        """Per-dispatch selection (async mode: workers launch one at a time)."""
+    def next_dispatch(self, worker: int) -> Tuple[Optional[int], np.ndarray]:
+        """One async dispatch for ``worker``: ``(block_id, indices)``.
+
+        Fixed selection walks the worker's assigned blocks round-robin
+        (the static-membership default assignment is ``[worker]``, so this
+        returns the memoized ``blocks[worker]`` object unchanged); other
+        selections return ``(None, indices)`` exactly as before.
+        """
         cfg = self.cfg
         if cfg.selection == "fixed":
-            return self.blocks[worker]
+            if self._membership_version == 0:
+                # Static membership (every scenario-free run): the
+                # assignment is the identity — skip the round-robin
+                # bookkeeping on the hot dispatch path.
+                return worker, self.blocks[worker]
+            bs = self.worker_blocks.get(worker) or [worker]
+            b = bs[self._rr[worker] % len(bs)]
+            self._rr[worker] += 1
+            return b, self.blocks[b]
+        return None, self._select_indices_dynamic(worker)
+
+    def select_indices(self, worker: int) -> np.ndarray:
+        """Per-dispatch selection (async mode: workers launch one at a time)."""
+        return self.next_dispatch(worker)[1]
+
+    def _select_indices_dynamic(self, worker: int) -> np.ndarray:
+        cfg = self.cfg
         k = cfg.selection_k or max(1, self.problem.n // cfg.n_workers)
         if cfg.selection == "uniform":
             return self.rng.choice(self.problem.n, size=k, replace=False)
@@ -362,9 +556,13 @@ class Coordinator:
     # ----------------------------------------------------------------- #
     def apply_return(
         self, indices: np.ndarray, values: np.ndarray, profile: FaultProfile,
-        staleness: int,
+        staleness: int, worker: Optional[int] = None,
     ) -> bool:
-        """Apply one worker return; returns False if dropped."""
+        """Apply one worker return; returns False if dropped.
+
+        ``worker`` (when the backend passes it) feeds the per-worker
+        service-fraction accounting; it changes no numerical behaviour.
+        """
         cfg = self.cfg
         if profile.max_staleness is not None and staleness > profile.max_staleness:
             self.stale_drops += 1
@@ -392,6 +590,9 @@ class Coordinator:
             self.fire_window_arrivals += 1
         self.staleness_sum += staleness
         self.staleness_n += 1
+        if worker is not None:
+            self.applied_by_worker[worker] = (
+                self.applied_by_worker.get(worker, 0) + 1)
         return True
 
     # ----------------------------------------------------------------- #
@@ -417,7 +618,7 @@ class Coordinator:
         """
         if self.accel is None or self.cfg.accel_mode == "monitor":
             return None
-        plan = AccelPlan(self.x.copy(), self.wu, t)
+        plan = AccelPlan(self.x.copy(), self.wu, t, self._membership_version)
         self._fires_inflight += 1
         return plan
 
@@ -434,6 +635,8 @@ class Coordinator:
         plan._item = None
         if offloaded:
             self.offloaded_evals += 1
+            if self.tracer is not None and item is not None:
+                self.tracer.offload(item.kind)
         elif item is not None and item.kind == EvalItem.FULL_MAP:
             self.coordinator_evals += 1
         if plan.stage == "map":
@@ -474,16 +677,23 @@ class Coordinator:
         updates were applied since ``accel_begin`` (only possible with
         offloaded evaluations), the fire is *discarded* — neither the
         candidate nor the G(x_pin) fallback may overwrite blocks that are
-        fresher than the pinned iterate they were computed from.  Returns
-        the applied verdict: "accept" | "fallback" | "discard".
+        fresher than the pinned iterate they were computed from.  The same
+        guard covers *reassignment windows*: a fire whose begin -> commit
+        span crossed a membership change (preempt/join) is discarded too —
+        its pinned iterate predates the block reassignment, so committing
+        it could overwrite blocks that changed servers mid-flight.
+        Returns the applied verdict: "accept" | "fallback" | "discard".
         """
         self._fires_inflight -= 1
         if t is not None:
             self.fire_window_s += max(0.0, t - plan.t_begin)
         stale = self.wu - plan.wu_begin
-        if stale > self._accel_stale_limit:
+        if (stale > self._accel_stale_limit
+                or plan.mver != self._membership_version):
             self.accel_discards += 1
             self.accel.record_reject()
+            if self.tracer is not None:
+                self.tracer.fire("discard", t)
             return "discard"
         if plan.verdict == "accept":
             self.accel.record_accept()
@@ -492,9 +702,11 @@ class Coordinator:
             self.accel.record_reject()
             self.x = _writable(self.problem.project(plan.g))
         self._x_version += 1
+        if self.tracer is not None:
+            self.tracer.fire(plan.verdict, t)
         return plan.verdict
 
-    def maybe_fire_accel(self) -> None:
+    def maybe_fire_accel(self) -> Optional[str]:
         """Coordinator-level Anderson/DIIS (paper §3.4 modes 2 and 3).
 
         Drives the begin/feed/commit machine with inline evaluations.  Per
@@ -502,10 +714,11 @@ class Coordinator:
         the safeguard actually has a candidate to judge — the two
         residual-norm evaluations Eq. 5 needs.  The degenerate-window and
         safeguard-off paths skip the residual evaluations entirely.
+        Returns the applied verdict (None when acceleration is off).
         """
         plan = self.accel_begin()
         if plan is None:
-            return
+            return None
         t0 = time.perf_counter()
         item = plan.next_item()
         while item is not None:
@@ -513,7 +726,7 @@ class Coordinator:
             item = plan.next_item()
         if self.measure_fire_windows:
             self.fire_window_s += time.perf_counter() - t0
-        self.accel_commit(plan)
+        return self.accel_commit(plan)
 
     # ----------------------------------------------------------------- #
     # Shared real-backend loop machinery (thread / process / ray).  The
@@ -531,7 +744,7 @@ class Coordinator:
         """
         plans = []
         for w in sorted(alive):
-            prof = _fault_for(self.cfg, w)
+            prof = self.fault_for(w)
             delay = prof.sample_delay(self.rng)
             crashed = prof.sample_crash(self.rng)
             plans.append((w, prof, round_idx[w], delay, crashed))
@@ -616,6 +829,8 @@ class Coordinator:
         self.res_norm = self.problem.residual_norm(self.x)
         self._res_version = self._x_version
         self.history.append((t, self.wu, self.res_norm))
+        if self.tracer is not None:
+            self.tracer.record(t, self.res_norm)
         return self.res_norm
 
     def record_begin(self, t: float) -> RecordPlan:
@@ -634,6 +849,8 @@ class Coordinator:
         self.res_norm = float(value)
         self._res_version = plan.x_version
         self.history.append((plan.t, plan.wu, self.res_norm))
+        if self.tracer is not None:
+            self.tracer.record(plan.t, self.res_norm)
         return self.res_norm
 
     def converged(self) -> bool:
@@ -677,4 +894,13 @@ class Coordinator:
                 min(1.0, self.busy_s / t) if t > 0 else 0.0),
             fire_window_s=self.fire_window_s,
             fire_window_arrivals=self.fire_window_arrivals,
+            preemptions=self.preemptions,
+            joins=self.joins,
+            reassigned_blocks=self.reassigned_blocks,
+            preempt_discards=self.preempt_discards,
+            service_fractions={
+                w: cnt / max(self.wu, 1)
+                for w, cnt in sorted(self.applied_by_worker.items())},
+            trace=(self.tracer.to_trace() if self.tracer is not None
+                   else None),
         )

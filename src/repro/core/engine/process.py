@@ -32,13 +32,15 @@ result queue carries only ``(worker, kind, length, snapshot_wu)``, so value
 blocks are never pickled.  Staleness is measured exactly as in the thread
 backend: ``coord.wu - wu_at_snapshot``.
 
-Fault semantics mirror the thread backend: per-worker rngs (spawned from
-``cfg.seed``, fresh each run for reproducibility) drive delay and crash
-draws in async mode, the coordinator rng plans them in sync mode, and
-drop/noise filtering stays coordinator-side in ``apply_return``.  One
-divergence: an async crash-restart is counted when the crash *arrives*
-(the worker enforces its downtime before taking the next dispatch), so a
-run that stops mid-downtime may count a restart that never rejoined.
+Fault semantics mirror the thread backend exactly: per-worker rngs
+(spawned from ``cfg.seed``, fresh each run for reproducibility) drive
+delay and crash draws in async mode, the coordinator rng plans them in
+sync mode, and drop/noise filtering stays coordinator-side in
+``apply_return``.  An async restartable crash reports "crash"
+immediately, sleeps out its downtime worker-side, then reports "rejoin" —
+the parent counts the restart when that rejoin lands, so (like every
+other backend) a run that stops mid-downtime never counts a restart that
+did not rejoin.
 
 EvalService (``cfg.accel_eval == "worker"``, async mode)
 --------------------------------------------------------
@@ -137,6 +139,9 @@ def _worker_main(
       ("eval", kind)                     — EvalService item: the input x is
                                            in this worker's result slot;
                                            kind is "full_map" | "res_norm"
+      ("prof", profile)                  — chaos set_profile: delay/crash
+                                           draws use ``profile`` from the
+                                           next task on
       None                               — shut the interpreter down
     ``my_block`` is this worker's own row of the coordinator's memoized
     partition (the only one it ever evaluates); ``idx_or_None`` of None
@@ -144,10 +149,14 @@ def _worker_main(
     pickle index arrays.
 
     Messages out (``result_q``): ``(w, kind, data, snap_wu)`` with kind in
-    {"boot", "ready", "ok", "crash", "eval_ok", "eval_crash", "error"};
-    for "ok" the values are in the shared result slot and ``data`` is
-    their length; for "eval_ok" the full-map result is in the slot
-    (``data`` = its length) or ``data`` is the residual-norm scalar.
+    {"boot", "ready", "ok", "crash", "rejoin", "eval_ok", "eval_crash",
+    "error"}; for "ok" the values are in the shared result slot and
+    ``data`` is their length; for "eval_ok" the full-map result is in the
+    slot (``data`` = its length) or ``data`` is the residual-norm scalar.
+    An async restartable crash reports "crash" with ``data=True`` (it will
+    rejoin), sleeps out its downtime, then reports "rejoin" — so the
+    parent counts the restart when the downtime *ends*, the same
+    convention as every other backend.
     """
     shm = slot = None
     try:
@@ -171,6 +180,10 @@ def _worker_main(
                 prof = _fault_for(cfg, w)
                 rng = np.random.default_rng(seed_seq)
                 result_q.put((w, "ready", None, 0))
+                continue
+            if kind == "prof":
+                # Chaos scenario set_profile: applies from the next task.
+                prof = task[1]
                 continue
             if kind == "eval":
                 # Offloaded accel/record evaluation: input x is whatever
@@ -218,13 +231,17 @@ def _worker_main(
             if delay > 0.0:
                 time.sleep(delay)
             if prof.sample_crash(rng):
-                result_q.put((w, "crash", None, int(snap[0])))
-                if prof.restart_after is None:
+                will_rejoin = prof.restart_after is not None
+                result_q.put((w, "crash", will_rejoin, int(snap[0])))
+                if not will_rejoin:
                     # Simulated permanent crash: dead for the rest of THIS
                     # run (the parent stops dispatching to us) but the
                     # interpreter survives for the next pooled run.
                     continue
                 time.sleep(prof.restart_after)  # downtime before next task
+                # Downtime over: report the rejoin so the parent counts
+                # the restart now (downtime-end convention, all backends).
+                result_q.put((w, "rejoin", None, 0))
                 continue
             slot_view[:len(vals)] = vals
             result_q.put((w, "ok", len(vals), int(snap[0])))
@@ -308,14 +325,49 @@ class _WorkerPool:
 
     def get_result(self, deadline: float):
         """Blocking result read that notices dead children and timeouts."""
+        return self.get_result_wake(deadline, None)
+
+    def drain(self, pending: Set[int], rejoins: Set[int] = frozenset()) -> None:
+        """Consume (and discard) in-flight results so the next pooled run
+        starts from empty queues.  In-flight work at stop time was equally
+        lost by the old spawn-per-run teardown.  ``rejoins`` names workers
+        that still owe a post-downtime "rejoin" message (a restartable
+        crash whose downtime had not ended when the run stopped)."""
+        deadline = time.monotonic() + _READY_TIMEOUT_S
+        outstanding = set(pending)
+        owed = set(rejoins)
+        while outstanding or owed:
+            w, kind, data, _ = self.get_result(deadline)
+            if kind == "rejoin":
+                owed.discard(w)
+            else:
+                outstanding.discard(w)
+                if kind == "crash" and data:
+                    # A drained restartable crash still owes its
+                    # post-downtime "rejoin" message.
+                    owed.add(w)
+
+    def get_result_wake(self, deadline: float, wake_s: Optional[float]):
+        """:meth:`get_result` that additionally returns None once
+        ``wake_s`` seconds (from now) elapse with no result — the chaos
+        loop's bounded wait, so scripted events are applied on time even
+        while every worker is busy."""
+        wake = None if wake_s is None else time.monotonic() + max(wake_s, 0.0)
         while True:
-            timeout = min(_POLL_S, deadline - time.monotonic())
-            if timeout <= 0:
+            now = time.monotonic()
+            if deadline - now <= 0:
                 raise RuntimeError(
                     "timed out waiting for process-backend worker results")
+            timeout = min(_POLL_S, deadline - now)
+            if wake is not None:
+                if wake - now <= 0:
+                    return None
+                timeout = min(timeout, wake - now)
             try:
                 return self.result_q.get(timeout=timeout)
             except queue_mod.Empty:
+                if wake is not None and time.monotonic() >= wake:
+                    return None
                 if not any(p.is_alive() for p in self.procs):
                     try:  # drain results that raced with the exits
                         return self.result_q.get_nowait()
@@ -323,16 +375,6 @@ class _WorkerPool:
                         raise RuntimeError(
                             "all process-backend workers exited unexpectedly"
                         ) from None
-
-    def drain(self, pending: Set[int]) -> None:
-        """Consume (and discard) in-flight results so the next pooled run
-        starts from empty queues.  In-flight work at stop time was equally
-        lost by the old spawn-per-run teardown."""
-        deadline = time.monotonic() + _READY_TIMEOUT_S
-        outstanding = set(pending)
-        while outstanding:
-            w, kind, _, _ = self.get_result(deadline)
-            outstanding.discard(w)
 
     def write_x(self, coord: Coordinator) -> None:
         with self.shm_lock:
@@ -424,14 +466,22 @@ class ProcessPoolExecutor(Executor):
         if cfg.accel is not None:
             problem.full_map(coord.x)  # compile the parent-side accel path
             # off-clock (workers warm their own paths at run setup)
+        if cfg.capture_trace and cfg.mode == "async":
+            from ...chaos.trace import TraceRecorder
+
+            coord.tracer = TraceRecorder(cfg, self.name, problem)
         pool = _get_pool(payload, cfg, problem.n)
         try:
             pool.setup_run(cfg, coord.blocks)
             pool.write_x(coord)
             if cfg.mode == "sync":
+                if cfg.scenario is not None:
+                    return self._run_sync_chaos(cfg, coord, pool)
                 return self._run_sync(cfg, coord, pool)
             if cfg.accel_eval == "worker":
                 return self._run_async_offload(cfg, coord, pool)
+            if cfg.scenario is not None or cfg.capture_trace:
+                return self._run_async_chaos(cfg, coord, pool)
             return self._run_async(cfg, coord, pool)
         except Exception:
             # A worker error (or timeout) leaves queues in an unknown
@@ -487,6 +537,7 @@ class ProcessPoolExecutor(Executor):
         since_fire = 0
         alive = set(range(cfg.n_workers))
         pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
+        rejoin_owed: Set[int] = set()  # restartable crashes mid-downtime
         stop = False
 
         def dispatch(w: int) -> None:
@@ -502,23 +553,30 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "rejoin":
+                # Downtime over: count the restart now (the same
+                # downtime-end convention as thread/ray/virtual).
+                coord.restarts += 1
+                rejoin_owed.discard(w)
+                continue
             with coord.busy():
                 prof = _fault_for(cfg, w)
                 idx = pending.pop(w)
                 redispatch = True
                 if kind == "crash":
                     coord.crashes += 1
-                    if prof.restart_after is None:
+                    if not data:  # data=True iff the worker will rejoin
                         alive.discard(w)
                         redispatch = False
                     else:
-                        # Counted on arrival; the worker enforces its
-                        # downtime before picking up the redispatched task.
-                        coord.restarts += 1
+                        # The restart is counted when the worker's
+                        # "rejoin" message lands; its redispatched task
+                        # waits out the downtime in its queue.
+                        rejoin_owed.add(w)
                 else:
                     applied = coord.apply_return(
                         idx, pool.slot_views[w][:data], prof,
-                        staleness=coord.wu - snap_wu)
+                        staleness=coord.wu - snap_wu, worker=w)
                     if applied:
                         since_fire += 1
                         if (coord.accel is not None
@@ -532,7 +590,240 @@ class ProcessPoolExecutor(Executor):
         t = time.perf_counter() - t0
         # In-flight evaluations are discarded (same as the old teardown);
         # draining leaves the pool's queues empty for the next run.
-        pool.drain(set(pending))
+        pool.drain(set(pending), rejoin_owed)
+        coord.record(t)
+        return coord.result(t, coord.wu, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_sync_chaos(
+        self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
+    ) -> RunResult:
+        """BSP loop under a chaos scenario (events at round boundaries;
+        see the thread backend's ``_run_sync_chaos`` for the semantics)."""
+        from ...chaos.scenario import ScenarioClock
+
+        clock = ScenarioClock(cfg.scenario)
+        t0 = time.perf_counter()
+        rounds = 0
+        alive = set(range(cfg.n_workers))
+        coord.record(0.0)
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def apply_event(ev, now: float) -> None:
+            coord.apply_scenario_event(ev, now)
+            if ev.kind == "set_profile":
+                targets = ([ev.worker] if ev.worker is not None
+                           else range(cfg.n_workers))
+                for wt in targets:
+                    pool.task_qs[wt].put(("prof", ev.profile))
+
+        while (coord.wu < cfg.max_updates and alive
+               and coord.arrivals < coord.max_arrivals):
+            now = elapsed()
+            for ev in clock.due(now):
+                apply_event(ev, now)
+            parts = [w for w in coord.round_participants() if w in alive]
+            if not parts:
+                nt = clock.next_time()
+                if nt is None:
+                    break  # membership can never recover
+                time.sleep(max(0.0, nt - elapsed()))
+                continue
+            rounds += 1
+            pool.write_x(coord)
+            round_idx = {w: coord.round_assignment(w) for w in parts}
+            plans = coord.plan_round(set(parts), round_idx)
+            by_worker: Dict[int, Tuple] = {}
+            for w, prof, idx, delay, crashed in plans:
+                by_worker[w] = (prof, idx, crashed)
+                wire_idx = None if idx is coord.blocks[w] else idx
+                pool.task_qs[w].put(("sync", wire_idx, delay, crashed))
+            deadline = time.monotonic() + _READY_TIMEOUT_S
+            for _ in range(len(plans)):
+                w, kind, data, _snap = pool.get_result(deadline)
+                if kind == "error":
+                    raise RuntimeError(f"worker {w} failed: {data}")
+                coord.arrivals += 1
+                prof, idx, crashed = by_worker[w]
+                if crashed:
+                    coord.note_sync_crash(prof, w, alive)
+                    continue
+                coord.apply_return(idx, pool.slot_views[w][:data], prof,
+                                   staleness=0, worker=w)
+            t, verdict = coord.sync_round_tick(rounds, elapsed)
+            if verdict in ("diverged", "converged"):
+                return coord.result(t, rounds, verdict == "converged")
+            if verdict == "budget":
+                break
+        t = elapsed()
+        return coord.result(t, rounds, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async_chaos(
+        self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
+    ) -> RunResult:
+        """Async loop with chaos scenarios and/or trace capture.
+
+        The parent's result wait is bounded by the next scripted event
+        time (``get_result_wake``), so events apply on schedule even with
+        every worker mid-task.  Preempted workers are simply not
+        redispatched (their interpreters stay pooled, exactly like
+        simulated permanent crashes); a result that raced its worker's
+        preemption is discarded via ``preempt_gen``.  ``set_profile``
+        events are forwarded to the worker interpreters as ``("prof", …)``
+        messages, which apply from the worker's next task on.
+        """
+        from ...chaos.scenario import ScenarioClock
+
+        clock = ScenarioClock(cfg.scenario)
+        t0 = time.perf_counter()
+        coord.record(0.0)
+        since_fire = 0
+        alive = set(range(cfg.n_workers))
+        pending: Dict[int, Tuple[np.ndarray, int]] = {}  # w -> (idx, gen)
+        rejoin_owed: Set[int] = set()
+        rejoin_gen: Dict[int, int] = {}  # incarnation that crashed
+        parked: Set[int] = set()  # paused workers with no task in flight
+        stop = False
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def dispatch(w: int) -> None:
+            gen = coord.preempt_gen[w]
+            bid, idx = coord.next_dispatch(w)
+            pending[w] = (idx, gen)
+            wire_idx = None if idx is coord.blocks[w] else idx
+            if coord.tracer is not None:
+                coord.tracer.dispatch(elapsed(), w, bid, gen)
+            pool.task_qs[w].put(("async", wire_idx))
+
+        def idle_or_park(w: int) -> None:
+            """Redispatch an idle worker, or park it while paused."""
+            if coord.dispatchable(w) and w in alive:
+                dispatch(w)
+            elif w in coord.active and w in alive:
+                parked.add(w)
+
+        def apply_event(ev, now: float) -> None:
+            coord.apply_scenario_event(ev, now)
+            if ev.kind == "set_profile":
+                targets = ([ev.worker] if ev.worker is not None
+                           else range(cfg.n_workers))
+                for wt in targets:
+                    pool.task_qs[wt].put(("prof", ev.profile))
+            elif ev.kind == "join":
+                parked.discard(ev.worker)
+                if ev.worker not in pending and ev.worker in alive:
+                    if coord.dispatchable(ev.worker):
+                        dispatch(ev.worker)
+                    elif ev.worker in coord.active:
+                        parked.add(ev.worker)  # joined into a pause
+            elif ev.kind == "resume":
+                for wt in sorted(parked):
+                    if coord.dispatchable(wt):
+                        parked.discard(wt)
+                        dispatch(wt)
+            elif ev.kind == "preempt":
+                parked.discard(ev.worker)
+
+        for ev in clock.due(0.0):
+            apply_event(ev, 0.0)
+        for w in sorted(alive):
+            if w in pending:
+                continue  # a t=0 join event already dispatched it
+            if coord.dispatchable(w):
+                dispatch(w)
+            elif w in coord.active:
+                parked.add(w)  # paused before first dispatch: resumable
+        while alive and not stop:
+            now = elapsed()
+            for ev in clock.due(now):
+                apply_event(ev, now)
+            nt = clock.next_time()
+            if not pending and not rejoin_owed:
+                if nt is None:
+                    break  # nothing in flight and no event can revive us
+                time.sleep(max(0.0, nt - elapsed()))
+                continue
+            deadline = time.monotonic() + _READY_TIMEOUT_S
+            res = pool.get_result_wake(
+                deadline, None if nt is None else nt - elapsed())
+            if res is None:
+                continue  # an event came due; apply it at the loop top
+            w, kind, data, snap_wu = res
+            if kind == "error":
+                raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "rejoin":
+                rejoin_owed.discard(w)
+                if rejoin_gen.pop(w, -1) == coord.preempt_gen[w]:
+                    # Downtime ended inside the same incarnation: the
+                    # restart rejoined (a worker preempted mid-downtime
+                    # never did — same convention as the thread backend).
+                    coord.restarts += 1
+                    if coord.tracer is not None:
+                        coord.tracer.restart(elapsed(), w)
+                continue
+            with coord.busy():
+                prof = coord.fault_for(w)
+                idx, gen = pending.pop(w)
+                if kind == "crash":
+                    if data:  # data=True iff the worker will rejoin
+                        rejoin_owed.add(w)
+                        rejoin_gen[w] = gen
+                    if gen != coord.preempt_gen[w]:
+                        coord.preempt_discards += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w,
+                                                 "preempt_discard", gen=gen)
+                        # A rejoined worker must get fresh work even though
+                        # this (doomed) result was a crash report — its
+                        # queued task just waits out the downtime.
+                        idle_or_park(w)
+                        continue
+                    coord.crashes += 1
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(elapsed(), w, "crash", gen=gen)
+                    stop = coord.arrival_tick(elapsed())
+                    if not data:
+                        alive.discard(w)
+                    elif not stop:
+                        # The redispatched task waits out the downtime in
+                        # the worker's queue.
+                        idle_or_park(w)
+                    continue
+                if gen != coord.preempt_gen[w]:
+                    # Preempted (and possibly rejoined) while in flight:
+                    # the result predates the reassignment — discard it.
+                    coord.preempt_discards += 1
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(elapsed(), w, "preempt_discard",
+                                             gen=gen)
+                    idle_or_park(w)
+                    continue
+                staleness = coord.wu - snap_wu
+                applied = coord.apply_return(
+                    idx, pool.slot_views[w][:data], prof,
+                    staleness=staleness, worker=w)
+                if coord.tracer is not None:
+                    coord.tracer.arrival(
+                        elapsed(), w,
+                        "applied" if applied else "filtered", staleness,
+                        gen=gen)
+                if applied:
+                    since_fire += 1
+                    if (coord.accel is not None
+                            and since_fire >= cfg.fire_every):
+                        coord.maybe_fire_accel()
+                        since_fire = 0
+                pool.write_x(coord)
+                stop = coord.arrival_tick(elapsed())
+                if not stop:
+                    idle_or_park(w)
+        t = elapsed()
+        pool.drain(set(pending), rejoin_owed)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
 
@@ -554,6 +845,7 @@ class ProcessPoolExecutor(Executor):
         since_fire = 0
         alive = set(range(cfg.n_workers))
         pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
+        rejoin_owed: Set[int] = set()  # restartable crashes mid-downtime
         plans: "deque" = deque()  # eval pipelines; front is being served
         eval_worker: Optional[int] = None
         eval_item: Optional[EvalItem] = None
@@ -563,9 +855,11 @@ class ProcessPoolExecutor(Executor):
             return time.perf_counter() - t0
 
         def dispatch(w: int) -> None:
-            idx = coord.select_indices(w)
+            bid, idx = coord.next_dispatch(w)
             pending[w] = idx
             wire_idx = None if idx is coord.blocks[w] else idx
+            if coord.tracer is not None:
+                coord.tracer.dispatch(elapsed(), w, bid)
             pool.task_qs[w].put(("async", wire_idx))
 
         def service_eval(w: int) -> bool:
@@ -596,6 +890,12 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "rejoin":
+                coord.restarts += 1
+                rejoin_owed.discard(w)
+                if coord.tracer is not None:
+                    coord.tracer.restart(elapsed(), w)
+                continue
             if kind in ("eval_ok", "eval_crash"):
                 with coord.busy():
                     plan = plans[0]
@@ -642,15 +942,22 @@ class ProcessPoolExecutor(Executor):
                 redispatch = True
                 if kind == "crash":
                     coord.crashes += 1
-                    if prof.restart_after is None:
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(elapsed(), w, "crash")
+                    if not data:  # data=True iff the worker will rejoin
                         alive.discard(w)
                         redispatch = False
                     else:
-                        coord.restarts += 1
+                        rejoin_owed.add(w)
                 else:
+                    staleness = coord.wu - snap_wu
                     applied = coord.apply_return(
                         idx, pool.slot_views[w][:data], prof,
-                        staleness=coord.wu - snap_wu)
+                        staleness=staleness, worker=w)
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(
+                            elapsed(), w,
+                            "applied" if applied else "filtered", staleness)
                     if applied:
                         since_fire += 1
                         if (coord.accel is not None
@@ -681,6 +988,6 @@ class ProcessPoolExecutor(Executor):
         outstanding = set(pending)
         if eval_worker is not None:
             outstanding.add(eval_worker)
-        pool.drain(outstanding)
+        pool.drain(outstanding, rejoin_owed)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())

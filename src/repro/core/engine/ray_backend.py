@@ -132,6 +132,12 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             self.rng = np.random.default_rng(seed_seq)
             return True
 
+        def set_profile(self, prof) -> bool:
+            """Chaos ``set_profile``: delay/crash draws use ``prof`` from
+            the next dispatch on."""
+            self.prof = prof
+            return True
+
         def eval_sync(self, x, idx, delay: float, crashed: bool):
             vals = worker_eval(self.problem, self.cfg, x, idx)
             if delay > 0.0:
@@ -256,6 +262,10 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             coord.measure_fire_windows = True  # real clock: time inline fires
             if cfg.accel is not None:
                 problem.full_map(coord.x)  # compile the accel path off-clock
+            if cfg.capture_trace and cfg.mode == "async":
+                from ...chaos.trace import TraceRecorder
+
+                coord.tracer = TraceRecorder(cfg, self.name, problem)
             pool = _get_ray_pool(payload, cfg)
             try:
                 # Startup barrier: rebuild + jit warm-up happens off-clock
@@ -263,9 +273,13 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 pool.setup_run(cfg, coord.blocks)
                 actors = pool.actors
                 if cfg.mode == "sync":
+                    if cfg.scenario is not None:
+                        return self._run_sync_chaos(cfg, coord, actors)
                     return self._run_sync(cfg, coord, actors)
                 if cfg.accel_eval == "worker":
                     return self._run_async_offload(cfg, coord, actors)
+                if cfg.scenario is not None or cfg.capture_trace:
+                    return self._run_async_chaos(cfg, coord, actors)
                 return self._run_async(cfg, coord, actors)
             except Exception:
                 # An actor error leaves futures in an unknown state:
@@ -359,7 +373,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                                 rejoin, (elapsed() + prof.restart_after, w))
                     else:
                         applied = coord.apply_return(
-                            idx, vals, prof, staleness=coord.wu - launch_wu)
+                            idx, vals, prof, staleness=coord.wu - launch_wu,
+                            worker=w)
                         if applied:
                             since_fire += 1
                             if (coord.accel is not None
@@ -369,6 +384,223 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                     stop = coord.arrival_tick(elapsed())
                     if not stop and redispatch:
                         dispatch(w)
+            t = elapsed()
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())
+
+        # ------------------------------------------------------------- #
+        def _run_sync_chaos(
+            self, cfg: RunConfig, coord: Coordinator, actors
+        ) -> RunResult:
+            """BSP loop under a chaos scenario: events at round
+            boundaries, preempted workers out of the round set, their
+            blocks served by survivors (mirrors the process backend)."""
+            from ...chaos.scenario import ScenarioClock
+
+            clock = ScenarioClock(cfg.scenario)
+            t0 = time.perf_counter()
+            rounds = 0
+            alive: Set[int] = set(range(cfg.n_workers))
+            coord.record(0.0)
+
+            def elapsed() -> float:
+                return time.perf_counter() - t0
+
+            def apply_event(ev, now: float) -> None:
+                coord.apply_scenario_event(ev, now)
+                if ev.kind == "set_profile":
+                    targets = ([ev.worker] if ev.worker is not None
+                               else range(cfg.n_workers))
+                    ray.get([actors[wt].set_profile.remote(ev.profile)
+                             for wt in targets])
+
+            while (coord.wu < cfg.max_updates and alive
+                   and coord.arrivals < coord.max_arrivals):
+                now = elapsed()
+                for ev in clock.due(now):
+                    apply_event(ev, now)
+                parts = [w for w in coord.round_participants() if w in alive]
+                if not parts:
+                    nt = clock.next_time()
+                    if nt is None:
+                        break  # membership can never recover
+                    time.sleep(max(0.0, nt - elapsed()))
+                    continue
+                rounds += 1
+                x_ref = ray.put(np.asarray(coord.x))
+                round_idx = {w: coord.round_assignment(w) for w in parts}
+                plans = coord.plan_round(set(parts), round_idx)
+                futs = [
+                    actors[w].eval_sync.remote(x_ref, idx, delay, crashed)
+                    for w, _, idx, delay, crashed in plans
+                ]
+                for (w, prof, idx, _, crashed), fut in zip(plans, futs):
+                    kind, vals = ray.get(fut)
+                    coord.arrivals += 1
+                    if crashed:
+                        coord.note_sync_crash(prof, w, alive)
+                        continue
+                    coord.apply_return(idx, vals, prof, staleness=0,
+                                       worker=w)
+                t, verdict = coord.sync_round_tick(rounds, elapsed)
+                if verdict in ("diverged", "converged"):
+                    return coord.result(t, rounds, verdict == "converged")
+                if verdict == "budget":
+                    break
+            t = elapsed()
+            return coord.result(t, rounds, coord.converged())
+
+        # ------------------------------------------------------------- #
+        def _run_async_chaos(
+            self, cfg: RunConfig, coord: Coordinator, actors
+        ) -> RunResult:
+            """Async loop with chaos scenarios and/or trace capture.
+
+            ``ray.wait`` timeouts are bounded by the next scripted event
+            (and the next crash rejoin), so events apply on schedule;
+            preempted actors are simply not redispatched, and a result
+            that raced its worker's preemption is discarded via
+            ``preempt_gen`` (mirrors the process backend's chaos loop).
+            """
+            from ...chaos.scenario import ScenarioClock
+
+            clock = ScenarioClock(cfg.scenario)
+            t0 = time.perf_counter()
+            coord.record(0.0)
+            since_fire = 0
+            alive: Set[int] = set(range(cfg.n_workers))
+            futures: Dict = {}  # ObjectRef -> (worker, idx, wu, gen)
+            rejoin: List[Tuple[float, int, int]] = []  # (t, worker, gen)
+            parked: Set[int] = set()
+            stop = False
+
+            def elapsed() -> float:
+                return time.perf_counter() - t0
+
+            def dispatch(w: int) -> None:
+                gen = coord.preempt_gen[w]
+                bid, idx = coord.next_dispatch(w)
+                x_ref = ray.put(np.asarray(coord.x))
+                if coord.tracer is not None:
+                    coord.tracer.dispatch(elapsed(), w, bid, gen)
+                fut = actors[w].eval_async.remote(x_ref, idx)
+                futures[fut] = (w, idx, coord.wu, gen)
+
+            def idle_or_park(w: int) -> None:
+                if coord.dispatchable(w) and w in alive:
+                    dispatch(w)
+                elif w in coord.active and w in alive:
+                    parked.add(w)
+
+            def apply_event(ev, now: float) -> None:
+                coord.apply_scenario_event(ev, now)
+                if ev.kind == "set_profile":
+                    targets = ([ev.worker] if ev.worker is not None
+                               else range(cfg.n_workers))
+                    ray.get([actors[wt].set_profile.remote(ev.profile)
+                             for wt in targets])
+                elif ev.kind == "join":
+                    parked.discard(ev.worker)
+                    inflight = {t[0] for t in futures.values()}
+                    if ev.worker not in inflight and ev.worker in alive:
+                        if coord.dispatchable(ev.worker):
+                            dispatch(ev.worker)
+                        elif ev.worker in coord.active:
+                            parked.add(ev.worker)  # joined into a pause
+                elif ev.kind == "resume":
+                    for wt in sorted(parked):
+                        if coord.dispatchable(wt):
+                            parked.discard(wt)
+                            dispatch(wt)
+                elif ev.kind == "preempt":
+                    parked.discard(ev.worker)
+
+            for ev in clock.due(0.0):
+                apply_event(ev, 0.0)
+            inflight0 = {t[0] for t in futures.values()}
+            for w in sorted(alive):
+                if w in inflight0:
+                    continue  # a t=0 join event already dispatched it
+                if coord.dispatchable(w):
+                    dispatch(w)
+                elif w in coord.active:
+                    parked.add(w)  # paused before first dispatch: resumable
+            while not stop and alive:
+                now = elapsed()
+                for ev in clock.due(now):
+                    apply_event(ev, now)
+                while rejoin and rejoin[0][0] <= now:
+                    _, w, gen = heapq.heappop(rejoin)
+                    if gen != coord.preempt_gen[w]:
+                        # Preempted during its downtime: the rejoin
+                        # belongs to the dead incarnation — no restart,
+                        # and no second dispatch stream.
+                        continue
+                    coord.restarts += 1
+                    if coord.tracer is not None:
+                        coord.tracer.restart(now, w)
+                    idle_or_park(w)
+                if not futures and not rejoin:
+                    nt = clock.next_time()
+                    if nt is None:
+                        break  # nothing in flight, no event can revive us
+                    time.sleep(max(0.0, nt - elapsed()))
+                    continue
+                bounds = [b for b in (
+                    rejoin[0][0] - now if rejoin else None,
+                    (clock.next_time() - now
+                     if clock.next_time() is not None else None),
+                ) if b is not None]
+                timeout = max(0.0, min(bounds)) if bounds else None
+                if not futures:
+                    time.sleep(min(b for b in bounds))
+                    continue
+                done, _ = ray.wait(list(futures), num_returns=1,
+                                   timeout=timeout)
+                if not done:
+                    continue  # a rejoin or scripted event came due first
+                fut = done[0]
+                w, idx, launch_wu, gen = futures.pop(fut)
+                kind, vals = ray.get(fut)
+                with coord.busy():
+                    prof = coord.fault_for(w)
+                    if gen != coord.preempt_gen[w]:
+                        coord.preempt_discards += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w,
+                                                 "preempt_discard", gen=gen)
+                        idle_or_park(w)
+                        continue
+                    if kind == "crash":
+                        coord.crashes += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w, "crash",
+                                                 gen=gen)
+                        if prof.restart_after is None:
+                            alive.discard(w)
+                        else:
+                            heapq.heappush(
+                                rejoin,
+                                (elapsed() + prof.restart_after, w, gen))
+                        stop = coord.arrival_tick(elapsed())
+                        continue
+                    staleness = coord.wu - launch_wu
+                    applied = coord.apply_return(
+                        idx, vals, prof, staleness=staleness, worker=w)
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(
+                            elapsed(), w,
+                            "applied" if applied else "filtered", staleness,
+                            gen=gen)
+                    if applied:
+                        since_fire += 1
+                        if (coord.accel is not None
+                                and since_fire >= cfg.fire_every):
+                            coord.maybe_fire_accel()
+                            since_fire = 0
+                    stop = coord.arrival_tick(elapsed())
+                    if not stop:
+                        idle_or_park(w)
             t = elapsed()
             coord.record(t)
             return coord.result(t, coord.wu, coord.converged())
@@ -483,7 +715,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                                 rejoin, (elapsed() + prof.restart_after, w))
                     else:
                         applied = coord.apply_return(
-                            idx, vals, prof, staleness=coord.wu - launch_wu)
+                            idx, vals, prof, staleness=coord.wu - launch_wu,
+                            worker=w)
                         if applied:
                             since_fire += 1
                             if (coord.accel is not None

@@ -60,11 +60,19 @@ class ThreadPoolExecutor(Executor):
         if cfg.accel is not None:
             problem.full_map(coord.x)
         problem.residual_norm(coord.x)
+        if cfg.capture_trace and cfg.mode == "async":
+            from ...chaos.trace import TraceRecorder
+
+            coord.tracer = TraceRecorder(cfg, self.name, problem)
         if cfg.mode == "sync":
+            if cfg.scenario is not None:
+                return self._run_sync_chaos(problem, cfg, coord)
             return self._run_sync(problem, cfg, coord)
         if cfg.mode == "async":
             if cfg.accel_eval == "worker":
                 return self._run_async_offload(problem, cfg, coord)
+            if cfg.scenario is not None or cfg.capture_trace:
+                return self._run_async_chaos(problem, cfg, coord)
             return self._run_async(problem, cfg, coord)
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
@@ -165,13 +173,16 @@ class ThreadPoolExecutor(Executor):
                         return  # permanent crash (or run over): thread exits
                     time.sleep(prof.restart_after)
                     with lock:
+                        if stop.is_set():
+                            return  # run ended mid-downtime: never rejoined
                         coord.restarts += 1
                     continue
                 with lock, coord.busy():
                     if stop.is_set():
                         return
                     applied = coord.apply_return(
-                        idx, vals, prof, staleness=coord.wu - launch_wu
+                        idx, vals, prof, staleness=coord.wu - launch_wu,
+                        worker=w
                     )
                     if applied:
                         state["since_fire"] += 1
@@ -191,6 +202,221 @@ class ThreadPoolExecutor(Executor):
             th.start()
         for th in threads:
             th.join()
+        t = elapsed()
+        with lock:
+            coord.record(t)
+            return coord.result(t, coord.wu, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_sync_chaos(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator
+    ) -> RunResult:
+        """BSP loop under a chaos scenario: events apply at round
+        boundaries (the barrier is the BSP granularity); preempted workers
+        leave the round set with their blocks served by survivors, paused
+        workers idle, and when nobody can take a round the loop sleeps to
+        the next scripted event."""
+        from ...chaos.scenario import ScenarioClock
+
+        clock = ScenarioClock(cfg.scenario)
+        t0 = time.perf_counter()
+        rounds = 0
+        alive = set(range(cfg.n_workers))
+        coord.record(0.0)
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        with _Pool(max_workers=cfg.n_workers) as pool:
+            while (coord.wu < cfg.max_updates and alive
+                   and coord.arrivals < coord.max_arrivals):
+                now = elapsed()
+                for ev in clock.due(now):
+                    coord.apply_scenario_event(ev, now)
+                parts = [w for w in coord.round_participants() if w in alive]
+                if not parts:
+                    nt = clock.next_time()
+                    if nt is None:
+                        break  # membership can never recover
+                    time.sleep(max(0.0, nt - elapsed()))
+                    continue
+                rounds += 1
+                x_snap = coord.x.copy()
+                round_idx = {w: coord.round_assignment(w) for w in parts}
+                plans = coord.plan_round(set(parts), round_idx)
+                futs = [
+                    pool.submit(self._sync_task, problem, cfg, x_snap, idx,
+                                delay, crashed, prof)
+                    for _, prof, idx, delay, crashed in plans
+                ]
+                for (w, prof, idx, _, crashed), fut in zip(plans, futs):
+                    vals = fut.result()
+                    coord.arrivals += 1
+                    if crashed:
+                        coord.note_sync_crash(prof, w, alive)
+                        continue
+                    coord.apply_return(idx, vals, prof, staleness=0, worker=w)
+                t, verdict = coord.sync_round_tick(rounds, elapsed)
+                if verdict in ("diverged", "converged"):
+                    return coord.result(t, rounds, verdict == "converged")
+                if verdict == "budget":
+                    break
+        t = elapsed()
+        return coord.result(t, rounds, coord.converged())
+
+    # ----------------------------------------------------------------- #
+    def _run_async_chaos(
+        self, problem: FixedPointProblem, cfg: RunConfig, coord: Coordinator
+    ) -> RunResult:
+        """Async loop with chaos scenarios and/or trace capture.
+
+        A dedicated chaos-driver thread wakes at each scripted event time
+        and applies it under the coordinator lock; worker threads park on
+        a condition while they are preempted or paused (and exit once no
+        future join can revive them).  A result computed across its
+        worker's preemption is discarded at the apply point
+        (``preempt_gen`` recognizes the stale incarnation), mirroring the
+        virtual backend's semantics on wall clock.
+        """
+        from ...chaos.scenario import ScenarioClock
+
+        lock = threading.Lock()
+        cond = threading.Condition(lock)
+        stop = threading.Event()
+        state = {"since_fire": 0}
+        clock = ScenarioClock(cfg.scenario)
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+        worker_rngs = [np.random.default_rng(s) for s in seeds]
+        t0 = time.perf_counter()
+        with cond:
+            for ev in clock.due(0.0):
+                coord.apply_scenario_event(ev, 0.0)
+        coord.record(0.0)
+
+        def elapsed() -> float:
+            return time.perf_counter() - t0
+
+        def chaos_driver() -> None:
+            while not stop.is_set():
+                nt = clock.next_time()
+                if nt is None:
+                    with cond:
+                        if not (coord.active - coord.paused):
+                            # Nobody can ever take work again: the script
+                            # ended with the membership empty/paused.
+                            stop.set()
+                            cond.notify_all()
+                    return
+                wait = nt - elapsed()
+                if wait > 0 and stop.wait(wait):
+                    return
+                with cond:
+                    now = elapsed()
+                    for ev in clock.due(now):
+                        coord.apply_scenario_event(ev, now)
+                    cond.notify_all()
+
+        def worker_loop(w: int) -> None:
+            rng = worker_rngs[w]
+            while not stop.is_set():
+                with cond:
+                    while not stop.is_set() and not coord.dispatchable(w):
+                        if clock.exhausted:
+                            # join/resume only ever come from the script:
+                            # an undispatchable worker with the script
+                            # drained can never work again — exit so the
+                            # run can finish even if every other worker
+                            # is already gone.
+                            return
+                        cond.wait(0.05)
+                    if stop.is_set():
+                        return
+                    gen = coord.preempt_gen[w]
+                    x_snap = coord.x.copy()
+                    launch_wu = coord.wu
+                    bid, idx = coord.next_dispatch(w)
+                    prof = coord.fault_for(w)
+                    if coord.tracer is not None:
+                        coord.tracer.dispatch(elapsed(), w, bid, gen)
+                vals = worker_eval(problem, cfg, x_snap, idx)
+                if cfg.async_overhead > 0.0:
+                    time.sleep(cfg.async_overhead)
+                delay = prof.sample_delay(rng)
+                if delay > 0.0:
+                    time.sleep(delay)
+                if prof.sample_crash(rng):
+                    with cond, coord.busy():
+                        if stop.is_set():
+                            return
+                        if gen != coord.preempt_gen[w]:
+                            coord.preempt_discards += 1
+                            if coord.tracer is not None:
+                                coord.tracer.arrival(elapsed(), w,
+                                                     "preempt_discard",
+                                                     gen=gen)
+                            continue  # park at loop top until join
+                        coord.crashes += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w, "crash",
+                                                 gen=gen)
+                        if coord.arrival_tick(elapsed()):
+                            stop.set()
+                            cond.notify_all()
+                    if prof.restart_after is None or stop.is_set():
+                        return  # permanent crash (or run over): thread exits
+                    time.sleep(prof.restart_after)
+                    with cond:
+                        if stop.is_set():
+                            return
+                        if gen == coord.preempt_gen[w]:
+                            # Downtime ended inside the same incarnation:
+                            # the restart rejoins (downtime-end convention).
+                            coord.restarts += 1
+                            if coord.tracer is not None:
+                                coord.tracer.restart(elapsed(), w)
+                    continue
+                with cond, coord.busy():
+                    if stop.is_set():
+                        return
+                    if gen != coord.preempt_gen[w]:
+                        coord.preempt_discards += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w,
+                                                 "preempt_discard", gen=gen)
+                        continue
+                    staleness = coord.wu - launch_wu
+                    applied = coord.apply_return(
+                        idx, vals, prof, staleness=staleness, worker=w
+                    )
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(
+                            elapsed(), w,
+                            "applied" if applied else "filtered", staleness,
+                            gen=gen)
+                    if applied:
+                        state["since_fire"] += 1
+                        if (coord.accel is not None
+                                and state["since_fire"] >= cfg.fire_every):
+                            coord.maybe_fire_accel()
+                            state["since_fire"] = 0
+                    if coord.arrival_tick(elapsed()):
+                        stop.set()
+                        cond.notify_all()
+
+        threads = [
+            threading.Thread(target=worker_loop, args=(w,), daemon=True,
+                             name=f"fp-worker-{w}")
+            for w in range(cfg.n_workers)
+        ]
+        driver = threading.Thread(target=chaos_driver, daemon=True,
+                                  name="fp-chaos-driver")
+        for th in threads:
+            th.start()
+        driver.start()
+        for th in threads:
+            th.join()
+        stop.set()
+        driver.join(timeout=5.0)
         t = elapsed()
         with lock:
             coord.record(t)
@@ -275,7 +501,9 @@ class ThreadPoolExecutor(Executor):
                         return
                     x_snap = coord.x.copy()
                     launch_wu = coord.wu
-                    idx = coord.select_indices(w)
+                    bid, idx = coord.next_dispatch(w)
+                    if coord.tracer is not None:
+                        coord.tracer.dispatch(elapsed(), w, bid)
                 vals = worker_eval(problem, cfg, x_snap, idx)
                 if cfg.async_overhead > 0.0:
                     time.sleep(cfg.async_overhead)
@@ -285,6 +513,8 @@ class ThreadPoolExecutor(Executor):
                 if prof.sample_crash(rng):
                     with lock, coord.busy():
                         coord.crashes += 1
+                        if coord.tracer is not None:
+                            coord.tracer.arrival(elapsed(), w, "crash")
                         tick_stop, record_due = coord.arrival_tick_offload(
                             elapsed())
                         if record_due and state["rec_plan"] is None:
@@ -297,14 +527,23 @@ class ThreadPoolExecutor(Executor):
                         return
                     time.sleep(prof.restart_after)
                     with lock:
+                        if stop.is_set():
+                            return  # run ended mid-downtime: never rejoined
                         coord.restarts += 1
+                        if coord.tracer is not None:
+                            coord.tracer.restart(elapsed(), w)
                     continue
                 with lock, coord.busy():
                     if stop.is_set():
                         return
+                    staleness = coord.wu - launch_wu
                     applied = coord.apply_return(
-                        idx, vals, prof, staleness=coord.wu - launch_wu
+                        idx, vals, prof, staleness=staleness, worker=w
                     )
+                    if coord.tracer is not None:
+                        coord.tracer.arrival(
+                            elapsed(), w,
+                            "applied" if applied else "filtered", staleness)
                     if applied:
                         state["since_fire"] += 1
                         if (coord.accel is not None

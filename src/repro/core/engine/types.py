@@ -8,7 +8,8 @@ process, and Ray backends (``cfg.executor`` selects which — see
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -29,9 +30,10 @@ class FaultProfile:
     ``restart_after`` seconds (``None`` means it never comes back).  Every
     backend honours the same semantics; the virtual-time backend charges
     virtual seconds for delays and downtime, the thread/process/ray
-    backends sleep through real ones.  (One accounting nuance: the process
-    backend counts a restart when the crash arrives, the others when the
-    downtime ends — see the process module docstring.)
+    backends sleep through real ones.  ``RunResult.restarts`` counts a
+    restart when the downtime *ends* on every backend, so a run that stops
+    while a worker is still down never reports a restart that did not
+    rejoin.
     """
 
     delay_mean: float = 0.0  # seconds added per update (virtual or real)
@@ -116,6 +118,20 @@ class RunConfig:
     async_overhead: float = 0.0  # per-dispatch cost in async mode
     faults: Union[None, FaultProfile, Dict[int, FaultProfile]] = None
     converge_on: str = "residual"  # "residual" | "error"
+    # --- chaos scenarios (repro.chaos) ------------------------------------ #
+    # A FaultScenario of timestamped events (set_profile / preempt / join /
+    # pause / resume and delay-trace segments) interpreted against virtual
+    # time on the virtual backend and wall time on thread/process/ray, so
+    # one script means the same thing everywhere.  Preempted workers'
+    # blocks are reassigned to the least-loaded survivors (elastic
+    # membership) and handed back on join.  Requires selection="fixed" and
+    # accel_eval="coordinator"; None keeps every default loop untouched.
+    scenario: Optional[object] = None  # repro.chaos.FaultScenario
+    # Record the run's event trace (dispatches, arrivals + dispositions,
+    # crashes, fires, records, offloads) into RunResult.trace for
+    # deterministic postmortem replay (repro.chaos.replay_trace).  Async
+    # mode with selection="fixed" only.
+    capture_trace: bool = False
 
 
 @dataclass
@@ -150,6 +166,66 @@ class RunResult:
     # inline — the coordinator blocks arrivals for the whole window).
     fire_window_s: float = 0.0
     fire_window_arrivals: int = 0
+    # --- elastic membership (repro.chaos scenarios) ----------------------- #
+    preemptions: int = 0  # workers removed from the membership by a scenario
+    joins: int = 0  # workers that (re)joined the membership
+    reassigned_blocks: int = 0  # block moves across preempt/join events
+    preempt_discards: int = 0  # in-flight results discarded by a preemption
+    # Fraction of applied worker updates each worker served (sums to ~1.0
+    # over the workers that applied anything; static membership gives each
+    # worker ~1/p).
+    service_fractions: Dict[int, float] = field(default_factory=dict)
+    # --- trace capture (cfg.capture_trace) -------------------------------- #
+    trace: Optional[object] = None  # repro.chaos.RunTrace
+
+    # ------------------------------------------------------------------ #
+    def to_dict(self, include_history: bool = True,
+                include_x: bool = False) -> dict:
+        """JSON-safe dict of this result (the one benchmark row schema).
+
+        ``x`` is omitted unless ``include_x`` (it is O(n)); the trace, when
+        present, serializes through its own ``to_dict``.  Round-trips
+        through :meth:`from_dict`.
+        """
+        out: dict = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "x":
+                if include_x:
+                    out["x"] = np.asarray(v, dtype=np.float64).tolist()
+            elif f.name == "history":
+                if include_history:
+                    out["history"] = [[float(t), int(wu), float(r)]
+                                      for t, wu, r in v]
+            elif f.name == "trace":
+                if v is not None:
+                    out["trace"] = v.to_dict() if hasattr(v, "to_dict") else v
+            elif f.name == "service_fractions":
+                out["service_fractions"] = {
+                    str(k): float(sv) for k, sv in (v or {}).items()}
+            elif f.name == "error_norm":
+                out["error_norm"] = None if v is None else float(v)
+            elif isinstance(v, (bool, int, str)) or v is None:
+                out[f.name] = v
+            else:
+                out[f.name] = float(v)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunResult":
+        """Rebuild a result from :meth:`to_dict` output (e.g. parsed from a
+        committed benchmark JSON).  Absent optional payloads come back
+        empty: ``x`` as a zero-length array, ``history`` as ``[]``, the
+        trace as the raw dict it was serialized to."""
+        kw = dict(d)
+        kw["x"] = np.asarray(kw.pop("x", []), dtype=np.float64)
+        kw["history"] = [(float(t), int(wu), float(r))
+                         for t, wu, r in kw.pop("history", [])]
+        kw["service_fractions"] = {
+            int(k): float(v)
+            for k, v in (kw.pop("service_fractions", {}) or {}).items()}
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in kw.items() if k in known})
 
     def summary(self) -> str:
         return (

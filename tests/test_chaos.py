@@ -1,0 +1,603 @@
+"""Chaos subsystem: scenario scripts, elastic membership, trace replay.
+
+Covers the acceptance contract of the chaos PR:
+
+- scenario-script grammar, segment builders, clock ordering, round trips;
+- coordinator elastic membership (preempt reassigns to least-loaded
+  survivors, join hands home blocks back, orphan handling, service
+  fractions, the Anderson reassignment-window guard);
+- the virtual-backend golden contract: a scripted preempt/join Jacobi run
+  is bit-reproducible for a fixed seed (checked across several seeds) and
+  converges with the same tolerance as the static-membership run;
+- chaos on the real thread and process backends;
+- the unified downtime-end restart accounting (all backends);
+- trace capture + deterministic replay (bit-exact on virtual and thread)
+  and the RunResult/RunTrace JSON round trips.
+"""
+
+import hashlib
+import json
+
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    FaultScenario,
+    RunTrace,
+    ScenarioClock,
+    get_scenario,
+    replay_trace,
+    scenario_library,
+    trace_agreement,
+)
+from repro.core import FaultProfile, RunConfig, RunResult, run_fixed_point
+from repro.core.engine.coordinator import Coordinator
+from repro.problems import JacobiProblem
+from conftest import ToyContraction
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+def _jac():
+    return JacobiProblem(grid=8, sweeps=5, seed=0)
+
+
+# --------------------------------------------------------------------- #
+class TestScenarioScript:
+    def test_builders_chain_and_sort(self):
+        s = (FaultScenario("t")
+             .preempt(0.5, 1)
+             .set_profile(0.1, FaultProfile(delay_mean=0.2), worker=0)
+             .join(0.9, 1)
+             .pause(0.3).resume(0.4))
+        ts = [ev.t for ev in s.sorted_events()]
+        assert ts == sorted(ts)
+        assert [ev.kind for ev in s.sorted_events()] == [
+            "set_profile", "pause", "resume", "preempt", "join"]
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown scenario event"):
+            FaultScenario().at(0.0, "explode", 0)
+
+    def test_validate_catches_bad_events(self):
+        with pytest.raises(ValueError, match="out of range"):
+            FaultScenario().preempt(0.1, 7).validate(4)
+        with pytest.raises(ValueError, match="negative"):
+            FaultScenario().preempt(-1.0, 0).validate(4)
+        with pytest.raises(ValueError, match="explicit worker"):
+            FaultScenario().at(0.1, "preempt").validate(4)
+        with pytest.raises(ValueError, match="FaultProfile"):
+            FaultScenario().at(0.1, "set_profile", 0).validate(4)
+
+    def test_bimodal_segment_alternates(self):
+        s = FaultScenario().bimodal_delay(
+            0.0, 1.0, 0.25, FaultProfile(delay_mean=0.1), worker=0)
+        delays = [ev.profile.delay_mean for ev in s.sorted_events()]
+        assert delays[:4] == [0.1, 0.0, 0.1, 0.0]
+        assert delays[-1] == 0.0  # closes on the fast profile
+
+    def test_ramp_segment_endpoints(self):
+        s = FaultScenario().ramp_delay(0.0, 1.0, 0.0, 0.1, steps=4, worker=2)
+        evs = s.sorted_events()
+        assert len(evs) == 5
+        assert evs[0].profile.delay_mean == 0.0
+        assert evs[-1].profile.delay_mean == pytest.approx(0.1)
+
+    def test_scaled_preserves_structure(self):
+        s = get_scenario("spot_wave", 4).scaled(0.5)
+        orig = get_scenario("spot_wave", 4)
+        assert len(s.events) == len(orig.events)
+        for a, b in zip(s.sorted_events(), orig.sorted_events()):
+            assert a.t == pytest.approx(b.t * 0.5)
+            assert a.kind == b.kind
+
+    def test_json_round_trip(self):
+        s = get_scenario("rolling_restart", 4)
+        rt = FaultScenario.from_dict(json.loads(json.dumps(s.to_dict())))
+        assert [ev.to_dict() for ev in rt.events] == [
+            ev.to_dict() for ev in s.events]
+
+    def test_clock_due_and_drain(self):
+        s = FaultScenario().preempt(0.2, 0).join(0.6, 0).preempt(0.6, 1)
+        clock = ScenarioClock(s)
+        assert clock.next_time() == pytest.approx(0.2)
+        assert [ev.kind for ev in clock.due(0.3)] == ["preempt"]
+        assert not clock.exhausted
+        rest = clock.drain()
+        assert [ev.kind for ev in rest] == ["join", "preempt"]
+        assert clock.exhausted and clock.next_time() is None
+
+    def test_library_registry(self):
+        lib = scenario_library()
+        assert set(lib) == {"spot_wave", "rolling_restart",
+                            "bimodal_stragglers", "flash_crowd"}
+        for name, desc in lib.items():
+            assert desc  # human-readable description per entry
+            get_scenario(name, 4).validate(4)
+        with pytest.raises(ValueError, match="unknown scenario"):
+            get_scenario("nope", 4)
+
+
+# --------------------------------------------------------------------- #
+class TestElasticMembership:
+    def _coord(self, p=4):
+        return Coordinator(_jac(), RunConfig(
+            mode="async", n_workers=p, compute_time=1e-3))
+
+    def test_preempt_rebalances_to_least_loaded(self):
+        c = self._coord()
+        assert c.preempt_worker(1) == 1
+        # block 1 went to exactly one survivor, least-loaded first
+        assert c.block_owner[1] in {0, 2, 3}
+        holder = c.block_owner[1]
+        assert sorted(c.worker_blocks[holder]) == sorted({holder, 1})
+        assert c.preemptions == 1 and c.reassigned_blocks == 1
+        # second preemption spreads: the double-loaded worker is skipped
+        c.preempt_worker(holder)
+        assert c.reassigned_blocks == 3
+        sizes = [len(c.worker_blocks[w]) for w in sorted(c.active)]
+        assert sorted(sizes) == [2, 2]
+
+    def test_join_hands_home_block_back(self):
+        c = self._coord()
+        c.preempt_worker(2)
+        holder = c.block_owner[2]
+        assert c.join_worker(2) == 1
+        assert c.block_owner[2] == 2
+        assert 2 in c.worker_blocks[2]
+        assert 2 not in c.worker_blocks[holder]
+        assert c.joins == 1
+        # idempotent: joining an active worker is a no-op
+        assert c.join_worker(2) == 0 and c.joins == 1
+
+    def test_all_preempted_orphans_then_join_recovers(self):
+        c = self._coord(p=2)
+        c.preempt_worker(0)
+        c.preempt_worker(1)
+        assert not c.active
+        assert sorted(c._orphan_blocks + c.worker_blocks.get(1, [])) or True
+        c.join_worker(0)
+        # worker 0 got every block back (orphans + home)
+        assert sorted(c.worker_blocks[0]) == [0, 1]
+        assert c.block_owner == {0: 0, 1: 0}
+
+    def test_dispatch_walks_assignment_round_robin(self):
+        c = self._coord()
+        c.preempt_worker(1)
+        holder = c.block_owner[1]
+        bids = [c.next_dispatch(holder)[0] for _ in range(4)]
+        assert set(bids) == {holder, 1}  # alternates over both blocks
+        assert bids[:2] != bids[1:3] or bids[0] != bids[1]
+
+    def test_round_assignment_concatenates(self):
+        c = self._coord()
+        c.preempt_worker(1)
+        holder = c.block_owner[1]
+        idx = c.round_assignment(holder)
+        expect = np.concatenate(
+            [c.blocks[b] for b in c.worker_blocks[holder]])
+        np.testing.assert_array_equal(idx, expect)
+        # single-block workers return the memoized block object itself
+        other = next(w for w in sorted(c.active) if w != holder)
+        assert c.round_assignment(other) is c.blocks[other]
+
+    def test_service_fractions_in_result(self):
+        c = self._coord(p=2)
+        prof = FaultProfile()
+        for _ in range(3):
+            c.apply_return(c.blocks[0], np.zeros(len(c.blocks[0])), prof,
+                           staleness=0, worker=0)
+        c.apply_return(c.blocks[1], np.zeros(len(c.blocks[1])), prof,
+                       staleness=0, worker=1)
+        r = c.result(1.0, 4, False)
+        assert r.service_fractions == {0: 0.75, 1: 0.25}
+
+    def test_fire_across_membership_change_is_discarded(self):
+        """The Anderson staleness guard extends to reassignment windows:
+        a fire opened before a preempt/join must not commit."""
+        from repro.core import AndersonConfig
+
+        prob = _jac()
+        c = Coordinator(prob, RunConfig(
+            mode="async", n_workers=4, compute_time=1e-3,
+            accel=AndersonConfig(m=3)))
+        plan = c.accel_begin()
+        assert plan is not None
+        c.preempt_worker(3)  # membership changes mid-flight
+        item = plan.next_item()
+        while item is not None:
+            c.accel_feed(plan, c.eval_item(item))
+            item = plan.next_item()
+        assert c.accel_commit(plan) == "discard"
+        assert c.accel_discards == 1
+
+    def test_scenario_validation_in_coordinator(self):
+        scn = FaultScenario().preempt(0.1, 0)
+        with pytest.raises(ValueError, match="selection='fixed'"):
+            Coordinator(_jac(), RunConfig(
+                mode="async", selection="uniform", scenario=scn))
+        with pytest.raises(ValueError, match="accel_eval='coordinator'"):
+            Coordinator(_jac(), RunConfig(
+                mode="async", accel_eval="worker", scenario=scn))
+        with pytest.raises(ValueError, match="out of range"):
+            Coordinator(_jac(), RunConfig(
+                mode="async", n_workers=2,
+                scenario=FaultScenario().preempt(0.1, 5)))
+
+
+# --------------------------------------------------------------------- #
+class TestVirtualChaos:
+    """The elastic-membership golden contract on the virtual backend."""
+
+    def _scn(self):
+        return (FaultScenario("preempt_join")
+                .preempt(0.02, 1)
+                .preempt(0.03, 2)
+                .join(0.08, 1)
+                .join(0.09, 2))
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_scripted_run_bit_reproducible(self, seed):
+        cfg = dict(mode="async", tol=1e-6, max_updates=10**5,
+                   compute_time=1e-3, seed=seed)
+        r1 = run_fixed_point(_jac(), RunConfig(scenario=self._scn(), **cfg))
+        r2 = run_fixed_point(_jac(), RunConfig(scenario=self._scn(), **cfg))
+        assert r1.converged and r2.converged
+        assert r1.worker_updates == r2.worker_updates
+        assert r1.wall_time == r2.wall_time
+        assert _sha(r1.x) == _sha(r2.x)
+        assert r1.preemptions == 2 and r1.joins == 2
+        assert r1.reassigned_blocks == 4
+        # and it converges to the same tolerance as the static run
+        rs = run_fixed_point(_jac(), RunConfig(**cfg))
+        prob = _jac()
+        assert prob.residual_norm(r1.x) < 1e-6
+        assert prob.residual_norm(rs.x) < 1e-6
+
+    def test_scenario_free_default_path_untouched(self):
+        """A config without scenario/capture must take the golden default
+        loop — same bytes as before this subsystem existed (the full
+        contract is tests/test_hotpath_goldens.py; this is the cheap
+        canary)."""
+        cfg = dict(mode="async", tol=1e-10, max_updates=2000,
+                   compute_time=1e-3, seed=3)
+        a = run_fixed_point(ToyContraction(), RunConfig(**cfg))
+        b = run_fixed_point(ToyContraction(), RunConfig(**cfg))
+        assert _sha(a.x) == _sha(b.x) and a.wall_time == b.wall_time
+        assert a.preemptions == a.joins == a.reassigned_blocks == 0
+
+    def test_spot_wave_metrics(self):
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=get_scenario("spot_wave", 4).scaled(0.05)))
+        assert r.converged
+        assert r.preemptions == 2 and r.joins == 2
+        assert r.reassigned_blocks == 4
+        assert r.preempt_discards == 2  # both had a result in flight
+        assert abs(sum(r.service_fractions.values()) - 1.0) < 1e-9
+        # the straggling survivor served almost nothing
+        assert r.service_fractions[0] < 0.1
+
+    def test_flash_crowd_solo_start(self):
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=1, scenario=get_scenario("flash_crowd", 4)))
+        assert r.converged
+        assert r.joins == 3  # the crowd arrived
+        # worker 0 carried the solo phase: it served more than 1/4
+        assert r.service_fractions[0] > 0.0
+
+    def test_pause_resume(self):
+        scn = (FaultScenario("nap").pause(0.02).resume(0.06))
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.preemptions == 0  # pause is not a preemption
+        # the global pause leaves a gap >= the pause window in the history
+        gaps = [t2 - t1 for (t1, _, _), (t2, _, _)
+                in zip(r.history, r.history[1:])]
+        assert max(gaps) >= 0.04 - 1e-9
+
+    def test_pause_before_first_dispatch_then_resume(self):
+        """Regression: a worker paused at t=0 (before its first dispatch)
+        must still be revived by resume — it was never launched, so it is
+        not in flight anywhere, and the resume handler must dispatch it."""
+        scn = FaultScenario("latestart").pause(0.0).resume(0.05)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.worker_updates > 0
+        assert len(r.service_fractions) == 4  # the whole fleet worked
+
+    def test_pause_all_forever_terminates(self):
+        scn = FaultScenario("stall").pause(0.005)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-12, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=scn))
+        assert not r.converged  # ran out of work, not forever
+
+    def test_sync_scenario(self):
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="sync", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=get_scenario("spot_wave", 4).scaled(0.05)))
+        assert r.converged
+        assert r.preemptions == 2 and r.joins == 2
+
+    def test_stale_restart_event_never_double_dispatches(self):
+        """Regression: a worker that crashes (long downtime), is preempted
+        mid-downtime and rejoins via the script must come back as ONE
+        dispatch stream — the dead incarnation's restart event is dropped,
+        not turned into a second concurrent launch."""
+        scn = FaultScenario("dup").preempt(0.5, 0).join(0.8, 0)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=0.0, max_updates=4000, compute_time=1e-3,
+            seed=0, scenario=scn,
+            faults={0: FaultProfile(crash_prob=0.05, restart_after=2.0)}))
+        # with a doubled stream worker 0 exceeds its 1/p fair share even
+        # though it spent 2s of downtime; fixed it stays well below
+        assert r.service_fractions[0] <= 0.26
+        assert r.restarts == 0  # the dead incarnation never rejoined
+
+    def test_time_varying_profile_changes_dynamics(self):
+        slow = (FaultScenario("ramp")
+                .ramp_delay(0.0, 0.2, 0.0, 0.05, steps=4, worker=0))
+        base = dict(mode="async", tol=1e-6, max_updates=10**5,
+                    compute_time=1e-3, seed=0)
+        r_slow = run_fixed_point(_jac(), RunConfig(scenario=slow, **base))
+        r_fast = run_fixed_point(_jac(), RunConfig(**base))
+        assert r_slow.converged and r_fast.converged
+        assert r_slow.wall_time > r_fast.wall_time  # the ramp cost time
+
+
+# --------------------------------------------------------------------- #
+class TestRealBackendChaos:
+    def test_thread_spot_wave(self):
+        scn = get_scenario("spot_wave", 4, t0=0.1, downtime=0.3,
+                           stagger=0.02, slow=0.02)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="thread", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.preemptions == 2 and r.joins == 2
+        assert r.reassigned_blocks == 4
+
+    def test_thread_flash_crowd(self):
+        scn = get_scenario("flash_crowd", 4, join_at=0.15, stagger=0.02,
+                           ramp_from=0.01)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="thread", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.joins == 3
+
+    def test_thread_sync_scenario(self):
+        scn = get_scenario("spot_wave", 4, t0=0.05, downtime=0.2,
+                           stagger=0.02, slow=0.02)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="sync", executor="thread", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.preemptions == 2
+
+    def test_thread_pause_forever_with_dead_fleet_terminates(self):
+        """Regression: a worker paused with no scripted resume while every
+        other worker permanently crashes must not hang the run — once the
+        script is drained an undispatchable worker can never work again,
+        so its thread exits."""
+        scn = FaultScenario("stuck").pause(0.0, worker=3)
+        faults = {w: FaultProfile(crash_prob=1.0) for w in range(3)}
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="thread", tol=1e-10, max_updates=100,
+            seed=0, scenario=scn, faults=faults))
+        assert not r.converged
+        assert r.crashes == 3
+
+    def test_process_pause_before_first_dispatch_then_resume(self):
+        """Regression: the process parent must park (and later dispatch)
+        workers that were paused before their initial dispatch."""
+        scn = FaultScenario("latestart").pause(0.0).resume(0.1)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="process", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.worker_updates > 0
+
+    def test_process_t0_preempt_join_single_stream(self):
+        """Regression: a join due at t=0 dispatches during event
+        application — the initial dispatch loop must not dispatch the same
+        worker a second time (double streams corrupt the shared result
+        slot on the process backend)."""
+        scn = FaultScenario("t0").preempt(0.0, 1).join(0.0, 1)
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="process", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.preemptions == 1 and r.joins == 1
+        assert r.preempt_discards == 0  # nothing was in flight at t=0
+
+    def test_process_preempt_join(self):
+        scn = (FaultScenario("pj")
+               .preempt(0.15, 1)
+               .set_profile(0.15, FaultProfile(delay_mean=0.01), worker=0)
+               .join(0.5, 1))
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="process", tol=1e-6, max_updates=10**5,
+            seed=0, scenario=scn))
+        assert r.converged
+        assert r.preemptions == 1
+        assert r.reassigned_blocks >= 1
+
+
+# --------------------------------------------------------------------- #
+class TestRestartAccounting:
+    """Satellite: the downtime-end restart convention on every backend."""
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
+    def test_stop_mid_downtime_counts_no_restart(self, executor):
+        """Every worker crashes on its first return and the run stops at
+        the arrival cap while all downtimes are still pending: no backend
+        may report a restart that never rejoined (the process backend used
+        to count them at crash arrival)."""
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(ToyContraction(), RunConfig(
+            mode="async", executor=executor, tol=1e-12, max_updates=50,
+            max_arrivals=4, seed=0,
+            faults=FaultProfile(crash_prob=1.0, restart_after=0.5), **kw))
+        assert r.crashes == 4
+        assert r.restarts == 0
+        assert r.worker_updates == 0
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
+    def test_completed_downtime_still_counts(self, executor):
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(ToyContraction(), RunConfig(
+            mode="async", executor=executor, tol=1e-8, max_updates=50000,
+            seed=0,
+            faults={0: FaultProfile(crash_prob=0.3, restart_after=0.001)},
+            **kw))
+        assert r.converged
+        assert r.crashes > 0
+        assert 0 < r.restarts <= r.crashes
+
+
+# --------------------------------------------------------------------- #
+class TestTraceReplay:
+    def _capture_cfg(self, executor, scenario=None, **kw):
+        return RunConfig(mode="async", executor=executor, tol=1e-6,
+                         max_updates=10**5, seed=0, capture_trace=True,
+                         scenario=scenario, **kw)
+
+    def test_virtual_capture_replays_bit_exact(self):
+        from repro.core import AndersonConfig
+
+        cfg = self._capture_cfg(
+            "virtual", get_scenario("spot_wave", 4).scaled(0.05),
+            compute_time=1e-3, accel=AndersonConfig(m=3), fire_every=4)
+        r = run_fixed_point(_jac(), cfg)
+        assert r.converged and r.trace is not None
+        counts = r.trace.counts()
+        assert counts["arrival"] > 0 and counts["record"] > 0
+        # the run may converge before the tail of the script fires, but
+        # the wave's preempts and the profile change must be in the trace
+        assert counts["scenario"] >= 3 and counts["fire"] > 0
+        rep = replay_trace(_jac(), r.trace, cfg)
+        ag = trace_agreement(r, rep)
+        assert ag["records_compared"] == len(r.history)
+        assert ag["mean_abs_log10_ratio"] == 0.0
+        np.testing.assert_array_equal(r.x, rep.x)
+        # replay reproduces the membership accounting too
+        assert rep.preemptions == r.preemptions
+        assert rep.preempt_discards == r.preempt_discards
+
+    def test_thread_capture_replays_bit_exact(self):
+        cfg = self._capture_cfg("thread")
+        r = run_fixed_point(_jac(), cfg)
+        assert r.converged and r.trace is not None
+        assert r.trace.meta["backend"] == "thread"
+        rep = replay_trace(_jac(), r.trace, cfg)
+        ag = trace_agreement(r, rep)
+        assert ag["mean_abs_log10_ratio"] == 0.0
+        assert ag["final_ratio"] == pytest.approx(1.0)
+        np.testing.assert_array_equal(r.x, rep.x)
+
+    def test_trace_json_round_trip(self):
+        cfg = self._capture_cfg("virtual", compute_time=1e-3)
+        r = run_fixed_point(_jac(), cfg)
+        rt = RunTrace.from_json(r.trace.to_json())
+        assert rt.meta == r.trace.meta
+        assert rt.events == r.trace.events
+        rep = replay_trace(_jac(), rt, cfg)
+        np.testing.assert_array_equal(r.x, rep.x)
+
+    def test_trace_version_guard(self):
+        with pytest.raises(ValueError, match="version"):
+            RunTrace.from_dict({"version": 999, "meta": {}, "events": []})
+
+    def test_sync_capture_rejected(self):
+        tr = RunTrace(meta={"mode": "sync"}, events=[])
+        with pytest.raises(ValueError, match="async"):
+            replay_trace(_jac(), tr, RunConfig())
+
+    def test_sync_capture_rejected_loudly(self):
+        with pytest.raises(ValueError, match="async"):
+            run_fixed_point(_jac(), RunConfig(mode="sync",
+                                              capture_trace=True,
+                                              compute_time=1e-3))
+
+    def test_replay_exact_when_join_races_inflight_result(self):
+        """Regression: preempt + join while the old incarnation's result
+        is still in flight — the fresh dispatch and the doomed result
+        coexist, and replay must match each arrival to its own dispatch
+        (incarnation-keyed), not drop the rejoined worker's first update."""
+        scn = (FaultScenario("race")
+               .set_profile(0.0, FaultProfile(delay_mean=0.05), worker=1)
+               .preempt(0.02, 1)
+               .join(0.025, 1))
+        cfg = self._capture_cfg("virtual", scn, compute_time=1e-3)
+        r = run_fixed_point(_jac(), cfg)
+        assert r.preempt_discards == 1  # the race actually happened
+        rep = replay_trace(_jac(), r.trace, cfg)
+        assert rep.worker_updates == r.worker_updates
+        assert trace_agreement(r, rep)["mean_abs_log10_ratio"] == 0.0
+        np.testing.assert_array_equal(r.x, rep.x)
+
+    def test_filtered_dispositions_replay(self):
+        """Drops are recorded as dispositions, so a lossy run replays its
+        exact applied-update sequence without consuming any rng."""
+        cfg = self._capture_cfg("virtual", compute_time=1e-3,
+                                faults=FaultProfile(drop_prob=0.3))
+        r = run_fixed_point(_jac(), cfg)
+        assert r.drops > 0
+        rep = replay_trace(_jac(), r.trace, cfg)
+        assert rep.drops == r.drops
+        np.testing.assert_array_equal(r.x, rep.x)
+
+
+# --------------------------------------------------------------------- #
+class TestRunResultRoundTrip:
+    """Satellite: RunResult.to_dict()/from_dict() JSON round trip."""
+
+    def test_round_trip_preserves_fields(self):
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=get_scenario("spot_wave", 4).scaled(0.05)))
+        d = json.loads(json.dumps(r.to_dict()))  # through real JSON
+        back = RunResult.from_dict(d)
+        for name in ("converged", "worker_updates", "wall_time",
+                     "residual_norm", "rounds", "drops", "stale_drops",
+                     "accel_fires", "crashes", "restarts", "preemptions",
+                     "joins", "reassigned_blocks", "preempt_discards",
+                     "mean_staleness", "error_norm", "coordinator_busy_frac"):
+            assert getattr(back, name) == getattr(r, name), name
+        assert back.service_fractions == r.service_fractions
+        assert back.history == r.history
+        assert back.x.size == 0  # x is omitted by default
+
+    def test_include_x_round_trips_the_iterate(self):
+        r = run_fixed_point(ToyContraction(), RunConfig(
+            mode="async", tol=1e-8, max_updates=5000, compute_time=1e-3))
+        d = json.loads(json.dumps(r.to_dict(include_x=True)))
+        back = RunResult.from_dict(d)
+        np.testing.assert_allclose(back.x, r.x)
+
+    def test_trace_serializes_through_to_dict(self):
+        cfg = RunConfig(mode="async", tol=1e-6, max_updates=10**5,
+                        compute_time=1e-3, capture_trace=True)
+        r = run_fixed_point(_jac(), cfg)
+        d = json.loads(json.dumps(r.to_dict()))
+        assert d["trace"]["meta"]["backend"] == "virtual"
+        back = RunResult.from_dict(d)
+        rt = RunTrace.from_dict(back.trace)
+        rep = replay_trace(_jac(), rt, cfg)
+        np.testing.assert_array_equal(r.x, rep.x)
+
+    def test_unknown_keys_ignored(self):
+        r = run_fixed_point(ToyContraction(), RunConfig(
+            mode="async", tol=1e-8, max_updates=1000, compute_time=1e-3))
+        d = r.to_dict()
+        d["some_future_field"] = 42
+        RunResult.from_dict(d)  # must not raise

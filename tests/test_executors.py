@@ -357,6 +357,50 @@ class TestCrashChurn:
         assert r.crashes >= 500  # 10 * max_updates arrivals, all crashed
 
     @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
+    def test_drop_all_terminates_on_arrival_cap(self, executor):
+        """Liveness guard under drop_prob=1.0: every return is dropped, so
+        max_updates never advances — the run must stop at the max_arrivals
+        cap on every backend (not just implicitly on virtual)."""
+        p = ToyContraction()
+        faults = FaultProfile(drop_prob=1.0)
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=30,
+                                         faults=faults, **kw))
+        assert not r.converged
+        assert r.worker_updates == 0
+        assert r.drops == 300  # 10 * max_updates arrivals, all dropped
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
+    def test_drop_all_explicit_arrival_cap(self, executor):
+        """Same guard with an explicit (small) max_arrivals."""
+        p = ToyContraction()
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=10**6,
+                                         max_arrivals=12,
+                                         faults=FaultProfile(drop_prob=1.0),
+                                         **kw))
+        assert not r.converged
+        assert r.worker_updates == 0
+        assert r.drops == 12
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
+    def test_all_crash_explicit_arrival_cap(self, executor):
+        """All-crash churn against an explicit max_arrivals on the real
+        backends (the thread/process guard was previously only covered via
+        the 10x-max_updates default)."""
+        p = ToyContraction()
+        faults = FaultProfile(crash_prob=1.0, restart_after=0.001)
+        kw = {} if executor == "thread" else {"compute_time": 1e-3}
+        r = run_fixed_point(p, RunConfig(mode="async", executor=executor,
+                                         tol=1e-10, max_updates=10**6,
+                                         max_arrivals=8, faults=faults, **kw))
+        assert not r.converged
+        assert r.worker_updates == 0
+        assert r.crashes == 8
+
+    @pytest.mark.parametrize("executor", ["virtual", "thread", "process"])
     def test_sync_crash_restart(self, executor):
         p = ToyContraction()
         faults = {0: FaultProfile(crash_prob=0.3, restart_after=0.0)}

@@ -16,7 +16,14 @@ Fails when:
   sections;
 - ``BENCH_offload.json`` (the evaluation-pipeline offload trajectory,
   also rewritten by ``make perf``) is missing, lacks its gate spec, or
-  has a case without both placements' measurements and their ratio.
+  has a case without both placements' measurements and their ratio;
+- ``BENCH_chaos.json`` (the chaos-scenario benchmark, rewritten by
+  ``benchmarks/chaos_scenarios.py``) is missing, lacks its gate spec,
+  covers a different scenario set than the registered chaos library
+  (``repro.chaos.scenario_library()``), or has a scenario without
+  sync+async measurements on the virtual backend and a real backend;
+- the scenario table in README.md (after ``<!-- scenario-table -->``)
+  disagrees with the registered chaos library.
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
@@ -35,6 +42,7 @@ DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 TABLE_MARKER = "<!-- executor-table -->"
+SCENARIO_MARKER = "<!-- scenario-table -->"
 
 
 def _slug(heading: str) -> str:
@@ -130,22 +138,84 @@ def check_offload_trajectory(errors: list) -> None:
                 f"BENCH_offload.json: {name} missing ratio_arrivals_per_sec")
 
 
-def check_executor_table(errors: list) -> None:
-    sys.path.insert(0, str(ROOT / "src"))
-    from repro.core import known_executors
-
-    text = (ROOT / "README.md").read_text()
-    if TABLE_MARKER not in text:
-        errors.append(f"README.md: missing {TABLE_MARKER} marker")
-        return
+def _marker_table_names(text: str, marker: str) -> set:
+    """First-column backticked names of the table following ``marker``."""
     names = set()
-    for line in text.split(TABLE_MARKER, 1)[1].splitlines():
+    for line in text.split(marker, 1)[1].splitlines():
         line = line.strip()
         if names and not line.startswith("|"):
             break  # end of the table
         m = re.match(r"\|\s*`(\w+)`", line)
         if m:
             names.add(m.group(1))
+    return names
+
+
+def check_chaos_trajectory(errors: list) -> None:
+    """BENCH_chaos.json must exist, keep its shape, and cover exactly the
+    registered scenario library."""
+    from repro.chaos import scenario_library
+
+    path = ROOT / "BENCH_chaos.json"
+    if not path.exists():
+        errors.append("BENCH_chaos.json missing "
+                      "(run `python -m benchmarks.chaos_scenarios`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_chaos.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("scenario", "min_speedup"):
+        if key not in gate:
+            errors.append(f"BENCH_chaos.json: missing gate.{key}")
+    scenarios = data.get("scenarios", {})
+    library = set(scenario_library())
+    if set(scenarios) != library:
+        errors.append(
+            "BENCH_chaos.json scenarios do not match the registered chaos "
+            f"library: file={sorted(scenarios)} library={sorted(library)}")
+    for name, entry in scenarios.items():
+        if "virtual" not in entry:
+            errors.append(f"BENCH_chaos.json: {name} missing virtual rows")
+            continue
+        if not any(b in entry for b in ("thread", "process")):
+            errors.append(
+                f"BENCH_chaos.json: {name} has no real-backend rows")
+        for backend, rows in entry.items():
+            for mode in ("sync", "async"):
+                if mode not in rows:
+                    errors.append(
+                        f"BENCH_chaos.json: {name}.{backend} missing {mode}")
+            if "speedup" not in rows:
+                errors.append(
+                    f"BENCH_chaos.json: {name}.{backend} missing speedup")
+
+
+def check_scenario_table(errors: list) -> None:
+    from repro.chaos import scenario_library
+
+    text = (ROOT / "README.md").read_text()
+    if SCENARIO_MARKER not in text:
+        errors.append(f"README.md: missing {SCENARIO_MARKER} marker")
+        return
+    names = _marker_table_names(text, SCENARIO_MARKER)
+    library = set(scenario_library())
+    if names != library:
+        errors.append(
+            "README.md scenario table does not match the chaos library: "
+            f"table={sorted(names)} library={sorted(library)}")
+
+
+def check_executor_table(errors: list) -> None:
+    from repro.core import known_executors
+
+    text = (ROOT / "README.md").read_text()
+    if TABLE_MARKER not in text:
+        errors.append(f"README.md: missing {TABLE_MARKER} marker")
+        return
+    names = _marker_table_names(text, TABLE_MARKER)
     known = set(known_executors())
     if names != known:
         errors.append(
@@ -154,19 +224,23 @@ def check_executor_table(errors: list) -> None:
 
 
 def main() -> None:
+    sys.path.insert(0, str(ROOT / "src"))
     errors: list = []
     n_links = check_links(errors)
     check_executor_table(errors)
+    check_scenario_table(errors)
     check_bench_trajectory(errors)
     check_offload_trajectory(errors)
+    check_chaos_trajectory(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
             print(f"  - {e}")
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
-          "and anchors, executor table matches registry, BENCH_hotpath.json "
-          "and BENCH_offload.json schemas intact)")
+          "and anchors, executor + scenario tables match their registries, "
+          "BENCH_hotpath.json / BENCH_offload.json / BENCH_chaos.json "
+          "schemas intact)")
 
 
 if __name__ == "__main__":
