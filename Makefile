@@ -15,7 +15,17 @@
 #                     (benchmarks/accel_offload.py): worker-eval
 #                     arrivals/sec >= 1.5x coordinator-eval on the process
 #                     backend at Jacobi g=512.  Rewrites BENCH_offload.json.
+#                     Then the solver-service gate
+#                     (benchmarks/solver_serve.py): concurrent requests/sec
+#                     >= 1.5x the serialized baseline on the process
+#                     backend, with zero worker respawns across same-family
+#                     requests (shared warm pool).  Rewrites
+#                     BENCH_serve.json.
 #                     REPRO_PERF_SKIP_GATE=1 records without gating.
+# `make serve-smoke`— fast solver-service sanity (~10 s, virtual backend
+#                     only): multiplexed solves stay bit-identical to solo
+#                     runs and weighted-fair dispatch honors tenant weights
+#                     (benchmarks/solver_serve.py --smoke).
 # `make chaos-smoke`— fast chaos-scenario sanity: every scenario in the
 #                     registered library (spot_wave, rolling_restart,
 #                     bimodal_stragglers, flash_crowd) runs sync + async on
@@ -23,7 +33,8 @@
 #                     membership accounting (benchmarks/chaos_scenarios.py
 #                     --virtual-only; the measured real-backend sweep +
 #                     BENCH_chaos.json rewrite is `make chaos-bench`).
-# `make smoke`      — docs-check + perf gate + chaos-smoke + ~2 min
+# `make smoke`      — docs-check + perf gate + chaos-smoke + serve-smoke
+#                     + ~2 min
 #                     real-concurrency benchmark: sync-vs-async under a
 #                     100 ms straggler measured on the thread AND process
 #                     backends (asserts the paper's >1.5x async speedup
@@ -33,7 +44,7 @@
 
 PYTHON ?= python
 
-.PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench
+.PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -44,6 +55,10 @@ docs-check:
 perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.perf_hotpath --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.accel_offload --check
+	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --check
+
+serve-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --smoke
 
 chaos-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.chaos_scenarios --virtual-only
@@ -51,7 +66,7 @@ chaos-smoke:
 chaos-bench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.chaos_scenarios --check
 
-smoke: docs-check perf chaos-smoke
+smoke: docs-check perf chaos-smoke serve-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

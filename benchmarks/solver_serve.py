@@ -1,0 +1,343 @@
+"""Solver-as-a-service benchmark + regression gate (BENCH_serve.json).
+
+PR 6 turned the engine into reentrant sessions multiplexed by
+:class:`repro.serve.SolverService` over shared warm pools.  This benchmark
+measures what that buys and gates that it keeps working:
+
+- **requests/sec at p workers** — N fixed-work solve requests, serialized
+  (``max_active=1``) vs concurrent (``max_active=2``) on the process
+  backend with two payload families.  Requests carry the paper's
+  straggler profile (a real per-update worker sleep), so their wall time
+  is wait-dominated: the concurrency win is the service overlapping that
+  wait across sessions, which holds on any core count;
+- **cold-vs-warm latency** — the first request of a family pays the pool
+  boot (spawned interpreters + jit warm-up); later requests ride the warm
+  pool.  Both tails are reported per family;
+- **warm-pool sharing** — concurrent same-family requests must hold
+  refcounted leases on ONE pool (pids stable across every phase: zero
+  worker respawns);
+- **fairness under mixed-tenant load** — a weight-3 and a weight-1 tenant
+  submit together on the virtual backend; start-time fair queuing must
+  dispatch ~3:1 in their favor over the contended prefix.
+
+``--check`` (the ``make perf`` gate) asserts on the process case:
+concurrent throughput >= 1.5x the serialized baseline (two 1-worker
+families genuinely overlap), and zero respawns with the same-family
+concurrent pair sharing one pool.  The ratio compares back-to-back runs
+on the same warm pools, so it is machine-insensitive;
+``REPRO_PERF_SKIP_GATE=1`` skips it for pathological environments.
+``--smoke`` (wired into ``make serve-smoke`` / ``make smoke``) is the
+virtual-only ~10 s sanity slice: service results bit-match solo runs and
+the fairness prefix holds, nothing persisted.
+
+Run:  PYTHONPATH=src python -m benchmarks.solver_serve [--check|--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    FaultProfile,
+    RunConfig,
+    pool_stats,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.problems import JacobiProblem
+from repro.serve import ServiceConfig, SolverService
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_serve.json"
+
+#: concurrent over serialized requests/sec on the gate case
+GATE_RATIO = 1.5
+GATE_CASE = "process/two_family_p1"
+
+#: process case geometry: two payload families (seed-varied Jacobi), one
+#: worker per solve, fixed work per request (tol=0 -> exactly max_updates),
+#: and a realistic straggler profile (the paper's regime): each update
+#: sleeps DELAY_S in the worker, so a request's wall time is wait-
+#: dominated and two in-flight requests overlap even on a 1-core box —
+#: the service's win is overlapping wait, which is machine-insensitive
+#: (on multi-core boxes the compute overlaps too).
+GRID, SWEEPS, MAX_UPDATES, REQUESTS = 64, 5, 40, 4
+DELAY_S = 5e-3
+
+
+def _families():
+    # numpy kernels: tiny single-threaded updates keep the CPU mostly idle
+    # so the straggler sleeps dominate each request's wall time.
+    return [JacobiProblem(grid=GRID, sweeps=SWEEPS, seed=f, backend="np")
+            for f in range(2)]
+
+
+def _proc_cfg() -> RunConfig:
+    return RunConfig(
+        mode="async", executor="process", n_workers=1, tol=0.0,
+        max_updates=MAX_UPDATES, max_wall=60.0, record_every=10**6,
+        faults=FaultProfile(delay_mean=DELAY_S), seed=0)
+
+
+def _virt_cfg() -> RunConfig:
+    return RunConfig(
+        mode="async", executor="virtual", n_workers=2, tol=0.0,
+        max_updates=400, compute_time=1e-3, seed=0)
+
+
+def _pool_pids() -> dict:
+    return {k: tuple(v["pids"]) for k, v in pool_stats().items()}
+
+
+def _run_batch(problems, cfg, max_active: int) -> dict:
+    """Submit one request per problem; wall time and per-ticket latency."""
+    t0 = time.perf_counter()
+    with SolverService(ServiceConfig(max_active=max_active)) as svc:
+        tickets = [svc.submit(p, cfg) for p in problems]
+        for t in tickets:
+            t.result(timeout=300.0)
+    wall = time.perf_counter() - t0
+    lat = sorted(t.total_s for t in tickets)
+    return {
+        "wall_s": wall,
+        "req_per_sec": len(problems) / wall,
+        "latency_p50_s": lat[len(lat) // 2],
+        "latency_max_s": lat[-1],
+    }
+
+
+def _process_case() -> dict:
+    fams = _families()
+    cfg = _proc_cfg()
+    # Cold vs warm: the first solve of a family boots its pool.
+    cold_warm = {}
+    for f, prob in enumerate(fams):
+        t0 = time.perf_counter()
+        run_fixed_point(prob, cfg)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_fixed_point(prob, cfg)
+        warm = time.perf_counter() - t0
+        cold_warm[f"family{f}"] = {"cold_s": cold, "warm_s": warm}
+    pids0 = _pool_pids()
+
+    # Serialized baseline vs concurrent service, same warm pools.
+    reqs = [fams[i % 2] for i in range(REQUESTS)]
+    serial = _run_batch(reqs, cfg, max_active=1)
+    conc = _run_batch(reqs, cfg, max_active=2)
+
+    # Same-family concurrency: both requests lease the one warm pool.
+    pools_before = len(pool_stats())
+    pair = _run_batch([fams[0], fams[0]], cfg, max_active=2)
+    st = pool_stats()
+    pids1 = _pool_pids()
+    return {
+        "requests": REQUESTS,
+        "n_workers_per_solve": 1,
+        "ncpus": os.cpu_count(),
+        "straggler_delay_s": DELAY_S,
+        "grid": GRID,
+        "max_updates_per_request": MAX_UPDATES,
+        "cold_warm": cold_warm,
+        "serialized": serial,
+        "concurrent": conc,
+        "throughput_ratio": conc["req_per_sec"] / serial["req_per_sec"],
+        "same_family_concurrent": {
+            "wall_s": pair["wall_s"],
+            "pools_before": pools_before,
+            "pools_after": len(st),
+        },
+        "shared_pool": {
+            "pools": len(st),
+            "runs_served": {k[0][:12]: v["runs_served"]
+                            for k, v in st.items()},
+            "zero_respawn": pids0 == pids1,
+        },
+    }
+
+
+def _fairness_case() -> dict:
+    """Weight-3 vs weight-1 tenants contending for one dispatcher."""
+    prob = JacobiProblem(grid=16, sweeps=2, seed=0, backend="np")
+    cfg = _virt_cfg()
+    order = []
+    t0 = time.perf_counter()
+    with SolverService(ServiceConfig(
+            max_active=1, weights={"a": 3.0, "b": 1.0})) as svc:
+        tickets = []
+        for i in range(4):  # interleaved submission: a,b,a,b,...
+            tickets.append(("a", svc.submit(prob, cfg, tenant="a")))
+            tickets.append(("b", svc.submit(prob, cfg, tenant="b")))
+        for _, t in tickets:
+            t.result(timeout=120.0)
+    wall = time.perf_counter() - t0
+    order = [t for t, tk in sorted(tickets, key=lambda p: p[1].dispatched_s)]
+    # SFQ contract: over the contended prefix (first 4 dispatches) the
+    # weight-3 tenant gets ~3 of every 4 slots.  The very first dispatch
+    # can race admission, so the prefix check starts after it.
+    prefix = order[1:5]
+    return {
+        "weights": {"a": 3.0, "b": 1.0},
+        "requests": len(tickets),
+        "wall_s": wall,
+        "req_per_sec": len(tickets) / wall,
+        "dispatch_order": order,
+        "prefix_served": {"a": prefix.count("a"), "b": prefix.count("b")},
+    }
+
+
+def _smoke() -> None:
+    """Virtual-only sanity (~10 s): service == solo, fairness holds."""
+    prob = JacobiProblem(grid=16, sweeps=2, seed=0, backend="np")
+    cfg = RunConfig(mode="async", executor="virtual", tol=1e-8,
+                    max_updates=20000, compute_time=1e-3, seed=0)
+    solo = run_fixed_point(prob, cfg)
+    with SolverService(ServiceConfig(max_active=3)) as svc:
+        tickets = [svc.submit(prob, cfg, tenant=f"t{i % 2}")
+                   for i in range(6)]
+        for t in tickets:
+            r = t.result(timeout=120.0)
+            assert np.array_equal(r.x, solo.x), \
+                "service run diverged from the solo trajectory"
+        st = svc.stats()
+    assert sum(st["served"].values()) == 6, st
+    fair = _fairness_case()
+    a, b = fair["prefix_served"]["a"], fair["prefix_served"]["b"]
+    assert a >= 2 * b, (
+        f"weighted fairness violated in the contended prefix: {fair}")
+    print("solver-serve-smoke: OK (6 multiplexed virtual solves "
+          f"bit-matched solo; fairness prefix a:b = {a}:{b})")
+
+
+def measure() -> dict:
+    cur = {}
+    try:
+        cur[GATE_CASE] = _process_case()
+        cur["virtual/fairness_w3_vs_w1"] = _fairness_case()
+    finally:
+        shutdown_pools()
+    return cur
+
+
+def check(cur: dict) -> list:
+    """Regression gate; returns failure strings."""
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    case = cur.get(GATE_CASE)
+    if case is None:
+        fails.append(f"gate case {GATE_CASE} not measured")
+        return fails
+    ratio = case["throughput_ratio"]
+    if ratio < GATE_RATIO:
+        fails.append(
+            f"{GATE_CASE}: concurrent requests/sec only {ratio:.2f}x the "
+            f"serialized baseline (< {GATE_RATIO}x) — sessions are not "
+            "overlapping across warm pools")
+    if not case["shared_pool"]["zero_respawn"]:
+        fails.append(
+            f"{GATE_CASE}: worker pids changed across the service phases — "
+            "concurrent sessions respawned workers instead of leasing the "
+            "warm pool")
+    sf = case["same_family_concurrent"]
+    if sf["pools_after"] != sf["pools_before"]:
+        fails.append(
+            f"{GATE_CASE}: concurrent same-family requests changed the pool "
+            f"count ({sf['pools_before']} -> {sf['pools_after']}) instead of "
+            "sharing one warm pool")
+    return fails
+
+
+def _rows(cur: dict) -> list:
+    rows = []
+    case = cur[GATE_CASE]
+    for phase in ("serialized", "concurrent"):
+        s = case[phase]
+        rows.append(row(
+            f"solver_serve/{GATE_CASE}/{phase}",
+            1e6 * s["wall_s"] / case["requests"],
+            f"req/s={s['req_per_sec']:.2f};p50={s['latency_p50_s']:.2f}s;"
+            f"max={s['latency_max_s']:.2f}s"))
+    cw = case["cold_warm"]["family0"]
+    rows.append(row(
+        f"solver_serve/{GATE_CASE}/summary", 0.0,
+        f"ratio={case['throughput_ratio']:.2f}x;"
+        f"cold={cw['cold_s']:.2f}s;warm={cw['warm_s']:.2f}s;"
+        f"pools={case['shared_pool']['pools']};"
+        f"zero_respawn={case['shared_pool']['zero_respawn']}"))
+    fair = cur["virtual/fairness_w3_vs_w1"]
+    rows.append(row(
+        "solver_serve/virtual/fairness_w3_vs_w1", 0.0,
+        f"prefix a:b={fair['prefix_served']['a']}:"
+        f"{fair['prefix_served']['b']};req/s={fair['req_per_sec']:.2f}"))
+    return rows
+
+
+def _persist(cur: dict) -> None:
+    """Write BENCH_serve.json (the schema tools/docs_check.py gates on)."""
+    out = {
+        "description": "solver-as-a-service benchmark: concurrent solve "
+                       "requests multiplexed over shared warm pools vs a "
+                       "serialized baseline, cold-vs-warm latency, and "
+                       "weighted-fair scheduling (see "
+                       "benchmarks/solver_serve.py and docs/architecture.md, "
+                       "'Solver-as-a-service')",
+        "gate": {"case": GATE_CASE,
+                 "min_throughput_ratio": GATE_RATIO,
+                 "zero_respawn": True},
+        "current": cur,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point: measure, persist, report rows."""
+    cur = measure()
+    if not fast:
+        _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("solver_serve_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="virtual-only ~10 s sanity; nothing persisted")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the serve gate fails")
+    args = ap.parse_args()
+    if args.smoke:
+        _smoke()
+        return
+    cur = measure()
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    _persist(cur)
+    print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("solver-serve-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                f"{GATE_CASE} concurrent/serialized req/s >= {GATE_RATIO}x, "
+                "zero respawns, same-family pool shared")
+        print(f"solver-serve-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,8 @@ from .engine import (
     run_fixed_point,
     shutdown_pools,
     shutdown_ray_pools,
+    SolveSession,
+    submit_fixed_point,
 )
 from .coupling import (
     block_internal_coupling,
@@ -46,6 +48,8 @@ __all__ = [
     "RunConfig",
     "RunResult",
     "run_fixed_point",
+    "submit_fixed_point",
+    "SolveSession",
     "Executor",
     "VirtualTimeExecutor",
     "ThreadPoolExecutor",

@@ -12,7 +12,12 @@ The engine is split into backend-agnostic pieces and pluggable executors:
 
 :func:`run_fixed_point` keeps the pre-refactor one-call API; the backend is
 selected with ``RunConfig.executor`` (``"virtual"`` | ``"thread"`` |
-``"process"`` | ``"ray"``).  See docs/architecture.md for when to use each.
+``"process"`` | ``"ray"``).  :func:`submit_fixed_point` is the session
+surface: it returns a started :class:`SolveSession` (a future-like handle)
+so any number of solves can be in flight per executor — backends are
+reentrant, and same-payload sessions share one warm worker pool through
+the refcounted lease layer in :mod:`repro.core.engine.poolreg`.  See
+docs/architecture.md for when to use each.
 """
 
 from __future__ import annotations
@@ -34,7 +39,8 @@ from .coordinator import (
     measure_compute,
     worker_eval,
 )
-from .poolreg import PoolRegistry, payload_key
+from .poolreg import PoolLease, PoolRegistry, payload_key
+from .session import SessionState, SolveSession
 from .process import (
     ProcessPoolExecutor,
     pool_stats,
@@ -55,6 +61,9 @@ __all__ = [
     "RunConfig",
     "RunResult",
     "run_fixed_point",
+    "submit_fixed_point",
+    "SolveSession",
+    "SessionState",
     "Executor",
     "VirtualTimeExecutor",
     "ThreadPoolExecutor",
@@ -72,6 +81,7 @@ __all__ = [
     "measure_compute",
     "worker_eval",
     "PoolRegistry",
+    "PoolLease",
     "payload_key",
     "pool_stats",
     "process_pools",
@@ -85,3 +95,11 @@ __all__ = [
 def run_fixed_point(problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
     """Run one (a)synchronous fixed-point solve under the given config."""
     return get_executor(cfg.executor).run(problem, cfg)
+
+
+def submit_fixed_point(problem: FixedPointProblem,
+                       cfg: RunConfig) -> SolveSession:
+    """Start one solve without blocking: returns a running
+    :class:`SolveSession` whose ``result()`` yields the
+    :class:`RunResult` (``run_fixed_point`` is ``submit`` + ``result``)."""
+    return get_executor(cfg.executor).submit(problem, cfg)

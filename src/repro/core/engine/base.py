@@ -1,8 +1,13 @@
 """Executor abstraction: pluggable execution backends for the engine.
 
 An :class:`Executor` turns a (problem, config) pair into a
-:class:`~repro.core.engine.types.RunResult`.  Backends registered here are
-addressed by ``RunConfig.executor``:
+:class:`~repro.core.engine.types.RunResult`.  Executor instances are
+stateless and reentrant: all per-request state lives in the
+:class:`~repro.core.engine.session.SolveSession` that
+:meth:`Executor.submit` creates, so any number of sessions may execute
+concurrently against one backend (``run()`` is the one-shot wrapper:
+submit + execute inline).  Backends registered here are addressed by
+``RunConfig.executor``:
 
 - ``"virtual"`` — deterministic discrete-event simulator (virtual seconds);
 - ``"thread"``  — real concurrent workers in a thread pool (wall seconds);
@@ -22,10 +27,12 @@ import abc
 from typing import Dict, List, Type
 
 from ..fixedpoint import FixedPointProblem
+from .session import SolveSession
 from .types import RunConfig, RunResult
 
 __all__ = [
     "Executor",
+    "SolveSession",
     "register_executor",
     "register_unavailable",
     "get_executor",
@@ -35,14 +42,42 @@ __all__ = [
 
 
 class Executor(abc.ABC):
-    """An execution backend for (a)synchronous fixed-point runs."""
+    """An execution backend for (a)synchronous fixed-point runs.
+
+    Subclasses implement :meth:`_execute`, which reads everything it needs
+    from the session and must keep all mutable state local to the call so
+    overlapping sessions never interfere.
+    """
 
     #: registry key; subclasses must override
     name: str = ""
 
-    @abc.abstractmethod
+    def submit(self, problem: FixedPointProblem, cfg: RunConfig,
+               *, start: bool = True) -> SolveSession:
+        """Create a :class:`SolveSession` for (problem, cfg).
+
+        With ``start`` (the default) the session begins executing on a
+        background thread immediately; ``start=False`` returns it PENDING
+        so the caller decides where and when it runs (the service layer's
+        dispatcher threads, or ``run()`` inline).
+        """
+        session = SolveSession(self, problem, cfg)
+        if start:
+            session.start()
+        return session
+
     def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
-        """Execute one run of ``problem`` under ``cfg`` and return the result."""
+        """Execute one run of ``problem`` under ``cfg`` and return the result.
+
+        Thin wrapper: one session executed inline on the calling thread —
+        byte-identical behaviour (including exceptions) to the pre-session
+        engine.
+        """
+        return self.submit(problem, cfg, start=False).execute()
+
+    @abc.abstractmethod
+    def _execute(self, session: SolveSession) -> RunResult:
+        """Backend entry point: run ``session.problem`` under ``session.cfg``."""
 
 
 _REGISTRY: Dict[str, Type[Executor]] = {}

@@ -279,11 +279,15 @@ class Coordinator:
                 "capture_trace records async schedules only (a sync run is "
                 "already reproducible from its round plan)")
         if cfg.scenario is not None:
-            if cfg.accel_eval == "worker":
+            if cfg.accel_eval == "worker" and cfg.executor == "virtual":
+                # Thread/process/ray run offloaded fires through a real
+                # eval service and commit them restricted to blocks whose
+                # ownership did not move; the virtual chaos event loop
+                # evaluates fires inline only.
                 raise ValueError(
-                    "chaos scenarios require accel_eval='coordinator' "
-                    "(offloaded fires across membership changes are "
-                    "discarded wholesale; run them separately)")
+                    "chaos scenarios with accel_eval='worker' need a real "
+                    "backend (thread/process/ray); the virtual chaos loop "
+                    "evaluates fires coordinator-side")
             validate = getattr(cfg.scenario, "validate", None)
             if validate is not None:
                 validate(cfg.n_workers)
@@ -366,6 +370,12 @@ class Coordinator:
         self.preempt_discards = 0
         self.applied_by_worker: dict = {}
         self._membership_version = 0
+        # block -> membership version at which its ownership last changed
+        # (orphaning counts).  Lets accel_commit() restrict an offloaded
+        # fire whose begin->commit window crossed a preempt/join to the
+        # blocks that did not move, instead of discarding it wholesale.
+        self._block_moved_at: dict = {}
+        self.accel_partial_commits = 0
         # Scenario set_profile overrides (worker -> live FaultProfile); the
         # base profiles from cfg.faults apply where there is no override.
         self.live_profiles: dict = {}
@@ -420,6 +430,8 @@ class Coordinator:
                 self.block_owner[b] = tgt
             self.reassigned_blocks += len(moved)
         self._membership_version += 1
+        for b in moved:
+            self._block_moved_at[b] = self._membership_version
         return len(moved)
 
     def join_worker(self, worker: int) -> int:
@@ -444,6 +456,8 @@ class Coordinator:
             self.worker_blocks[worker].append(b)
         self.reassigned_blocks += len(back)
         self._membership_version += 1
+        for b in back:
+            self._block_moved_at[b] = self._membership_version
         return len(back)
 
     def dispatchable(self, worker: int) -> bool:
@@ -677,19 +691,26 @@ class Coordinator:
         updates were applied since ``accel_begin`` (only possible with
         offloaded evaluations), the fire is *discarded* — neither the
         candidate nor the G(x_pin) fallback may overwrite blocks that are
-        fresher than the pinned iterate they were computed from.  The same
-        guard covers *reassignment windows*: a fire whose begin -> commit
-        span crossed a membership change (preempt/join) is discarded too —
-        its pinned iterate predates the block reassignment, so committing
-        it could overwrite blocks that changed servers mid-flight.
+        fresher than the pinned iterate they were computed from.
+
+        Reassignment windows are handled block-wise: a fire whose
+        begin -> commit span crossed a membership change (``plan.mver``
+        behind the live version) commits *restricted to the blocks whose
+        ownership did not move* in that window — the moved blocks' live
+        values may already carry their new server's updates, so only they
+        keep their live state (``_block_moved_at`` knows which they are).
+        A fire with every block moved degenerates to a discard.
         Returns the applied verdict: "accept" | "fallback" | "discard".
         """
         self._fires_inflight -= 1
         if t is not None:
             self.fire_window_s += max(0.0, t - plan.t_begin)
         stale = self.wu - plan.wu_begin
-        if (stale > self._accel_stale_limit
-                or plan.mver != self._membership_version):
+        moved: set = set()
+        if plan.mver != self._membership_version:
+            moved = {b for b, mv in self._block_moved_at.items()
+                     if mv > plan.mver}
+        if stale > self._accel_stale_limit or len(moved) >= len(self.blocks):
             self.accel_discards += 1
             self.accel.record_reject()
             if self.tracer is not None:
@@ -697,10 +718,24 @@ class Coordinator:
             return "discard"
         if plan.verdict == "accept":
             self.accel.record_accept()
-            self.x = plan.cand
+            target = plan.cand
         else:
             self.accel.record_reject()
-            self.x = _writable(self.problem.project(plan.g))
+            target = _writable(self.problem.project(plan.g))
+        if moved:
+            # Partial commit: write the unmoved blocks from the verdict
+            # target, leave the moved blocks' live values in place, then
+            # re-project the stitched iterate if projection is non-trivial.
+            for b, blk in enumerate(self.blocks):
+                if b in moved:
+                    continue
+                ind = self._block_slices.get(id(blk), blk)
+                self.x[ind] = target[ind]
+            if not self._trivial_project:
+                self.x = _writable(self.problem.project(self.x))
+            self.accel_partial_commits += 1
+        else:
+            self.x = target
         self._x_version += 1
         if self.tracer is not None:
             self.tracer.fire(plan.verdict, t)
@@ -890,6 +925,7 @@ class Coordinator:
             restarts=self.restarts,
             offloaded_evals=self.offloaded_evals,
             accel_discards=self.accel_discards,
+            accel_partial_commits=self.accel_partial_commits,
             coordinator_busy_frac=(
                 min(1.0, self.busy_s / t) if t > 0 else 0.0),
             fire_window_s=self.fire_window_s,

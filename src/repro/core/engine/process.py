@@ -411,13 +411,16 @@ class _WorkerPool:
 _POOLS = PoolRegistry(_MAX_POOLS)
 
 
-def _get_pool(payload, cfg: RunConfig, n: int) -> _WorkerPool:
+def _acquire_pool(payload, cfg: RunConfig, n: int):
+    """Lease the pool for (payload, cfg) — shared, pinned, refcounted.
+
+    Concurrent sessions of the same payload family share one warm pool
+    (zero respawn): each takes a lease and serializes its exclusive fleet
+    use on the lease's ``run_lock``.  While leased, the pool can neither
+    be LRU-evicted nor torn down by a concurrent ``dispose``.
+    """
     key = payload_key(payload, cfg)
-    return _POOLS.get(key, lambda: _WorkerPool(key, payload, n))
-
-
-def _dispose_pool(pool: _WorkerPool) -> None:
-    _POOLS.dispose(pool.key)
+    return _POOLS.acquire(key, lambda: _WorkerPool(key, payload, n))
 
 
 def shutdown_pools() -> None:
@@ -439,10 +442,11 @@ class process_pools:
 
 
 def pool_stats() -> Dict[Tuple[str, int, str], Dict[str, object]]:
-    """Live pool inventory: worker pids and runs served, per pool key."""
+    """Live pool inventory: pids, runs served and leases, per pool key."""
     return {
         key: {"pids": pool.pids(), "runs_served": pool.runs_served,
-              "n_workers": pool.n_workers, "healthy": pool.healthy()}
+              "n_workers": pool.n_workers, "healthy": pool.healthy(),
+              "leases": _POOLS.lease_count(key)}
         for key, pool in _POOLS.items()
     }
 
@@ -457,7 +461,8 @@ class ProcessPoolExecutor(Executor):
 
     name = "process"
 
-    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+    def _execute(self, session) -> RunResult:
+        problem, cfg = session.problem, session.cfg
         if cfg.mode not in ("sync", "async"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
         payload = problem_payload(problem)
@@ -470,24 +475,36 @@ class ProcessPoolExecutor(Executor):
             from ...chaos.trace import TraceRecorder
 
             coord.tracer = TraceRecorder(cfg, self.name, problem)
-        pool = _get_pool(payload, cfg, problem.n)
+        lease = _acquire_pool(payload, cfg, problem.n)
         try:
-            pool.setup_run(cfg, coord.blocks)
-            pool.write_x(coord)
-            if cfg.mode == "sync":
-                if cfg.scenario is not None:
-                    return self._run_sync_chaos(cfg, coord, pool)
-                return self._run_sync(cfg, coord, pool)
-            if cfg.accel_eval == "worker":
-                return self._run_async_offload(cfg, coord, pool)
-            if cfg.scenario is not None or cfg.capture_trace:
-                return self._run_async_chaos(cfg, coord, pool)
-            return self._run_async(cfg, coord, pool)
-        except Exception:
-            # A worker error (or timeout) leaves queues in an unknown
-            # state: retire the whole pool rather than reuse it.
-            _dispose_pool(pool)
-            raise
+            # Exclusive fleet use: concurrent same-family sessions queue
+            # here and pipeline over the one warm pool, zero respawns.
+            with lease.run_lock:
+                pool = lease.pool
+                try:
+                    pool.setup_run(cfg, coord.blocks)
+                    pool.write_x(coord)
+                    if cfg.mode == "sync":
+                        if cfg.scenario is not None:
+                            return self._run_sync_chaos(cfg, coord, pool)
+                        return self._run_sync(cfg, coord, pool)
+                    if cfg.scenario is not None:
+                        # Hosts both eval placements; offloaded fires
+                        # commit restricted to unmoved blocks.
+                        return self._run_async_chaos(cfg, coord, pool)
+                    if cfg.accel_eval == "worker":
+                        return self._run_async_offload(cfg, coord, pool)
+                    if cfg.capture_trace:
+                        return self._run_async_chaos(cfg, coord, pool)
+                    return self._run_async(cfg, coord, pool)
+                except Exception:
+                    # A worker error (or timeout) leaves queues in an
+                    # unknown state: retire the whole pool rather than
+                    # reuse it (deferred while other sessions hold leases).
+                    _POOLS.dispose(pool.key)
+                    raise
+        finally:
+            lease.release()
 
     # ----------------------------------------------------------------- #
     def _run_sync(
@@ -674,9 +691,18 @@ class ProcessPoolExecutor(Executor):
         preemption is discarded via ``preempt_gen``.  ``set_profile``
         events are forwarded to the worker interpreters as ``("prof", …)``
         messages, which apply from the worker's next task on.
+
+        With ``cfg.accel_eval == "worker"`` the EvalService composes with
+        chaos: fire/record evaluations ride the same single-item-in-flight
+        pipeline as :meth:`_run_async_offload` (the serving worker must be
+        dispatchable; preempted/paused workers never serve evals).  A fire
+        whose begin→commit window spans a membership change commits
+        restricted to the blocks that did not move (the coordinator's
+        ``AccelPlan.mver`` guard).
         """
         from ...chaos.scenario import ScenarioClock
 
+        offload = cfg.accel_eval == "worker"
         clock = ScenarioClock(cfg.scenario)
         t0 = time.perf_counter()
         coord.record(0.0)
@@ -686,6 +712,9 @@ class ProcessPoolExecutor(Executor):
         rejoin_owed: Set[int] = set()
         rejoin_gen: Dict[int, int] = {}  # incarnation that crashed
         parked: Set[int] = set()  # paused workers with no task in flight
+        plans: "deque" = deque()  # eval pipelines; front is being served
+        eval_worker: Optional[int] = None
+        eval_item: Optional[EvalItem] = None
         stop = False
 
         def elapsed() -> float:
@@ -700,9 +729,29 @@ class ProcessPoolExecutor(Executor):
                 coord.tracer.dispatch(elapsed(), w, bid, gen)
             pool.task_qs[w].put(("async", wire_idx))
 
-        def idle_or_park(w: int) -> None:
-            """Redispatch an idle worker, or park it while paused."""
+        def service_eval(w: int) -> bool:
+            """Hand dispatchable idle worker ``w`` the front plan's next
+            item (its result slot is safe to write exactly now)."""
+            nonlocal eval_worker, eval_item
+            if eval_worker is not None:
+                return False
+            while plans:
+                item = plans[0].next_item()
+                if item is None:  # already complete (committed elsewhere)
+                    plans.popleft()
+                    continue
+                pool.slot_views[w][:] = item.x
+                pool.task_qs[w].put(("eval", item.kind))
+                eval_worker, eval_item = w, item
+                return True
+            return False
+
+        def idle_or_park(w: int, allow_eval: bool = True) -> None:
+            """Redispatch an idle worker (possibly onto an eval item), or
+            park it while paused."""
             if coord.dispatchable(w) and w in alive:
+                if offload and allow_eval and service_eval(w):
+                    return
                 dispatch(w)
             elif w in coord.active and w in alive:
                 parked.add(w)
@@ -716,7 +765,11 @@ class ProcessPoolExecutor(Executor):
                     pool.task_qs[wt].put(("prof", ev.profile))
             elif ev.kind == "join":
                 parked.discard(ev.worker)
-                if ev.worker not in pending and ev.worker in alive:
+                if (ev.worker not in pending and ev.worker in alive
+                        and ev.worker != eval_worker):
+                    # An eval-serving worker is redispatched when its item
+                    # returns — queueing block work behind the eval would
+                    # let the block result clobber the eval's result slot.
                     if coord.dispatchable(ev.worker):
                         dispatch(ev.worker)
                     elif ev.worker in coord.active:
@@ -728,6 +781,16 @@ class ProcessPoolExecutor(Executor):
                         dispatch(wt)
             elif ev.kind == "preempt":
                 parked.discard(ev.worker)
+
+        def arrival_tick_either() -> bool:
+            """Record-cadence/stop tick (offload opens record plans)."""
+            if not offload:
+                return coord.arrival_tick(elapsed())
+            tick_stop, record_due = coord.arrival_tick_offload(elapsed())
+            if record_due and not any(isinstance(p, RecordPlan)
+                                      for p in plans):
+                plans.append(coord.record_begin(elapsed()))
+            return tick_stop
 
         for ev in clock.due(0.0):
             apply_event(ev, 0.0)
@@ -743,7 +806,7 @@ class ProcessPoolExecutor(Executor):
             for ev in clock.due(now):
                 apply_event(ev, now)
             nt = clock.next_time()
-            if not pending and not rejoin_owed:
+            if not pending and not rejoin_owed and eval_worker is None:
                 if nt is None:
                     break  # nothing in flight and no event can revive us
                 time.sleep(max(0.0, nt - elapsed()))
@@ -766,6 +829,44 @@ class ProcessPoolExecutor(Executor):
                     if coord.tracer is not None:
                         coord.tracer.restart(elapsed(), w)
                 continue
+            if kind in ("eval_ok", "eval_crash"):
+                with coord.busy():
+                    plan = plans[0]
+                    item = eval_item
+                    eval_worker = eval_item = None
+                    if kind == "eval_crash":
+                        val = coord.eval_item(item)  # crash fallback
+                        offloaded = False
+                    elif item.kind == EvalItem.FULL_MAP:
+                        val = pool.slot_views[w][:data].copy()
+                        offloaded = True
+                    else:
+                        val = data  # residual-norm scalar over the queue
+                        offloaded = True
+                    if isinstance(plan, AccelPlan):
+                        coord.accel_feed(plan, val, offloaded=offloaded)
+                        if plan.next_item() is None:
+                            plans.popleft()
+                            # Restricted commit across membership changes:
+                            # only unmoved blocks take the fire.
+                            coord.accel_commit(plan, t=elapsed())
+                            pool.write_x(coord)
+                    else:
+                        plans.popleft()
+                        res_n = coord.record_commit(plan, val,
+                                                    offloaded=offloaded)
+                        if not np.isfinite(res_n) or res_n > 1e60:
+                            stop = True
+                        elif coord.converged():
+                            # Confirm at the live iterate (inline-mode
+                            # contract).
+                            res_n = coord.record(elapsed())
+                            if (not np.isfinite(res_n) or res_n > 1e60
+                                    or coord.converged()):
+                                stop = True
+                    if not stop and w not in pending:
+                        idle_or_park(w)
+                continue
             with coord.busy():
                 prof = coord.fault_for(w)
                 idx, gen = pending.pop(w)
@@ -781,18 +882,20 @@ class ProcessPoolExecutor(Executor):
                         # A rejoined worker must get fresh work even though
                         # this (doomed) result was a crash report — its
                         # queued task just waits out the downtime.
-                        idle_or_park(w)
+                        idle_or_park(w, allow_eval=False)
                         continue
                     coord.crashes += 1
                     if coord.tracer is not None:
                         coord.tracer.arrival(elapsed(), w, "crash", gen=gen)
-                    stop = coord.arrival_tick(elapsed())
+                    stop = arrival_tick_either()
                     if not data:
                         alive.discard(w)
                     elif not stop:
                         # The redispatched task waits out the downtime in
-                        # the worker's queue.
-                        idle_or_park(w)
+                        # the worker's queue (block work only: parking the
+                        # single-slot eval service behind that sleep would
+                        # systematically stale-discard fires).
+                        idle_or_park(w, allow_eval=False)
                     continue
                 if gen != coord.preempt_gen[w]:
                     # Preempted (and possibly rejoined) while in flight:
@@ -816,14 +919,26 @@ class ProcessPoolExecutor(Executor):
                     since_fire += 1
                     if (coord.accel is not None
                             and since_fire >= cfg.fire_every):
-                        coord.maybe_fire_accel()
                         since_fire = 0
+                        if offload:
+                            # One fire in flight at a time; due fires
+                            # while one is pending are coalesced.
+                            if not any(isinstance(p, AccelPlan)
+                                       for p in plans):
+                                plan = coord.accel_begin(elapsed())
+                                if plan is not None:
+                                    plans.append(plan)
+                        else:
+                            coord.maybe_fire_accel()
                 pool.write_x(coord)
-                stop = coord.arrival_tick(elapsed())
+                stop = arrival_tick_either()
                 if not stop:
                     idle_or_park(w)
         t = elapsed()
-        pool.drain(set(pending), rejoin_owed)
+        outstanding = set(pending)
+        if eval_worker is not None:
+            outstanding.add(eval_worker)
+        pool.drain(outstanding, rejoin_owed)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
 

@@ -211,9 +211,11 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
 
     _RAY_POOLS = PoolRegistry(_MAX_RAY_POOLS)
 
-    def _get_ray_pool(payload, cfg: RunConfig) -> _RayActorPool:
+    def _acquire_ray_pool(payload, cfg: RunConfig):
+        """Lease a warm actor pool (refcounted: never LRU-evicted while
+        a session holds it — see :mod:`repro.core.engine.poolreg`)."""
         key = payload_key(payload, cfg)
-        return _RAY_POOLS.get(
+        return _RAY_POOLS.acquire(
             key, lambda: _RayActorPool(key, payload, cfg.n_workers))
 
     def shutdown_ray_pools() -> None:
@@ -229,7 +231,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
         return {
             key: {"n_workers": pool.n_workers,
                   "runs_served": pool.runs_served,
-                  "healthy": pool.healthy(timeout=1.0)}
+                  "healthy": pool.healthy(timeout=1.0),
+                  "leases": _RAY_POOLS.lease_count(key)}
             for key, pool in _RAY_POOLS.items()
         }
 
@@ -252,7 +255,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
 
         name = "ray"
 
-        def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+        def _execute(self, session) -> RunResult:
+            problem, cfg = session.problem, session.cfg
             if cfg.mode not in ("sync", "async"):
                 raise ValueError(f"unknown mode {cfg.mode!r}")
             if not ray.is_initialized():
@@ -266,26 +270,39 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 from ...chaos.trace import TraceRecorder
 
                 coord.tracer = TraceRecorder(cfg, self.name, problem)
-            pool = _get_ray_pool(payload, cfg)
+            lease = _acquire_ray_pool(payload, cfg)
             try:
-                # Startup barrier: rebuild + jit warm-up happens off-clock
-                # (near-free on a warm pool).
-                pool.setup_run(cfg, coord.blocks)
-                actors = pool.actors
-                if cfg.mode == "sync":
-                    if cfg.scenario is not None:
-                        return self._run_sync_chaos(cfg, coord, actors)
-                    return self._run_sync(cfg, coord, actors)
-                if cfg.accel_eval == "worker":
-                    return self._run_async_offload(cfg, coord, actors)
-                if cfg.scenario is not None or cfg.capture_trace:
-                    return self._run_async_chaos(cfg, coord, actors)
-                return self._run_async(cfg, coord, actors)
-            except Exception:
-                # An actor error leaves futures in an unknown state:
-                # retire the whole pool rather than reuse it.
-                _RAY_POOLS.dispose(pool.key)
-                raise
+                # Actors run one fleet at a time: concurrent same-payload
+                # sessions pipeline over the warm pool instead of spawning
+                # a second actor fleet.
+                with lease.run_lock:
+                    pool = lease.pool
+                    try:
+                        # Startup barrier: rebuild + jit warm-up happens
+                        # off-clock (near-free on a warm pool).
+                        pool.setup_run(cfg, coord.blocks)
+                        actors = pool.actors
+                        if cfg.mode == "sync":
+                            if cfg.scenario is not None:
+                                return self._run_sync_chaos(cfg, coord,
+                                                            actors)
+                            return self._run_sync(cfg, coord, actors)
+                        if cfg.scenario is not None:
+                            return self._run_async_chaos(cfg, coord, actors)
+                        if cfg.accel_eval == "worker":
+                            return self._run_async_offload(cfg, coord,
+                                                           actors)
+                        if cfg.capture_trace:
+                            return self._run_async_chaos(cfg, coord, actors)
+                        return self._run_async(cfg, coord, actors)
+                    except Exception:
+                        # An actor error leaves futures in an unknown
+                        # state: retire the whole pool rather than reuse
+                        # it (closed once every lease drains).
+                        _RAY_POOLS.dispose(pool.key)
+                        raise
+            finally:
+                lease.release()
 
         # ------------------------------------------------------------- #
         def _run_sync(
@@ -461,17 +478,29 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             preempted actors are simply not redispatched, and a result
             that raced its worker's preemption is discarded via
             ``preempt_gen`` (mirrors the process backend's chaos loop).
+
+            With ``cfg.accel_eval == "worker"`` the offload loop's
+            EvalService rides along: the actor that just returned serves
+            the front plan's next eval item (one in flight, coalesced
+            plans), and fires whose begin->commit window crossed a
+            membership change commit restricted to unmoved blocks
+            (``accel_commit``'s ``mver`` guard).
             """
             from ...chaos.scenario import ScenarioClock
 
             clock = ScenarioClock(cfg.scenario)
+            offload = cfg.accel_eval == "worker"
             t0 = time.perf_counter()
             coord.record(0.0)
             since_fire = 0
             alive: Set[int] = set(range(cfg.n_workers))
-            futures: Dict = {}  # ObjectRef -> (worker, idx, wu, gen)
+            # ObjectRef -> ("block", w, idx, wu, gen) | ("eval", w)
+            futures: Dict = {}
             rejoin: List[Tuple[float, int, int]] = []  # (t, worker, gen)
             parked: Set[int] = set()
+            plans: List = []  # eval pipelines; front is being served
+            eval_inflight: Optional[EvalItem] = None
+            eval_worker: Optional[int] = None
             stop = False
 
             def elapsed() -> float:
@@ -484,13 +513,42 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 if coord.tracer is not None:
                     coord.tracer.dispatch(elapsed(), w, bid, gen)
                 fut = actors[w].eval_async.remote(x_ref, idx)
-                futures[fut] = (w, idx, coord.wu, gen)
+                futures[fut] = ("block", w, idx, coord.wu, gen)
 
-            def idle_or_park(w: int) -> None:
+            def service_eval(w: int) -> bool:
+                """Hand the idle actor ``w`` the front plan's next item."""
+                nonlocal eval_inflight, eval_worker
+                if eval_inflight is not None:
+                    return False
+                while plans:
+                    item = plans[0].next_item()
+                    if item is None:
+                        plans.pop(0)
+                        continue
+                    fut = actors[w].eval_item.remote(item.x, item.kind)
+                    futures[fut] = ("eval", w)
+                    eval_inflight = item
+                    eval_worker = w
+                    return True
+                return False
+
+            def idle_or_park(w: int, allow_eval: bool = True) -> None:
                 if coord.dispatchable(w) and w in alive:
+                    if allow_eval and offload and service_eval(w):
+                        return
                     dispatch(w)
                 elif w in coord.active and w in alive:
                     parked.add(w)
+
+            def arrival_tick_either() -> bool:
+                if not offload:
+                    return coord.arrival_tick(elapsed())
+                tick_stop, record_due = coord.arrival_tick_offload(
+                    elapsed())
+                if record_due and not any(isinstance(p, RecordPlan)
+                                          for p in plans):
+                    plans.append(coord.record_begin(elapsed()))
+                return tick_stop
 
             def apply_event(ev, now: float) -> None:
                 coord.apply_scenario_event(ev, now)
@@ -501,8 +559,13 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                              for wt in targets])
                 elif ev.kind == "join":
                     parked.discard(ev.worker)
-                    inflight = {t[0] for t in futures.values()}
-                    if ev.worker not in inflight and ev.worker in alive:
+                    inflight = {t[1] for t in futures.values()
+                                if t[0] == "block"}
+                    # A join never queues block work behind an in-flight
+                    # eval on the same actor: the eval server picks its
+                    # next task when its item returns.
+                    if (ev.worker not in inflight and ev.worker in alive
+                            and ev.worker != eval_worker):
                         if coord.dispatchable(ev.worker):
                             dispatch(ev.worker)
                         elif ev.worker in coord.active:
@@ -517,7 +580,7 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
 
             for ev in clock.due(0.0):
                 apply_event(ev, 0.0)
-            inflight0 = {t[0] for t in futures.values()}
+            inflight0 = {t[1] for t in futures.values() if t[0] == "block"}
             for w in sorted(alive):
                 if w in inflight0:
                     continue  # a t=0 join event already dispatched it
@@ -560,7 +623,44 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 if not done:
                     continue  # a rejoin or scripted event came due first
                 fut = done[0]
-                w, idx, launch_wu, gen = futures.pop(fut)
+                tag = futures.pop(fut)
+                if tag[0] == "eval":
+                    _, w = tag
+                    kind, value = ray.get(fut)
+                    with coord.busy():
+                        plan = plans[0]
+                        item = eval_inflight
+                        eval_inflight = None
+                        eval_worker = None
+                        if kind == "eval_crash":
+                            value = coord.eval_item(item)  # crash fallback
+                            offloaded = False
+                        else:
+                            offloaded = True
+                        if isinstance(plan, AccelPlan):
+                            coord.accel_feed(plan, value,
+                                             offloaded=offloaded)
+                            if plan.next_item() is None:
+                                plans.pop(0)
+                                # mver guard inside: a fire whose window
+                                # crossed a preempt/join commits only to
+                                # blocks whose ownership did not move.
+                                coord.accel_commit(plan, t=elapsed())
+                        else:
+                            plans.pop(0)
+                            res = coord.record_commit(plan, value,
+                                                      offloaded=offloaded)
+                            if not np.isfinite(res) or res > 1e60:
+                                stop = True
+                            elif coord.converged():
+                                res = coord.record(elapsed())
+                                if (not np.isfinite(res) or res > 1e60
+                                        or coord.converged()):
+                                    stop = True
+                        if not stop:
+                            idle_or_park(w)
+                    continue
+                _, w, idx, launch_wu, gen = tag
                 kind, vals = ray.get(fut)
                 with coord.busy():
                     prof = coord.fault_for(w)
@@ -582,7 +682,7 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                             heapq.heappush(
                                 rejoin,
                                 (elapsed() + prof.restart_after, w, gen))
-                        stop = coord.arrival_tick(elapsed())
+                        stop = arrival_tick_either()
                         continue
                     staleness = coord.wu - launch_wu
                     applied = coord.apply_return(
@@ -596,9 +696,16 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                         since_fire += 1
                         if (coord.accel is not None
                                 and since_fire >= cfg.fire_every):
-                            coord.maybe_fire_accel()
                             since_fire = 0
-                    stop = coord.arrival_tick(elapsed())
+                            if offload:
+                                if not any(isinstance(p, AccelPlan)
+                                           for p in plans):
+                                    plan = coord.accel_begin(elapsed())
+                                    if plan is not None:
+                                        plans.append(plan)
+                            else:
+                                coord.maybe_fire_accel()
+                    stop = arrival_tick_either()
                     if not stop:
                         idle_or_park(w)
             t = elapsed()

@@ -48,7 +48,8 @@ class ThreadPoolExecutor(Executor):
 
     name = "thread"
 
-    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+    def _execute(self, session) -> RunResult:
+        problem, cfg = session.problem, session.cfg
         coord = Coordinator(problem, cfg)
         coord.measure_fire_windows = True  # real clock: time inline fires
         # Warm every jit specialization the run will hit (per-block shapes,
@@ -69,9 +70,15 @@ class ThreadPoolExecutor(Executor):
                 return self._run_sync_chaos(problem, cfg, coord)
             return self._run_sync(problem, cfg, coord)
         if cfg.mode == "async":
+            if cfg.scenario is not None:
+                # The chaos loop hosts both eval placements: with
+                # accel_eval="worker" it opens fire/record plans and runs
+                # them on the eval thread, and commits are restricted to
+                # blocks whose ownership did not move (coordinator guard).
+                return self._run_async_chaos(problem, cfg, coord)
             if cfg.accel_eval == "worker":
                 return self._run_async_offload(problem, cfg, coord)
-            if cfg.scenario is not None or cfg.capture_trace:
+            if cfg.capture_trace:
                 return self._run_async_chaos(problem, cfg, coord)
             return self._run_async(problem, cfg, coord)
         raise ValueError(f"unknown mode {cfg.mode!r}")
@@ -277,16 +284,27 @@ class ThreadPoolExecutor(Executor):
         worker's preemption is discarded at the apply point
         (``preempt_gen`` recognizes the stale incarnation), mirroring the
         virtual backend's semantics on wall clock.
+
+        With ``cfg.accel_eval == "worker"`` the EvalService composes with
+        chaos: due fires/records only *open* plans under the lock and
+        evaluate on a dedicated eval thread (as in
+        :meth:`_run_async_offload`).  A fire whose begin→commit window
+        spans a membership change commits restricted to the blocks that
+        did not move (the coordinator's ``AccelPlan.mver`` guard).
         """
         from ...chaos.scenario import ScenarioClock
 
+        offload = cfg.accel_eval == "worker"
         lock = threading.Lock()
         cond = threading.Condition(lock)
         stop = threading.Event()
-        state = {"since_fire": 0}
+        state = {"since_fire": 0, "fire_plan": None, "rec_plan": None}
         clock = ScenarioClock(cfg.scenario)
-        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
-        worker_rngs = [np.random.default_rng(s) for s in seeds]
+        seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers + 1)
+        worker_rngs = [np.random.default_rng(s) for s in seeds[:-1]]
+        eval_rng = np.random.default_rng(seeds[-1])
+        eval_pool = (_Pool(max_workers=1, thread_name_prefix="fp-eval")
+                     if offload else None)
         t0 = time.perf_counter()
         with cond:
             for ev in clock.due(0.0):
@@ -295,6 +313,53 @@ class ThreadPoolExecutor(Executor):
 
         def elapsed() -> float:
             return time.perf_counter() - t0
+
+        def eval_one(item, prof: FaultProfile):
+            if (prof.eval_crash_prob > 0.0
+                    and eval_rng.random() < prof.eval_crash_prob):
+                return coord.eval_item(item), False
+            return coord.eval_item(item), True
+
+        def run_fire(plan, prof: FaultProfile) -> None:
+            item = plan.next_item()
+            while item is not None:
+                val, offloaded = eval_one(item, prof)
+                with cond, coord.busy():
+                    coord.accel_feed(plan, val, offloaded=offloaded)
+                item = plan.next_item()
+            with cond, coord.busy():
+                if not stop.is_set():
+                    coord.accel_commit(plan, t=elapsed())
+                state["fire_plan"] = None
+
+        def run_record(plan, prof: FaultProfile) -> None:
+            val, offloaded = eval_one(plan.next_item(), prof)
+            with cond, coord.busy():
+                state["rec_plan"] = None
+                if stop.is_set():
+                    return
+                res = coord.record_commit(plan, val, offloaded=offloaded)
+                if not np.isfinite(res) or res > 1e60:
+                    stop.set()
+                    cond.notify_all()
+                elif coord.converged():
+                    # Confirm at the live iterate (same contract as the
+                    # scenario-free offload loop).
+                    res = coord.record(elapsed())
+                    if (not np.isfinite(res) or res > 1e60
+                            or coord.converged()):
+                        stop.set()
+                        cond.notify_all()
+
+        def arrival_tick_either(prof: FaultProfile) -> bool:
+            """Record-cadence/stop tick; caller holds the lock."""
+            if not offload:
+                return coord.arrival_tick(elapsed())
+            tick_stop, record_due = coord.arrival_tick_offload(elapsed())
+            if record_due and state["rec_plan"] is None:
+                state["rec_plan"] = coord.record_begin(elapsed())
+                eval_pool.submit(run_record, state["rec_plan"], prof)
+            return tick_stop
 
         def chaos_driver() -> None:
             while not stop.is_set():
@@ -359,7 +424,7 @@ class ThreadPoolExecutor(Executor):
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w, "crash",
                                                  gen=gen)
-                        if coord.arrival_tick(elapsed()):
+                        if arrival_tick_either(prof):
                             stop.set()
                             cond.notify_all()
                     if prof.restart_after is None or stop.is_set():
@@ -397,9 +462,17 @@ class ThreadPoolExecutor(Executor):
                         state["since_fire"] += 1
                         if (coord.accel is not None
                                 and state["since_fire"] >= cfg.fire_every):
-                            coord.maybe_fire_accel()
-                            state["since_fire"] = 0
-                    if coord.arrival_tick(elapsed()):
+                            if offload:
+                                state["since_fire"] = 0
+                                if state["fire_plan"] is None:
+                                    plan = coord.accel_begin(elapsed())
+                                    if plan is not None:
+                                        state["fire_plan"] = plan
+                                        eval_pool.submit(run_fire, plan, prof)
+                            else:
+                                coord.maybe_fire_accel()
+                                state["since_fire"] = 0
+                    if arrival_tick_either(prof):
                         stop.set()
                         cond.notify_all()
 
@@ -415,8 +488,10 @@ class ThreadPoolExecutor(Executor):
         driver.start()
         for th in threads:
             th.join()
-        stop.set()
+        stop.set()  # in-flight plans must not commit after the final record
         driver.join(timeout=5.0)
+        if eval_pool is not None:
+            eval_pool.shutdown(wait=True)
         t = elapsed()
         with lock:
             coord.record(t)

@@ -124,8 +124,12 @@ class RunConfig:
     # time on the virtual backend and wall time on thread/process/ray, so
     # one script means the same thing everywhere.  Preempted workers'
     # blocks are reassigned to the least-loaded survivors (elastic
-    # membership) and handed back on join.  Requires selection="fixed" and
-    # accel_eval="coordinator"; None keeps every default loop untouched.
+    # membership) and handed back on join.  Requires selection="fixed";
+    # composes with accel_eval="worker" on the real backends (a fire whose
+    # begin->commit window crossed a membership change commits only to the
+    # blocks whose ownership did not move), while the virtual chaos loop
+    # still evaluates coordinator-side.  None keeps every default loop
+    # untouched.
     scenario: Optional[object] = None  # repro.chaos.FaultScenario
     # Record the run's event trace (dispatches, arrivals + dispositions,
     # crashes, fires, records, offloads) into RunResult.trace for
@@ -156,6 +160,10 @@ class RunResult:
     # --- evaluation pipeline (accel_eval="worker") ------------------------ #
     offloaded_evals: int = 0  # eval items served worker-side
     accel_discards: int = 0  # fires dropped by the commit staleness guard
+    # Fires whose begin->commit window crossed a membership change and
+    # committed restricted to the blocks whose ownership did not move
+    # (chaos scenarios composed with accel_eval="worker").
+    accel_partial_commits: int = 0
     # Fraction of the run the coordinator spent doing its own work (apply,
     # inline fires/records, commit bookkeeping) — measured on the real
     # backends, modeled on the virtual eval-cost loop, 0.0 otherwise.

@@ -67,7 +67,8 @@ class VirtualTimeExecutor(Executor):
 
     name = "virtual"
 
-    def run(self, problem: FixedPointProblem, cfg: RunConfig) -> RunResult:
+    def _execute(self, session) -> RunResult:
+        problem, cfg = session.problem, session.cfg
         if cfg.mode not in ("sync", "async"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
         coord = Coordinator(problem, cfg)

@@ -1,1 +1,1 @@
-"""Launchers: mesh, dry-run, train/serve drivers, roofline."""
+"""Launchers: mesh, dry-run, train / LM-serve / solver-serve drivers, roofline."""

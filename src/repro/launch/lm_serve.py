@@ -1,6 +1,6 @@
-"""Serving launcher: batched prefill + greedy decode on a (reduced) arch.
+"""LM-serving launcher: batched prefill + greedy decode on a (reduced) arch.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --reduced \
+  PYTHONPATH=src python -m repro.launch.lm_serve --arch gemma2_2b --reduced \
       --batch 4 --prompt-len 24 --gen 16
 """
 

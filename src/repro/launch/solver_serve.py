@@ -1,0 +1,99 @@
+"""Solver-service launcher: submit N solve requests, print a latency table.
+
+  PYTHONPATH=src python -m repro.launch.solver_serve \
+      --executor process --workers 2 --requests 8 --tenants a,b \
+      --max-active 2
+
+Drives :class:`repro.serve.SolverService` against a Jacobi fixed-point
+problem: every request is one full solve; same-payload requests share one
+warm worker pool (zero respawns on the process/ray backends).  The table
+shows per-request queueing delay vs service time, then aggregate
+throughput and the per-tenant served counts.
+"""
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="multiplex solve requests over a SolverService")
+    ap.add_argument("--executor", default="virtual",
+                    choices=["virtual", "thread", "process", "ray"])
+    ap.add_argument("--workers", type=int, default=2,
+                    help="n_workers per solve")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tenants", default="default",
+                    help="comma-separated tenant names, round-robined")
+    ap.add_argument("--weights", default="",
+                    help="tenant=weight pairs, comma-separated")
+    ap.add_argument("--max-active", type=int, default=2,
+                    help="concurrently running solves")
+    ap.add_argument("--families", type=int, default=1,
+                    help="distinct problem payloads (seed-varied)")
+    ap.add_argument("--grid", type=int, default=24)
+    ap.add_argument("--sweeps", type=int, default=2)
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--max-updates", type=int, default=20000)
+    args = ap.parse_args()
+
+    from repro.core.engine import RunConfig, shutdown_pools
+    from repro.problems.jacobi import JacobiProblem
+    from repro.serve import ServiceConfig, SolverService
+
+    tenants = [t.strip() for t in args.tenants.split(",") if t.strip()]
+    weights = {}
+    for pair in args.weights.split(","):
+        if pair.strip():
+            t, w = pair.split("=")
+            weights[t.strip()] = float(w)
+    problems = [
+        JacobiProblem(grid=args.grid, sweeps=args.sweeps, seed=f,
+                      backend="np")
+        for f in range(max(1, args.families))
+    ]
+    cfg = RunConfig(
+        mode="async", executor=args.executor, n_workers=args.workers,
+        tol=args.tol, max_updates=args.max_updates,
+        compute_time=1e-3 if args.executor == "virtual" else None)
+
+    t0 = time.perf_counter()
+    with SolverService(ServiceConfig(max_active=args.max_active,
+                                     weights=weights)) as svc:
+        tickets = [
+            svc.submit(problems[i % len(problems)], cfg,
+                       tenant=tenants[i % len(tenants)])
+            for i in range(args.requests)
+        ]
+        results = [t.result() for t in tickets]
+        stats = svc.stats()
+    wall = time.perf_counter() - t0
+
+    print(f"{'req':>4} {'tenant':>8} {'wait_ms':>9} {'service_ms':>11} "
+          f"{'total_ms':>9} {'converged':>9} {'wu':>7}")
+    for i, (tk, r) in enumerate(zip(tickets, results)):
+        print(f"{i:>4} {tk.tenant:>8} {tk.wait_s * 1e3:>9.1f} "
+              f"{(tk.total_s - tk.wait_s) * 1e3:>11.1f} "
+              f"{tk.total_s * 1e3:>9.1f} {str(r.converged):>9} "
+              f"{r.worker_updates:>7}")
+    waits = sorted(tk.wait_s for tk in tickets)
+    totals = sorted(tk.total_s for tk in tickets)
+    p95 = totals[min(len(totals) - 1, int(0.95 * len(totals)))]
+    print(f"\n{args.requests} requests in {wall:.2f}s "
+          f"({args.requests / wall:.2f} req/s) on executor="
+          f"{args.executor} max_active={args.max_active}")
+    print(f"latency total: median {totals[len(totals) // 2] * 1e3:.1f} ms, "
+          f"p95 {p95 * 1e3:.1f} ms; "
+          f"median queueing {waits[len(waits) // 2] * 1e3:.1f} ms")
+    print("served by tenant:", stats["served"])
+    if args.executor == "process":
+        from repro.core.engine import pool_stats
+
+        for key, st in pool_stats().items():
+            print(f"pool {key[0][:12]}… workers={st['n_workers']} "
+                  f"runs_served={st['runs_served']} pids={st['pids']}")
+        shutdown_pools()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Solver-as-a-service layer: fair scheduling, admission, multiplexing.
+
+``repro.serve`` fronts the session engine with a request queue.  Pinned
+here:
+
+- ``FairScheduler`` start-time fair queuing: single-tenant FIFO, weighted
+  drain ratios under contention, no banked credit for idle tenants, the
+  bounded family-affinity detour (and that slack=0 disables it);
+- ``SolverService`` correctness: multiplexed results bit-identical to
+  solo runs on the deterministic virtual backend;
+- the control surface: bounded admission (``AdmissionError``),
+  cancellation of queued requests, failure delivery through tickets,
+  ``drain``/``close`` semantics and submit-after-close;
+- ticket timing stamps (queued -> dispatched -> finished).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RunConfig, run_fixed_point
+from repro.serve import (
+    AdmissionError,
+    FairScheduler,
+    QueuedRequest,
+    ServiceConfig,
+    SolverService,
+    request_family,
+)
+from conftest import ToyContraction
+
+
+def _req(tenant, family="f", cost=1.0):
+    return QueuedRequest(tenant, family, cost, ticket=None)
+
+
+def _virt_cfg(**kw):
+    # compute_time pinned: None measures real kernel time and would break
+    # the bit-identity comparison between multiplexed and solo runs.
+    kw.setdefault("executor", "virtual")
+    kw.setdefault("mode", "async")
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("tol", 1e-6)
+    kw.setdefault("max_updates", 2000)
+    kw.setdefault("compute_time", 1e-3)
+    kw.setdefault("seed", 0)
+    return RunConfig(**kw)
+
+
+class SlowToy(ToyContraction):
+    """Each evaluation sleeps, so a dispatched request occupies its
+    dispatcher long enough for queue-shape tests to be deterministic."""
+
+    def __init__(self, sleep_s=0.02, **kw):
+        super().__init__(**kw)
+        self.sleep_s = sleep_s
+
+    def block_update(self, x, indices):
+        time.sleep(self.sleep_s)
+        return super().block_update(x, indices)
+
+
+def _slow_cfg():
+    return _virt_cfg(tol=0.0, max_updates=8, n_workers=1)
+
+
+# --------------------------------------------------------------------- #
+class TestFairScheduler:
+    def test_single_tenant_is_fifo(self):
+        s = FairScheduler()
+        reqs = [_req("t") for _ in range(5)]
+        for r in reqs:
+            s.push(r)
+        assert [s.pop() for _ in range(5)] == reqs
+        assert s.pop() is None
+
+    def test_weighted_drain_ratio(self):
+        s = FairScheduler(weights={"a": 3.0, "b": 1.0})
+        for _ in range(6):
+            s.push(_req("a"))
+            s.push(_req("b"))
+        first_four = [s.pop().tenant for _ in range(4)]
+        assert first_four.count("a") == 3
+        assert first_four.count("b") == 1
+
+    def test_idle_tenant_banks_no_credit(self):
+        s = FairScheduler()
+        for _ in range(4):
+            s.push(_req("busy"))
+        for _ in range(4):
+            s.pop()
+        # "idle" arrives late; its start tag is the current vtime, not 0 —
+        # it may not leapfrog work the busy tenant queued afterwards.
+        s.push(_req("busy"))
+        s.push(_req("idle"))
+        assert s.pop().tenant == "busy"
+
+    def test_affinity_detour_within_slack(self):
+        s = FairScheduler(affinity_slack=10.0)
+        warm, cold = _req("t", family="warm"), _req("t", family="cold")
+        s.push(cold)
+        s.push(warm)
+        assert s.pop(prefer_family="warm") is warm
+        assert s.pop(prefer_family="warm") is cold
+
+    def test_zero_slack_disables_detour(self):
+        s = FairScheduler(affinity_slack=0.0)
+        cold, warm = _req("t", family="cold"), _req("t", family="warm")
+        s.push(cold)
+        s.push(warm)
+        assert s.pop(prefer_family="warm") is cold
+
+    def test_remove_withdraws_pending(self):
+        s = FairScheduler()
+        r = _req("t")
+        s.push(r)
+        assert s.remove(r) is True
+        assert s.remove(r) is False
+        assert len(s) == 0
+
+    def test_invalid_weights_raise(self):
+        with pytest.raises(ValueError):
+            FairScheduler(weights={"t": 0.0})
+        with pytest.raises(ValueError):
+            FairScheduler(default_weight=-1.0)
+
+    def test_pending_by_tenant(self):
+        s = FairScheduler()
+        s.push(_req("a"))
+        s.push(_req("a"))
+        s.push(_req("b"))
+        assert s.pending_by_tenant() == {"a": 2, "b": 1}
+
+
+# --------------------------------------------------------------------- #
+class TestSolverService:
+    def test_multiplexed_results_match_solo(self):
+        problems = [ToyContraction(n=24, seed=k) for k in range(3)]
+        cfg = _virt_cfg()
+        solo = [run_fixed_point(p, cfg) for p in problems]
+        with SolverService(ServiceConfig(max_active=2)) as svc:
+            tickets = [svc.submit(p, cfg, tenant=f"t{k}")
+                       for k, p in enumerate(problems)]
+            results = [t.result(timeout=60.0) for t in tickets]
+        for got, want in zip(results, solo):
+            assert np.array_equal(got.x, want.x)
+            assert got.history == want.history
+            assert got.worker_updates == want.worker_updates
+
+    def test_ticket_timing_stamps(self):
+        with SolverService(ServiceConfig(max_active=1)) as svc:
+            t = svc.submit(ToyContraction(n=16), _virt_cfg())
+            t.result(timeout=60.0)
+        assert t.done()
+        assert t.queued_s <= t.dispatched_s <= t.finished_s
+        assert t.wait_s >= 0.0 and t.total_s >= t.wait_s
+
+    def test_admission_bound(self):
+        svc = SolverService(ServiceConfig(max_active=1, max_pending=1))
+        try:
+            first = svc.submit(SlowToy(n=8), _slow_cfg())
+            # Admission is judged against the *pending* queue, so wait for
+            # the dispatcher to take the first request before filling it.
+            while first.dispatched_s is None:
+                time.sleep(0.001)
+            svc.submit(SlowToy(n=8), _slow_cfg())  # fills the queue
+            with pytest.raises(AdmissionError):
+                svc.submit(SlowToy(n=8), _slow_cfg())
+            assert svc.stats()["rejected"] == 1
+        finally:
+            svc.close()
+
+    def test_cancel_pending_request(self):
+        svc = SolverService(ServiceConfig(max_active=1))
+        try:
+            first = svc.submit(SlowToy(n=8), _slow_cfg())
+            while first.dispatched_s is None:
+                time.sleep(0.001)
+            queued = svc.submit(SlowToy(n=8), _slow_cfg())
+            assert queued.cancel() is True
+            with pytest.raises(RuntimeError, match="cancelled"):
+                queued.result(timeout=1.0)
+            assert first.cancel() is False  # already dispatched
+            first.result(timeout=60.0)
+        finally:
+            svc.close()
+
+    def test_failure_delivered_through_ticket(self):
+        class Exploding(ToyContraction):
+            def full_map(self, x):
+                raise ValueError("boom")
+
+        with SolverService(ServiceConfig(max_active=1)) as svc:
+            ok = svc.submit(ToyContraction(n=16), _virt_cfg())
+            bad = svc.submit(Exploding(n=16), _virt_cfg())
+            with pytest.raises(ValueError, match="boom"):
+                bad.result(timeout=60.0)
+            ok.result(timeout=60.0)  # failure did not poison the service
+            stats = svc.stats()
+        assert stats["failed"] == 1
+        assert sum(stats["served"].values()) == 1
+
+    def test_weighted_dispatch_order(self):
+        # One dispatcher, queue built while it serves a slow first request:
+        # the weight-3 tenant must get 3 of the next 4 slots.
+        svc = SolverService(ServiceConfig(
+            max_active=1, weights={"a": 3.0, "b": 1.0},
+            family_affinity=False))
+        try:
+            first = svc.submit(SlowToy(n=8), _slow_cfg(), tenant="warmup")
+            while first.dispatched_s is None:
+                time.sleep(0.001)
+            tickets = []
+            for _ in range(4):
+                tickets.append(svc.submit(SlowToy(n=8), _slow_cfg(),
+                                          tenant="a"))
+                tickets.append(svc.submit(SlowToy(n=8), _slow_cfg(),
+                                          tenant="b"))
+            for t in tickets:
+                t.result(timeout=60.0)
+        finally:
+            svc.close()
+        order = sorted(tickets, key=lambda t: t.dispatched_s)
+        prefix = [t.tenant for t in order[:4]]
+        assert prefix.count("a") == 3 and prefix.count("b") == 1
+
+    def test_drain_and_close_semantics(self):
+        svc = SolverService(ServiceConfig(max_active=1))
+        t = svc.submit(ToyContraction(n=16), _virt_cfg())
+        assert svc.drain(timeout=60.0) is True
+        assert t.done()
+        svc.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit(ToyContraction(n=16), _virt_cfg())
+
+    def test_close_without_drain_cancels_pending(self):
+        svc = SolverService(ServiceConfig(max_active=1))
+        first = svc.submit(SlowToy(n=8), _slow_cfg())
+        while first.dispatched_s is None:
+            time.sleep(0.001)
+        queued = svc.submit(SlowToy(n=8), _slow_cfg())
+        svc.close(drain=False)
+        with pytest.raises(RuntimeError, match="cancelled"):
+            queued.result(timeout=1.0)
+        first.result(timeout=60.0)  # running solves always complete
+
+    def test_request_family_matches_pool_keying(self):
+        p = ToyContraction(n=16, seed=0)
+        cfg = _virt_cfg()
+        assert request_family(p, cfg) == request_family(p, cfg)
+        # Different worker counts cannot share a pool, so families differ.
+        assert (request_family(p, cfg)
+                != request_family(p, _virt_cfg(n_workers=2)))
+
+    def test_service_config_validation(self):
+        with pytest.raises(ValueError):
+            ServiceConfig(max_active=0)
+        with pytest.raises(ValueError):
+            ServiceConfig(max_pending=0)

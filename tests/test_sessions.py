@@ -1,0 +1,264 @@
+"""Solve-session surface: lifecycle, reentrancy, and pool-lease pinning.
+
+The PR-6 refactor split per-run state out of the executors into
+``SolveSession`` (``repro.core.engine.session``) so backends are
+reentrant, and gave the pool registry refcounted leases so concurrent
+same-family sessions share one warm pool that can never be torn down
+mid-request.  Pinned here:
+
+- ``run()`` and ``submit(...).execute()`` are the same code path —
+  bit-identical results on the deterministic virtual backend;
+- the session lifecycle contract: execute-exactly-once, cancel before
+  start, failure delivery through ``result()``/``exception()``;
+- reentrancy: K interleaved sessions (mixed problems, mixed sync/async)
+  return bit-identical iterates and accounting to sequential solo runs —
+  per-request ``RunResult``s never cross-contaminate;
+- ``PoolRegistry`` lease semantics with dummy pools: LRU overflow and
+  ``dispose()`` defer teardown while a lease is outstanding.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RunConfig, run_fixed_point
+from repro.core.engine import (
+    SessionState,
+    SolveSession,
+    get_executor,
+    submit_fixed_point,
+)
+from repro.core.engine.poolreg import PoolRegistry
+from conftest import ToyContraction
+
+
+def _virt_cfg(**kw):
+    # compute_time pinned: the default (None) measures real kernel time,
+    # which varies run-to-run and would break bit-identity comparisons.
+    kw.setdefault("executor", "virtual")
+    kw.setdefault("mode", "async")
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("tol", 1e-6)
+    kw.setdefault("max_updates", 2000)
+    kw.setdefault("compute_time", 1e-3)
+    kw.setdefault("seed", 0)
+    return RunConfig(**kw)
+
+
+class Boom(RuntimeError):
+    pass
+
+
+class ExplodingToy(ToyContraction):
+    def full_map(self, x):
+        raise Boom("evaluation exploded")
+
+
+# --------------------------------------------------------------------- #
+class TestSessionLifecycle:
+    def test_run_equals_submit_execute(self):
+        p = ToyContraction(n=24, seed=3)
+        cfg = _virt_cfg()
+        solo = run_fixed_point(p, cfg)
+        session = get_executor("virtual").submit(p, cfg, start=False)
+        assert session.state == SessionState.PENDING
+        via_session = session.execute()
+        assert np.array_equal(solo.x, via_session.x)
+        assert solo.history == via_session.history
+        assert solo.worker_updates == via_session.worker_updates
+        assert session.state == SessionState.DONE
+
+    def test_submit_fixed_point_starts_a_thread(self):
+        p = ToyContraction(n=16, seed=1)
+        session = submit_fixed_point(p, _virt_cfg())
+        assert isinstance(session, SolveSession)
+        res = session.result(timeout=30.0)
+        assert res.converged
+        assert session.done() and session.state == SessionState.DONE
+        assert session.exception() is None
+        assert session.elapsed_s is not None and session.elapsed_s >= 0.0
+
+    def test_sessions_execute_exactly_once(self):
+        p = ToyContraction(n=16, seed=1)
+        session = get_executor("virtual").submit(p, _virt_cfg(), start=False)
+        session.execute()
+        with pytest.raises(RuntimeError, match="exactly once"):
+            session.execute()
+        with pytest.raises(RuntimeError, match="exactly once"):
+            session.start()
+
+    def test_cancel_before_start(self):
+        p = ToyContraction(n=16, seed=1)
+        session = get_executor("virtual").submit(p, _virt_cfg(), start=False)
+        assert session.cancel() is True
+        assert session.state == SessionState.CANCELLED
+        assert session.done()
+        with pytest.raises(RuntimeError, match="cancelled"):
+            session.result()
+        with pytest.raises(RuntimeError, match="exactly once"):
+            session.execute()
+
+    def test_cancel_after_finish_is_refused(self):
+        p = ToyContraction(n=16, seed=1)
+        session = get_executor("virtual").submit(p, _virt_cfg(), start=False)
+        session.execute()
+        assert session.cancel() is False
+        assert session.state == SessionState.DONE
+
+    def test_failure_is_stored_and_reraised(self):
+        session = submit_fixed_point(ExplodingToy(n=16), _virt_cfg())
+        assert isinstance(session.exception(timeout=30.0), Boom)
+        assert session.state == SessionState.FAILED
+        with pytest.raises(Boom):
+            session.result()
+
+    def test_result_timeout(self):
+        p = ToyContraction(n=16, seed=1)
+        session = get_executor("virtual").submit(p, _virt_cfg(), start=False)
+        with pytest.raises(TimeoutError):
+            session.result(timeout=0.01)
+        session.execute()  # leave no dangling pending session
+
+    def test_session_ids_are_unique(self):
+        p = ToyContraction(n=8, seed=1)
+        ex = get_executor("virtual")
+        ids = [ex.submit(p, _virt_cfg(), start=False).session_id
+               for _ in range(3)]
+        assert len(set(ids)) == 3
+        assert ids == sorted(ids)
+
+
+# --------------------------------------------------------------------- #
+class TestReentrancy:
+    """Interleaved sessions == sequential solo runs, bit for bit."""
+
+    def test_virtual_interleaved_sessions_match_solo(self):
+        # Mixed problems and modes through ONE executor instance.
+        jobs = [
+            (ToyContraction(n=24, seed=0), _virt_cfg(mode="async")),
+            (ToyContraction(n=24, seed=7), _virt_cfg(mode="sync")),
+            (ToyContraction(n=40, seed=2),
+             _virt_cfg(mode="async", n_workers=2, max_updates=150)),
+        ]
+        solo = [run_fixed_point(p, cfg) for p, cfg in jobs]
+        ex = get_executor("virtual")
+        sessions = [ex.submit(p, cfg, start=False) for p, cfg in jobs]
+        threads = [threading.Thread(target=s.execute) for s in sessions]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+        for s, r in zip(sessions, solo):
+            got = s.result(timeout=1.0)
+            assert np.array_equal(got.x, r.x)
+            assert got.history == r.history
+            assert got.worker_updates == r.worker_updates
+            assert got.converged == r.converged
+
+    def test_thread_interleaved_sessions_match_solo(self):
+        # One worker => a deterministic apply order even on wall clock.
+        p0, p1 = ToyContraction(n=24, seed=4), ToyContraction(n=24, seed=9)
+        cfg = RunConfig(mode="async", executor="thread", n_workers=1,
+                        tol=0.0, max_updates=60, seed=0)
+        solo = [run_fixed_point(p, cfg) for p in (p0, p1)]
+        sessions = [get_executor("thread").submit(p, cfg) for p in (p0, p1)]
+        for s, r in zip(sessions, solo):
+            got = s.result(timeout=60.0)
+            assert np.array_equal(got.x, r.x)
+            assert got.worker_updates == r.worker_updates
+
+    def test_accounting_never_cross_contaminates(self):
+        p = ToyContraction(n=24, seed=5)
+        cfg_a = _virt_cfg(tol=0.0, max_updates=100)
+        cfg_b = _virt_cfg(tol=0.0, max_updates=37)
+        sa = submit_fixed_point(p, cfg_a)
+        sb = submit_fixed_point(p, cfg_b)
+        ra, rb = sa.result(timeout=60.0), sb.result(timeout=60.0)
+        assert ra.worker_updates == 100
+        assert rb.worker_updates == 37
+
+
+# --------------------------------------------------------------------- #
+class DummyPool:
+    def __init__(self, name="pool"):
+        self.name = name
+        self.closed = False
+        self.is_healthy = True
+
+    def healthy(self):
+        return self.is_healthy
+
+    def close(self):
+        self.closed = True
+
+
+class TestPoolLeases:
+    def test_acquire_shares_one_pool_and_refcounts(self):
+        reg = PoolRegistry(max_pools=2)
+        built = []
+
+        def factory():
+            built.append(DummyPool())
+            return built[-1]
+
+        l1 = reg.acquire("k", factory)
+        l2 = reg.acquire("k", factory)
+        assert len(built) == 1 and l1.pool is l2.pool
+        assert l1.run_lock is l2.run_lock
+        assert reg.lease_count("k") == 2
+        l1.release()
+        l1.release()  # idempotent
+        assert reg.lease_count("k") == 1
+        l2.release()
+        assert reg.lease_count("k") == 0
+        assert not built[0].closed  # still cached, just unleased
+
+    def test_lru_overflow_never_closes_a_leased_pool(self):
+        reg = PoolRegistry(max_pools=1)
+        a, b = DummyPool("a"), DummyPool("b")
+        lease = reg.acquire("a", lambda: a)
+        reg.get("b", lambda: b)  # overflow: "a" is LRU but leased
+        assert not a.closed
+        assert lease.pool is a
+        lease.release()  # capacity re-established as leases drain
+        assert a.closed and not b.closed
+        assert len(reg) == 1
+
+    def test_dispose_defers_close_until_release(self):
+        reg = PoolRegistry(max_pools=4)
+        a = DummyPool("a")
+        lease = reg.acquire("k", lambda: a)
+        reg.dispose("k")
+        assert not a.closed  # still serving the lease
+        replacement = DummyPool("a2")
+        l2 = reg.acquire("k", lambda: replacement)
+        assert l2.pool is replacement  # retired pool unfindable
+        lease.release()
+        assert a.closed and not replacement.closed
+        l2.release()
+
+    def test_unhealthy_pool_replaced_and_closed_when_unleased(self):
+        reg = PoolRegistry(max_pools=4)
+        sick = DummyPool("sick")
+        reg.acquire("k", lambda: sick).release()
+        sick.is_healthy = False
+        fresh = DummyPool("fresh")
+        lease = reg.acquire("k", lambda: fresh)
+        assert sick.closed and lease.pool is fresh
+        lease.release()
+
+    def test_lease_context_manager(self):
+        reg = PoolRegistry(max_pools=4)
+        with reg.acquire("k", DummyPool) as lease:
+            assert reg.lease_count("k") == 1
+            assert not lease.pool.closed
+        assert reg.lease_count("k") == 0
+
+    def test_shutdown_closes_even_leased_pools(self):
+        reg = PoolRegistry(max_pools=4)
+        lease = reg.acquire("k", DummyPool)
+        pool = lease.pool
+        reg.shutdown()
+        assert pool.closed  # atexit path: fleets die regardless
+        lease.release()  # must not raise after shutdown

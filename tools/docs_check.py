@@ -17,6 +17,13 @@ Fails when:
 - ``BENCH_offload.json`` (the evaluation-pipeline offload trajectory,
   also rewritten by ``make perf``) is missing, lacks its gate spec, or
   has a case without both placements' measurements and their ratio;
+- ``BENCH_serve.json`` (the solver-service benchmark, rewritten by
+  ``make perf``) is missing, lacks its gate spec (case /
+  min_throughput_ratio / zero_respawn), or its gate case lacks the
+  serialized and concurrent measurements, their ratio, or the
+  shared-pool zero-respawn record;
+- the service-knob table in README.md (after ``<!-- service-table -->``)
+  disagrees with the fields of ``repro.serve.ServiceConfig``;
 - ``BENCH_chaos.json`` (the chaos-scenario benchmark, rewritten by
   ``benchmarks/chaos_scenarios.py``) is missing, lacks its gate spec,
   covers a different scenario set than the registered chaos library
@@ -43,6 +50,7 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 TABLE_MARKER = "<!-- executor-table -->"
 SCENARIO_MARKER = "<!-- scenario-table -->"
+SERVICE_MARKER = "<!-- service-table -->"
 
 
 def _slug(heading: str) -> str:
@@ -151,6 +159,63 @@ def _marker_table_names(text: str, marker: str) -> set:
     return names
 
 
+def check_serve_trajectory(errors: list) -> None:
+    """BENCH_serve.json must exist and keep its documented shape."""
+    path = ROOT / "BENCH_serve.json"
+    if not path.exists():
+        errors.append("BENCH_serve.json missing (run `make perf`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_serve.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("case", "min_throughput_ratio", "zero_respawn"):
+        if key not in gate:
+            errors.append(f"BENCH_serve.json: missing gate.{key}")
+    cur = data.get("current", {})
+    if not cur:
+        errors.append("BENCH_serve.json: empty 'current' section")
+    case_name = gate.get("case")
+    if case_name is not None:
+        case = cur.get(case_name)
+        if case is None:
+            errors.append(
+                f"BENCH_serve.json: gate case {case_name!r} absent from "
+                "'current'")
+        else:
+            for arm in ("serialized", "concurrent"):
+                if "req_per_sec" not in case.get(arm, {}):
+                    errors.append(
+                        f"BENCH_serve.json: {case_name} missing "
+                        f"{arm}.req_per_sec")
+            if "throughput_ratio" not in case:
+                errors.append(
+                    f"BENCH_serve.json: {case_name} missing throughput_ratio")
+            if "zero_respawn" not in case.get("shared_pool", {}):
+                errors.append(
+                    f"BENCH_serve.json: {case_name} missing "
+                    "shared_pool.zero_respawn")
+
+
+def check_service_table(errors: list) -> None:
+    from dataclasses import fields
+
+    from repro.serve import ServiceConfig
+
+    text = (ROOT / "README.md").read_text()
+    if SERVICE_MARKER not in text:
+        errors.append(f"README.md: missing {SERVICE_MARKER} marker")
+        return
+    names = _marker_table_names(text, SERVICE_MARKER)
+    knobs = {f.name for f in fields(ServiceConfig)}
+    if names != knobs:
+        errors.append(
+            "README.md service table does not match ServiceConfig fields: "
+            f"table={sorted(names)} config={sorted(knobs)}")
+
+
 def check_chaos_trajectory(errors: list) -> None:
     """BENCH_chaos.json must exist, keep its shape, and cover exactly the
     registered scenario library."""
@@ -229,8 +294,10 @@ def main() -> None:
     n_links = check_links(errors)
     check_executor_table(errors)
     check_scenario_table(errors)
+    check_service_table(errors)
     check_bench_trajectory(errors)
     check_offload_trajectory(errors)
+    check_serve_trajectory(errors)
     check_chaos_trajectory(errors)
     if errors:
         print("docs-check: FAIL")
@@ -238,9 +305,9 @@ def main() -> None:
             print(f"  - {e}")
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
-          "and anchors, executor + scenario tables match their registries, "
-          "BENCH_hotpath.json / BENCH_offload.json / BENCH_chaos.json "
-          "schemas intact)")
+          "and anchors, executor + scenario + service tables match their "
+          "registries, BENCH_hotpath.json / BENCH_offload.json / "
+          "BENCH_serve.json / BENCH_chaos.json schemas intact)")
 
 
 if __name__ == "__main__":
