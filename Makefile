@@ -7,6 +7,11 @@
 #                     resolve, and the README executor table matches the
 #                     engine registry (tools/docs_check.py).
 # `make perf`       — coordinator hot-path microbenchmark + regression gate
+#                     (see below; ends with the autoscale cost gate:
+#                     benchmarks/autoscale.py --check — target_staleness
+#                     must Pareto-dominate the best static membership by
+#                     >=1.3x cost-normalized time-to-solution on spot_wave
+#                     on the thread backend.  Rewrites BENCH_autoscale.json.)
 #                     (benchmarks/perf_hotpath.py): >=2x arrivals/sec at
 #                     Jacobi g=512 and >=5x faster Anderson fires vs the
 #                     committed pre-PR baseline, warm process pool must
@@ -26,6 +31,11 @@
 #                     only): multiplexed solves stay bit-identical to solo
 #                     runs and weighted-fair dispatch honors tenant weights
 #                     (benchmarks/solver_serve.py --smoke).
+# `make autoscale-smoke` — fast closed-loop autoscaling sanity (~10 s,
+#                     virtual backend only): every registered policy runs
+#                     under a scripted scenario, decision logs reproduce
+#                     bit-exactly, membership accounting balances
+#                     (benchmarks/autoscale.py --virtual-only).
 # `make chaos-smoke`— fast chaos-scenario sanity: every scenario in the
 #                     registered library (spot_wave, rolling_restart,
 #                     bimodal_stragglers, flash_crowd) runs sync + async on
@@ -34,7 +44,7 @@
 #                     --virtual-only; the measured real-backend sweep +
 #                     BENCH_chaos.json rewrite is `make chaos-bench`).
 # `make smoke`      — docs-check + perf gate + chaos-smoke + serve-smoke
-#                     + ~2 min
+#                     + autoscale-smoke + ~2 min
 #                     real-concurrency benchmark: sync-vs-async under a
 #                     100 ms straggler measured on the thread AND process
 #                     backends (asserts the paper's >1.5x async speedup
@@ -44,7 +54,8 @@
 
 PYTHON ?= python
 
-.PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke
+.PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke \
+	autoscale-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -56,6 +67,7 @@ perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.perf_hotpath --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.accel_offload --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --check
+	PYTHONPATH=src $(PYTHON) -m benchmarks.autoscale --check
 
 serve-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --smoke
@@ -66,7 +78,10 @@ chaos-smoke:
 chaos-bench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.chaos_scenarios --check
 
-smoke: docs-check perf chaos-smoke serve-smoke
+autoscale-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.autoscale --virtual-only
+
+smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

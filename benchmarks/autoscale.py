@@ -1,0 +1,323 @@
+"""Closed-loop autoscaling benchmark + gate (BENCH_autoscale.json).
+
+Pits the registered autoscaling policies (``repro.autoscale``) against
+static memberships on the chaos scenarios the paper's "flexible
+infrastructure" story cares about, on a cost model of
+
+    cost = worker_seconds x time_to_solution            (run_cost)
+
+i.e. provisioned capacity times how long you waited — a policy wins only
+by matching the static fleet's time-to-solution with fewer provisioned
+worker-seconds (or beating it outright).
+
+Physics of the testbed: every run adds a per-update worker-side delay
+(``DELAY_MEAN``), so on this machine's core count the compute throughput
+saturates at roughly ``1 + delay/compute`` workers — members beyond that
+add worker-seconds but no arrival rate.  A static fleet must be sized for
+the worst phase of the scenario; the ``target_staleness`` controller
+instead holds the observed p95 staleness at a setpoint, which (a) sheds
+over-provisioned members in calm phases, (b) recruits spare fleet ids when
+a preemption wave guts the membership, and (c) evicts a scripted straggler
+outright (lowest-service-fraction shedding), migrating its blocks to fast
+survivors.
+
+- the **thread** rows are measured wall-clock — the gated real backend;
+- the **virtual** rows run the same arms against virtual time calibrated
+  with this machine's measured per-update compute: a *predictor*, reported
+  alongside but never gated — virtual time has no core-count saturation
+  (every member computes concurrently), so it systematically flatters
+  large static fleets.
+
+``--check`` (the ``make perf`` gate) asserts ``target_staleness``
+Pareto-dominates the best static membership by cost ratio
+``best_static_cost / controller_cost`` of >= 1.3x on ``spot_wave`` and
+>= 1.0x on ``bimodal_stragglers``, measured on the thread backend.
+``REPRO_PERF_SKIP_GATE=1`` records without gating.
+
+``--virtual-only`` is the fast CI path (``make autoscale-smoke``): every
+registered policy runs on the virtual backend under a scripted scenario,
+its decision log is bit-reproducible across a re-run (the determinism the
+policy goldens in tests/test_autoscale.py pin), and membership accounting
+balances — no real-backend wall-clock, no JSON rewrite.
+
+Run:  PYTHONPATH=src python -m benchmarks.autoscale
+          [--check] [--virtual-only] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from repro.autoscale import get_policy, policy_library, run_cost
+from repro.chaos import get_scenario
+from repro.core import (
+    FaultProfile,
+    RunConfig,
+    available_executors,
+    measure_compute,
+    run_fixed_point,
+    shutdown_pools,
+)
+from repro.problems import JacobiProblem
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_autoscale.json"
+
+P = 8  # fleet size (scenarios and spare capacity scale with it)
+TOL = 1e-7
+DELAY_MEAN = 8e-4  # worker-side per-update delay => saturation below P
+#: Library scenario timings are authored for a run of roughly this length;
+#: per backend the script is rescaled by (measured baseline wall / this),
+#: so each backend meets the wave at the same relative phase of its run.
+NOMINAL_HORIZON_S = 2.0
+
+STATIC_SIZES = (4, 6, 8)
+CONTROLLER = ("target_staleness", {"target": 4.0, "initial_size": 4})
+EXTRA_ARMS = (("drain_ahead", {"lookahead": 0.3}),)
+
+GATE_SCENARIOS = ("spot_wave", "bimodal_stragglers")
+GATE_MIN_RATIO = {"spot_wave": 1.3, "bimodal_stragglers": 1.0}
+GATE_BACKEND = "thread"
+
+
+def _problem(fast: bool = False) -> JacobiProblem:
+    return JacobiProblem(grid=12 if fast else 16, sweeps=10, seed=0)
+
+
+def _cfg(executor: str, scenario, controller, **kw) -> RunConfig:
+    return RunConfig(mode="async", executor=executor, n_workers=P, tol=TOL,
+                     max_updates=10**6, max_wall=120.0, seed=0,
+                     faults=FaultProfile(delay_mean=DELAY_MEAN),
+                     scenario=scenario, controller=controller, **kw)
+
+
+def _arm_stats(res, ctl) -> dict:
+    return {
+        "converged": res.converged,
+        "worker_updates": res.worker_updates,
+        "wall_time": res.wall_time,
+        "worker_seconds": res.worker_seconds,
+        "cost": run_cost(res),
+        "controller_actions": res.controller_actions,
+        "preemptions": res.preemptions,
+        "joins": res.joins,
+        "mean_staleness": res.mean_staleness,
+        "decisions": len(ctl.decision_log),
+    }
+
+
+def _arms():
+    """(arm name, policy name, kwargs) rows; fresh controllers per run."""
+    arms = [(f"static_{s}", "static", {"size": s}) for s in STATIC_SIZES]
+    arms.append((CONTROLLER[0], CONTROLLER[0], dict(CONTROLLER[1])))
+    arms += [(name, name, dict(kw)) for name, kw in EXTRA_ARMS]
+    return arms
+
+
+def measure(fast: bool = False) -> dict:
+    prob = _problem(fast)
+    compute = measure_compute(prob, prob.default_blocks(P))
+    backends = []
+    if GATE_BACKEND in available_executors():
+        backends.append((GATE_BACKEND, {}))
+    backends.append(("virtual", {"compute_time": compute}))
+    out: dict = {"compute_time": compute, "delay_mean": DELAY_MEAN,
+                 "scenarios": {}}
+    try:
+        # Baseline (full static fleet, no scenario) -> per-backend scale.
+        scales = {}
+        for backend, kw in backends:
+            base = run_fixed_point(prob, _cfg(
+                backend, None, get_policy("static", size=P), **kw))
+            scales[backend] = max(base.wall_time, 1e-3) / NOMINAL_HORIZON_S
+        for scen in GATE_SCENARIOS:
+            entry: dict = {}
+            for backend, kw in backends:
+                scale = scales[backend]
+                arms: dict = {}
+                for arm_name, pol, pkw in _arms():
+                    ctl = get_policy(pol, **pkw)
+                    r = run_fixed_point(prob, _cfg(
+                        backend, get_scenario(scen, P).scaled(scale),
+                        ctl, **kw))
+                    arms[arm_name] = _arm_stats(r, ctl)
+                best_static = min(
+                    (a for a in arms if a.startswith("static_")),
+                    key=lambda a: arms[a]["cost"])
+                ratio = (arms[best_static]["cost"]
+                         / max(arms[CONTROLLER[0]]["cost"], 1e-12))
+                entry[backend] = {
+                    "arms": arms,
+                    "best_static": best_static,
+                    "cost_ratio": ratio,
+                    "scenario_scale": scale,
+                }
+            out["scenarios"][scen] = entry
+    finally:
+        shutdown_pools()
+    return out
+
+
+def check(cur: dict) -> list:
+    """Acceptance gate; returns failure strings."""
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    for scen, min_ratio in GATE_MIN_RATIO.items():
+        entry = cur.get("scenarios", {}).get(scen, {}).get(GATE_BACKEND)
+        if entry is None:
+            fails.append(f"{scen}: gate backend {GATE_BACKEND!r} not "
+                         "measured")
+            continue
+        if entry["cost_ratio"] < min_ratio:
+            fails.append(
+                f"{scen}: {CONTROLLER[0]} cost ratio over best static "
+                f"({entry['best_static']}) is {entry['cost_ratio']:.2f}x "
+                f"< {min_ratio}x on {GATE_BACKEND} — the controller is "
+                "not Pareto-dominating static membership")
+        for arm_name, a in entry["arms"].items():
+            if not a["converged"]:
+                fails.append(f"{scen}/{GATE_BACKEND}/{arm_name}: did not "
+                             "converge")
+    return fails
+
+
+def run_virtual_only(fast: bool = False) -> list:
+    """The ``make autoscale-smoke`` path: every registered policy on the
+    virtual backend with deterministic decision logs and balanced
+    membership accounting.  Fixed ``compute_time`` makes virtual runs
+    bit-reproducible, so re-running a policy must reproduce its decision
+    log exactly — the same property tests/test_autoscale.py pins with
+    committed goldens."""
+    prob = JacobiProblem(grid=8, sweeps=5, seed=0)
+    smoke_kw = {
+        "static": {"size": 3},
+        "target_staleness": {"target": 3.0, "initial_size": 3},
+        "drain_ahead": {"lookahead": 0.05},
+    }
+    rows = []
+    for pol in sorted(policy_library()):
+        kw = smoke_kw.get(pol, {})
+        logs, results = [], []
+        for _ in range(2):
+            ctl = get_policy(pol, **kw)
+            r = run_fixed_point(prob, RunConfig(
+                mode="async", executor="virtual", n_workers=6, tol=1e-6,
+                max_updates=10**5, seed=0, compute_time=2e-3,
+                faults=FaultProfile(delay_mean=4e-3),
+                scenario=get_scenario("spot_wave", 6).scaled(0.05),
+                controller=ctl))
+            logs.append(list(ctl.decision_log))
+            results.append(r)
+        r = results[0]
+        assert r.converged, f"{pol}: virtual smoke run did not converge"
+        assert logs[0] == logs[1], (
+            f"{pol}: decision log is not reproducible for a fixed seed")
+        assert r.controller_actions == len(logs[0]), (
+            f"{pol}: applied-action count does not match the decision log")
+        # Membership accounting balances: every controller/scripted join
+        # re-admits a previously preempted-or-spare id, worker-seconds
+        # integrate to at most the full fleet, shares sum to one.
+        assert 0 <= r.joins <= r.preemptions + P
+        assert 0.0 < r.worker_seconds <= 6 * r.wall_time + 1e-9
+        assert abs(sum(r.service_fractions.values()) - 1.0) < 1e-6
+        rows.append(row(
+            f"autoscale_smoke/{pol}/virtual",
+            r.wall_time * 1e6 / max(r.worker_updates, 1),
+            f"WU={r.worker_updates};T={r.wall_time:.3f}s;"
+            f"ws={r.worker_seconds:.3f};actions={r.controller_actions};"
+            f"pre={r.preemptions};joins={r.joins}"))
+    return rows
+
+
+def _rows(cur: dict) -> list:
+    rows = []
+    for scen, entry in cur["scenarios"].items():
+        for backend, data in entry.items():
+            for arm_name, a in data["arms"].items():
+                rows.append(row(
+                    f"autoscale/{scen}/{backend}/{arm_name}",
+                    a["wall_time"] * 1e6 / max(a["worker_updates"], 1),
+                    f"WU={a['worker_updates']};T={a['wall_time']:.2f}s;"
+                    f"ws={a['worker_seconds']:.2f};cost={a['cost']:.2f};"
+                    f"actions={a['controller_actions']}"))
+            rows.append(row(
+                f"autoscale/{scen}/{backend}/cost_ratio", 0.0,
+                f"ratio={data['cost_ratio']:.2f}x over "
+                f"{data['best_static']}"))
+    return rows
+
+
+def _persist(cur: dict) -> None:
+    """Write BENCH_autoscale.json (schema gated by tools/docs_check.py)."""
+    out = {
+        "description": "closed-loop autoscaling benchmark: registered "
+                       "policies vs static memberships on chaos scenarios, "
+                       "cost = worker_seconds x time-to-solution (see "
+                       "benchmarks/autoscale.py and docs/architecture.md, "
+                       "'Closed-loop autoscaling')",
+        "gate": {"backend": GATE_BACKEND,
+                 "controller": CONTROLLER[0],
+                 "min_ratio": GATE_MIN_RATIO},
+        "cost_model": "worker_seconds * wall_time",
+        **cur,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point: measure, persist, report rows."""
+    if fast:
+        return run_virtual_only(fast=True)
+    cur = measure()
+    _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("autoscale_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--virtual-only", action="store_true",
+                    help="fast CI smoke: registered policies on virtual")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem (skips nothing else)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the cost-ratio gate fails")
+    args = ap.parse_args()
+    if args.virtual_only:
+        for r in run_virtual_only(fast=args.fast):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print("autoscale-smoke: OK (every registered policy runs on the "
+              "virtual backend with reproducible decision logs and "
+              "balanced membership accounting)", file=sys.stderr)
+        return
+    cur = measure(fast=args.fast)
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if not args.fast:
+        _persist(cur)
+        print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("autoscale-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                ", ".join(f"{s} >= {m}x" for s, m in GATE_MIN_RATIO.items())
+                + f" cost ratio on {GATE_BACKEND}")
+        print(f"autoscale-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

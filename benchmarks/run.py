@@ -26,6 +26,7 @@ MODULES = [
     "perf_hotpath",       # coordinator hot-path gate (BENCH_hotpath.json)
     "accel_offload",      # evaluation-pipeline offload gate (BENCH_offload.json)
     "chaos_scenarios",    # chaos scenario library sweep (BENCH_chaos.json)
+    "autoscale",          # closed-loop autoscaling gate (BENCH_autoscale.json)
 ]
 
 # ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and

@@ -1,0 +1,35 @@
+"""Closed-loop autoscaling on the chaos substrate (paper §4 "flexible
+computing infrastructure", made reactive).
+
+PR 5 made worker membership *scriptable*; this package makes it a control
+loop: a :class:`SignalProbe` samples observation snapshots
+(:class:`ControlSignals`) at arrival ticks, a :class:`Controller` policy
+turns them into the same ``join``/``preempt``/``pause``/``set_profile``
+:class:`~repro.chaos.ScenarioEvent` actions scripted scenarios use, and the
+coordinator actuates them — uniformly across the virtual, thread, and
+process backends, composing with scripted scenarios (script = weather,
+controller = pilot).  Enable by setting ``RunConfig.controller`` to a
+policy instance (or ``get_policy(name)``); runs without one pay nothing.
+
+See docs/architecture.md ("Closed-loop autoscaling") for the signal →
+policy → actuation diagram, and ``benchmarks/autoscale.py`` for the cost
+model Pareto gate.
+"""
+
+from .policies import (Controller, DrainAheadPolicy, StaticPolicy,
+                       TargetStalenessPolicy, get_policy, policy,
+                       policy_library, run_cost)
+from .signals import ControlSignals, SignalProbe
+
+__all__ = [
+    "ControlSignals",
+    "SignalProbe",
+    "Controller",
+    "StaticPolicy",
+    "TargetStalenessPolicy",
+    "DrainAheadPolicy",
+    "policy",
+    "policy_library",
+    "get_policy",
+    "run_cost",
+]

@@ -110,6 +110,7 @@ class TraceRecorder:
             "accel_eval": cfg.accel_eval,
             "scenario": (cfg.scenario.name
                          if getattr(cfg.scenario, "name", None) else None),
+            "controller": getattr(cfg.controller, "name", None),
             "problem": type(problem).__name__ if problem is not None else None,
         }
 
@@ -170,8 +171,8 @@ def replay_trace(problem, trace: RunTrace, cfg: RunConfig) -> RunResult:
         raise ValueError("only async traces replay (sync runs are already "
                          "deterministic given the round plan)")
     rcfg = _dc.replace(cfg, executor="virtual", scenario=None,
-                       capture_trace=False, accel_eval="coordinator",
-                       eval_time=None)
+                       controller=None, capture_trace=False,
+                       accel_eval="coordinator", eval_time=None)
     coord = Coordinator(problem, rcfg)
     # In-flight work keyed by (worker, incarnation): within one incarnation
     # a worker has at most one dispatch outstanding, and the incarnation

@@ -49,6 +49,7 @@ guard: a fire spanning a membership change is discarded.
 from __future__ import annotations
 
 import time
+from dataclasses import replace as _dc_replace
 from typing import List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -262,23 +263,26 @@ class Coordinator:
             raise ValueError(
                 f"unknown accel_eval {cfg.accel_eval!r}; "
                 "expected 'coordinator' or 'worker'")
-        if cfg.scenario is not None or cfg.capture_trace:
-            # Chaos scenarios / trace replay pin the dispatch schedule to
-            # the memoized block partition and to inline (coordinator-side)
-            # accel evaluation; see repro.chaos.
+        if (cfg.scenario is not None or cfg.capture_trace
+                or cfg.controller is not None):
+            # Chaos scenarios / trace replay / autoscale controllers pin the
+            # dispatch schedule to the memoized block partition and to
+            # inline (coordinator-side) accel evaluation; see repro.chaos
+            # and repro.autoscale.
             if cfg.selection != "fixed":
                 raise ValueError(
-                    "chaos scenarios and trace capture require "
+                    "chaos scenarios, trace capture and controllers require "
                     f"selection='fixed' (got {cfg.selection!r})")
             if cfg.eval_time is not None:
                 raise ValueError(
-                    "chaos scenarios / trace capture do not compose with "
-                    "the virtual eval-cost model (cfg.eval_time)")
+                    "chaos scenarios / trace capture / controllers do not "
+                    "compose with the virtual eval-cost model "
+                    "(cfg.eval_time)")
         if cfg.capture_trace and cfg.mode == "sync":
             raise ValueError(
                 "capture_trace records async schedules only (a sync run is "
                 "already reproducible from its round plan)")
-        if cfg.scenario is not None:
+        if cfg.scenario is not None or cfg.controller is not None:
             if cfg.accel_eval == "worker" and cfg.executor == "virtual":
                 # Thread/process/ray run offloaded fires through a real
                 # eval service and commit them restricted to blocks whose
@@ -384,6 +388,21 @@ class Coordinator:
         # emitted from the coordinator so every loop captures them in
         # arrival order for free.
         self.tracer = None
+        # --- closed-loop autoscaling (repro.autoscale) ------------------ #
+        # Workers removed by *scripted* preemptions: their infrastructure
+        # is gone until the script joins them back, so a controller may
+        # never "resurrect" them (controller_admissible).  Maintained by
+        # apply_scenario_event's source tag; controller-initiated
+        # preemptions (voluntary shedding) do not land here.
+        self.scenario_down: set = set()
+        self.controller_actions = 0
+        self.probe = None
+        if cfg.controller is not None:
+            from ...autoscale.signals import SignalProbe  # lazy: optional
+
+            cfg.controller.reset(cfg)
+            self.probe = SignalProbe(cfg, p, self._accel_stale_limit,
+                                     cfg.controller)
 
     # ----------------------------------------------------------------- #
     def busy(self):
@@ -465,11 +484,30 @@ class Coordinator:
         return (worker in self.active and worker not in self.paused
                 and bool(self.worker_blocks.get(worker)))
 
-    def apply_scenario_event(self, ev, t: float = 0.0) -> None:
+    def apply_scenario_event(self, ev, t: float = 0.0,
+                             source: str = "script") -> None:
         """Apply one :class:`repro.chaos.ScenarioEvent` to the membership /
         live-profile state.  Backend-specific plumbing (waking parked
         threads, re-dispatching joined workers, pushing profiles into
-        worker processes) stays in the backends."""
+        worker processes) stays in the backends.
+
+        ``source`` distinguishes scripted events from controller actions
+        (``"controller"``): scripted preemptions mark the worker
+        ``scenario_down`` — its infrastructure is gone until the script
+        joins it back — while controller preemptions are voluntary
+        shedding the controller may undo.  Both apply through the same
+        idempotent membership primitives, which is what lets scripts and
+        controllers compose without double-applying anything.
+        """
+        if self.probe is not None:
+            # Worker-seconds meter: charge the segment that ends here at
+            # the membership size that held during it.
+            self.probe.accumulate(len(self.active - self.paused), t)
+        if source == "script":
+            if ev.kind == "preempt":
+                self.scenario_down.add(ev.worker)
+            elif ev.kind == "join":
+                self.scenario_down.discard(ev.worker)
         if ev.kind == "set_profile":
             targets = ([ev.worker] if ev.worker is not None
                        else range(self.cfg.n_workers))
@@ -492,6 +530,63 @@ class Coordinator:
             raise ValueError(f"unknown scenario event kind {ev.kind!r}")
         if self.tracer is not None:
             self.tracer.scenario_event(t, ev)
+
+    # ----------------------------------------------------------------- #
+    # Closed-loop autoscaling (repro.autoscale)
+    # ----------------------------------------------------------------- #
+    def controller_admissible(self, ev) -> bool:
+        """Safety rails on controller intents (policies stay unprivileged).
+
+        - never join a worker the *script* holds down (``scenario_down``:
+          reclaimed infrastructure), nor one already in the membership,
+          nor an id outside the fleet;
+        - never preempt or pause away the last dispatchable worker — a
+          controller may be wrong, but it may not wedge the run.
+        """
+        kind, w = ev.kind, ev.worker
+        if kind == "join":
+            return (w is not None and 0 <= w < self.cfg.n_workers
+                    and w not in self.active and w not in self.scenario_down)
+        if kind in ("preempt", "pause"):
+            live = self.active - self.paused
+            return (w in live and len(live) > 1)
+        return True  # set_profile / resume are always safe
+
+    def controller_tick(self, t: float, arrivals: Optional[int] = None) -> list:
+        """Give the controller a decision opportunity at time ``t``.
+
+        Returns the *applied* actions (possibly []), so backends can do
+        their plumbing (launch joined workers, wake parked threads).  Free
+        when no controller is configured; between due decision points it
+        costs one cadence check.  Uniform across backends: every loop
+        calls this at its arrival ticks (plus timed driver points on the
+        real backends, where arrivals can stall).  The virtual loops keep
+        their own arrival counters (``self.arrivals`` is the real
+        backends' shared counter) and pass them in so the ``tick_every``
+        cadence means the same thing on every backend.
+        """
+        ctl = self.cfg.controller
+        if ctl is None:
+            return []
+        if arrivals is None:
+            arrivals = self.arrivals
+        probe = self.probe
+        probe.accumulate(len(self.active - self.paused), t)
+        if not probe.due(arrivals, t):
+            return []
+        sig = probe.sample(self, t, arrivals)
+        applied = []
+        for ev in (ctl.decide(sig) or []):
+            if not self.controller_admissible(ev):
+                continue
+            ev = _dc_replace(ev, t=t)
+            self.apply_scenario_event(ev, t, source="controller")
+            self.controller_actions += 1
+            ctl.decision_log.append({
+                "tick": sig.tick, "t": round(float(t), 9),
+                "kind": ev.kind, "worker": ev.worker})
+            applied.append(ev)
+        return applied
 
     def round_participants(self) -> List[int]:
         """Sync mode: the workers that take part in the next round."""
@@ -604,6 +699,8 @@ class Coordinator:
             self.fire_window_arrivals += 1
         self.staleness_sum += staleness
         self.staleness_n += 1
+        if self.probe is not None:  # autoscale signal window; off => free
+            self.probe.observe(staleness)
         if worker is not None:
             self.applied_by_worker[worker] = (
                 self.applied_by_worker.get(worker, 0) + 1)
@@ -897,6 +994,8 @@ class Coordinator:
     def result(self, t: float, rounds: int, converged: bool) -> RunResult:
         mean_stale = self.staleness_sum / max(self.staleness_n, 1)
         acc = self.accel
+        if self.probe is not None:  # close the worker-seconds meter at t
+            self.probe.accumulate(len(self.active - self.paused), t)
         # Reuse the recorded residual when x has not moved since record()
         # evaluated it (the common case: every run path records right
         # before assembling the result) — recomputing it at the same x
@@ -937,6 +1036,9 @@ class Coordinator:
             service_fractions={
                 w: cnt / max(self.wu, 1)
                 for w, cnt in sorted(self.applied_by_worker.items())},
+            worker_seconds=(self.probe.worker_seconds
+                            if self.probe is not None else 0.0),
+            controller_actions=self.controller_actions,
             trace=(self.tracer.to_trace() if self.tracer is not None
                    else None),
         )

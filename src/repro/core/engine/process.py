@@ -103,6 +103,10 @@ _READY_TIMEOUT_S = 300.0  # interpreter + jax import + jit warm-up per worker
 _POLL_S = 5.0
 #: how many idle pools to keep alive (LRU beyond this is closed)
 _MAX_POOLS = max(1, int(os.environ.get("REPRO_PROCESS_POOLS", "4")))
+#: grace window (s) a controller gets to revive an empty membership after
+#: the script is exhausted, before the chaos loops declare the run dead —
+#: mirrors the thread backend's constant of the same name.
+_CTL_STALL_S = 2.0
 
 
 def _attach_shm(name: str) -> shared_memory.SharedMemory:
@@ -308,6 +312,13 @@ class _WorkerPool:
         partition is O(n) of int64 per queue, real serialization time on
         the warm-run path."""
         seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
+        if cfg.controller is not None:
+            # Controllers live coordinator-side only and may hold
+            # un-picklable hooks (e.g. a serve-queue depth closure) —
+            # strip before the config crosses the process boundary.
+            import dataclasses as _dc
+
+            cfg = _dc.replace(cfg, controller=None)
         for w, q in enumerate(self.task_qs):
             q.put(("run", cfg, seeds[w], blocks[w]))
         self._await(self.n_workers, {"ready"})
@@ -485,12 +496,16 @@ class ProcessPoolExecutor(Executor):
                     pool.setup_run(cfg, coord.blocks)
                     pool.write_x(coord)
                     if cfg.mode == "sync":
-                        if cfg.scenario is not None:
+                        if (cfg.scenario is not None
+                                or cfg.controller is not None):
                             return self._run_sync_chaos(cfg, coord, pool)
                         return self._run_sync(cfg, coord, pool)
-                    if cfg.scenario is not None:
+                    if cfg.scenario is not None or cfg.controller is not None:
                         # Hosts both eval placements; offloaded fires
-                        # commit restricted to unmoved blocks.
+                        # commit restricted to unmoved blocks.  Controller
+                        # runs land here too (empty ScenarioClock when no
+                        # script): only this loop handles elastic
+                        # membership.
                         return self._run_async_chaos(cfg, coord, pool)
                     if cfg.accel_eval == "worker":
                         return self._run_async_offload(cfg, coord, pool)
@@ -636,18 +651,36 @@ class ProcessPoolExecutor(Executor):
                 for wt in targets:
                     pool.task_qs[wt].put(("prof", ev.profile))
 
+        idle_since = 0.0
         while (coord.wu < cfg.max_updates and alive
                and coord.arrivals < coord.max_arrivals):
             now = elapsed()
             for ev in clock.due(now):
                 apply_event(ev, now)
+            for cev in coord.controller_tick(now):
+                if cev.kind == "set_profile":
+                    targets = ([cev.worker] if cev.worker is not None
+                               else range(cfg.n_workers))
+                    for wt in targets:
+                        pool.task_qs[wt].put(("prof", cev.profile))
             parts = [w for w in coord.round_participants() if w in alive]
             if not parts:
                 nt = clock.next_time()
                 if nt is None:
-                    break  # membership can never recover
+                    if cfg.controller is None:
+                        break  # membership can never recover
+                    # A controller may still rejoin workers — give it a
+                    # bounded stall window of timed ticks.
+                    now = elapsed()
+                    if now - idle_since > _CTL_STALL_S:
+                        break
+                    if cfg.max_wall is not None and now > cfg.max_wall:
+                        break
+                    time.sleep(0.01)
+                    continue
                 time.sleep(max(0.0, nt - elapsed()))
                 continue
+            idle_since = elapsed()
             rounds += 1
             pool.write_x(coord)
             round_idx = {w: coord.round_assignment(w) for w in parts}
@@ -756,8 +789,10 @@ class ProcessPoolExecutor(Executor):
             elif w in coord.active and w in alive:
                 parked.add(w)
 
-        def apply_event(ev, now: float) -> None:
-            coord.apply_scenario_event(ev, now)
+        def plumb(ev) -> None:
+            """Backend-side effects of a membership event (dispatching,
+            parking, profile forwarding) — the coordinator-side state was
+            already updated by ``apply_scenario_event``."""
             if ev.kind == "set_profile":
                 targets = ([ev.worker] if ev.worker is not None
                            else range(cfg.n_workers))
@@ -782,6 +817,19 @@ class ProcessPoolExecutor(Executor):
             elif ev.kind == "preempt":
                 parked.discard(ev.worker)
 
+        def apply_event(ev, now: float) -> None:
+            coord.apply_scenario_event(ev, now)
+            plumb(ev)
+
+        def ctl_tick(now: float) -> bool:
+            """Controller tick: ``controller_tick`` samples signals and
+            applies any admissible actions to the coordinator; the
+            backend plumbing (dispatch/park) happens here."""
+            actions = coord.controller_tick(now)
+            for cev in actions:
+                plumb(cev)
+            return bool(actions)
+
         def arrival_tick_either() -> bool:
             """Record-cadence/stop tick (offload opens record plans)."""
             if not offload:
@@ -794,6 +842,7 @@ class ProcessPoolExecutor(Executor):
 
         for ev in clock.due(0.0):
             apply_event(ev, 0.0)
+        ctl_tick(0.0)  # tick 0: initial fleet shaping before first dispatch
         for w in sorted(alive):
             if w in pending:
                 continue  # a t=0 join event already dispatched it
@@ -801,21 +850,40 @@ class ProcessPoolExecutor(Executor):
                 dispatch(w)
             elif w in coord.active:
                 parked.add(w)  # paused before first dispatch: resumable
+        idle_since = 0.0
         while alive and not stop:
             now = elapsed()
             for ev in clock.due(now):
                 apply_event(ev, now)
+            ctl_tick(now)
             nt = clock.next_time()
             if not pending and not rejoin_owed and eval_worker is None:
                 if nt is None:
-                    break  # nothing in flight and no event can revive us
+                    if cfg.controller is None:
+                        break  # nothing in flight, no event can revive us
+                    # A controller can still rejoin workers — bounded
+                    # stall window of timed ticks, then give up.
+                    now = elapsed()
+                    if now - idle_since > _CTL_STALL_S:
+                        break
+                    if cfg.max_wall is not None and now > cfg.max_wall:
+                        break
+                    time.sleep(0.02)
+                    if ctl_tick(elapsed()):
+                        idle_since = elapsed()
+                    continue
                 time.sleep(max(0.0, nt - elapsed()))
                 continue
+            idle_since = elapsed()
             deadline = time.monotonic() + _READY_TIMEOUT_S
-            res = pool.get_result_wake(
-                deadline, None if nt is None else nt - elapsed())
+            wake = None if nt is None else nt - elapsed()
+            if cfg.controller is not None:
+                # Bound the wait so timed controller ticks (tick_dt) fire
+                # even while every worker is mid-compute.
+                wake = 0.05 if wake is None else min(wake, 0.05)
+            res = pool.get_result_wake(deadline, wake)
             if res is None:
-                continue  # an event came due; apply it at the loop top
+                continue  # an event/tick came due; handle at the loop top
             w, kind, data, snap_wu = res
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")

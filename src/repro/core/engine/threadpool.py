@@ -41,6 +41,13 @@ from .types import FaultProfile, RunConfig, RunResult, _fault_for
 
 __all__ = ["ThreadPoolExecutor"]
 
+# With an autoscale controller and the script drained, an empty/paused
+# membership is not necessarily final — the controller may join a spare or
+# resume a pause at a later timed tick.  This is how long the loops wait
+# for it to do so before declaring the run wedged and stopping; without a
+# controller they stop immediately (the pre-existing behaviour).
+_CTL_STALL_S = 2.0
+
 
 @register_executor
 class ThreadPoolExecutor(Executor):
@@ -66,15 +73,18 @@ class ThreadPoolExecutor(Executor):
 
             coord.tracer = TraceRecorder(cfg, self.name, problem)
         if cfg.mode == "sync":
-            if cfg.scenario is not None:
+            if cfg.scenario is not None or cfg.controller is not None:
                 return self._run_sync_chaos(problem, cfg, coord)
             return self._run_sync(problem, cfg, coord)
         if cfg.mode == "async":
-            if cfg.scenario is not None:
+            if cfg.scenario is not None or cfg.controller is not None:
                 # The chaos loop hosts both eval placements: with
                 # accel_eval="worker" it opens fire/record plans and runs
                 # them on the eval thread, and commits are restricted to
                 # blocks whose ownership did not move (coordinator guard).
+                # Controller-driven runs land here too (with an empty
+                # ScenarioClock when there is no script): membership can
+                # change mid-run, which only this loop's parking handles.
                 return self._run_async_chaos(problem, cfg, coord)
             if cfg.accel_eval == "worker":
                 return self._run_async_offload(problem, cfg, coord)
@@ -228,6 +238,7 @@ class ThreadPoolExecutor(Executor):
         clock = ScenarioClock(cfg.scenario)
         t0 = time.perf_counter()
         rounds = 0
+        idle_since = 0.0  # last time a round actually ran (stall window)
         alive = set(range(cfg.n_workers))
         coord.record(0.0)
 
@@ -240,13 +251,29 @@ class ThreadPoolExecutor(Executor):
                 now = elapsed()
                 for ev in clock.due(now):
                     coord.apply_scenario_event(ev, now)
+                # Controller decisions land at round boundaries (the BSP
+                # granularity); the round set below is re-derived from the
+                # membership, so actions need no plumbing.
+                coord.controller_tick(now)
                 parts = [w for w in coord.round_participants() if w in alive]
                 if not parts:
                     nt = clock.next_time()
                     if nt is None:
-                        break  # membership can never recover
+                        if cfg.controller is None:
+                            break  # membership can never recover
+                        # A controller may still rebuild the membership
+                        # (join a spare, resume a pause) — give it a
+                        # bounded stall window of timed ticks.
+                        if now - idle_since > _CTL_STALL_S:
+                            break
+                        if (cfg.max_wall is not None
+                                and elapsed() > cfg.max_wall):
+                            break
+                        time.sleep(0.01)
+                        continue
                     time.sleep(max(0.0, nt - elapsed()))
                     continue
+                idle_since = elapsed()
                 rounds += 1
                 x_snap = coord.x.copy()
                 round_idx = {w: coord.round_assignment(w) for w in parts}
@@ -309,6 +336,10 @@ class ThreadPoolExecutor(Executor):
         with cond:
             for ev in clock.due(0.0):
                 coord.apply_scenario_event(ev, 0.0)
+            # Initial controller decision (tick 0) shapes the membership
+            # before worker threads take their first dispatch; no plumbing
+            # needed — threads park/dispatch off coord.dispatchable.
+            coord.controller_tick(0.0)
         coord.record(0.0)
 
         def elapsed() -> float:
@@ -362,9 +393,16 @@ class ThreadPoolExecutor(Executor):
             return tick_stop
 
         def chaos_driver() -> None:
+            # With a controller the driver doubles as its timed ticker:
+            # arrivals normally drive decisions, but when every member is
+            # down arrivals stall, and only these timed ticks let the
+            # controller rebuild the membership (bounded by _CTL_STALL_S
+            # once the script is drained and nothing is live).
+            ctl = cfg.controller is not None
+            idle_since: Optional[float] = None
             while not stop.is_set():
                 nt = clock.next_time()
-                if nt is None:
+                if nt is None and not ctl:
                     with cond:
                         if not (coord.active - coord.paused):
                             # Nobody can ever take work again: the script
@@ -372,13 +410,43 @@ class ThreadPoolExecutor(Executor):
                             stop.set()
                             cond.notify_all()
                     return
-                wait = nt - elapsed()
-                if wait > 0 and stop.wait(wait):
-                    return
+                if nt is None and ctl:
+                    if stop.wait(0.02):
+                        return
+                    with cond:
+                        now = elapsed()
+                        acted = bool(coord.controller_tick(now))
+                        if acted:
+                            cond.notify_all()
+                        if (coord.active - coord.paused) or acted:
+                            idle_since = None
+                        elif idle_since is None:
+                            idle_since = now
+                        elif now - idle_since > _CTL_STALL_S:
+                            stop.set()
+                            cond.notify_all()
+                            return
+                        if cfg.max_wall is not None and now > cfg.max_wall:
+                            stop.set()
+                            cond.notify_all()
+                            return
+                    continue
+                while True:
+                    wait = nt - elapsed()
+                    if wait <= 0:
+                        break
+                    if stop.wait(min(wait, 0.02) if ctl else wait):
+                        return
+                    if ctl:
+                        with cond:
+                            if coord.controller_tick(elapsed()):
+                                cond.notify_all()
                 with cond:
                     now = elapsed()
                     for ev in clock.due(now):
                         coord.apply_scenario_event(ev, now)
+                    if ctl:
+                        coord.controller_tick(now)
                     cond.notify_all()
 
         def worker_loop(w: int) -> None:
@@ -386,12 +454,15 @@ class ThreadPoolExecutor(Executor):
             while not stop.is_set():
                 with cond:
                     while not stop.is_set() and not coord.dispatchable(w):
-                        if clock.exhausted:
+                        if clock.exhausted and cfg.controller is None:
                             # join/resume only ever come from the script:
                             # an undispatchable worker with the script
                             # drained can never work again — exit so the
                             # run can finish even if every other worker
-                            # is already gone.
+                            # is already gone.  (A controller can revive
+                            # this worker at any later tick, so keep
+                            # parking; the driver's stall window bounds
+                            # the wait when nothing can ever recover.)
                             return
                         cond.wait(0.05)
                     if stop.is_set():
@@ -427,6 +498,8 @@ class ThreadPoolExecutor(Executor):
                         if arrival_tick_either(prof):
                             stop.set()
                             cond.notify_all()
+                        elif coord.controller_tick(elapsed()):
+                            cond.notify_all()  # wake workers a join freed
                     if prof.restart_after is None or stop.is_set():
                         return  # permanent crash (or run over): thread exits
                     time.sleep(prof.restart_after)
@@ -474,6 +547,11 @@ class ThreadPoolExecutor(Executor):
                                 state["since_fire"] = 0
                     if arrival_tick_either(prof):
                         stop.set()
+                        cond.notify_all()
+                    elif coord.controller_tick(elapsed()):
+                        # The controller acted at this arrival: a preempt
+                        # of this very worker parks it at the loop top (its
+                        # gen is stale now); a join frees a parked worker.
                         cond.notify_all()
 
         threads = [

@@ -131,6 +131,18 @@ class RunConfig:
     # still evaluates coordinator-side.  None keeps every default loop
     # untouched.
     scenario: Optional[object] = None  # repro.chaos.FaultScenario
+    # --- closed-loop autoscaling (repro.autoscale) ------------------------ #
+    # A Controller policy observing ControlSignals (arrival rate, staleness
+    # histogram, accel discard rates, queue depth) at arrival ticks and
+    # emitting the same join/preempt/pause/set_profile events scenarios
+    # script — actuated through apply_scenario_event on every backend, so
+    # one policy means the same thing everywhere and composes with a
+    # scripted scenario (script = weather, controller = pilot; the
+    # coordinator's safety rails stop a policy from resurrecting workers
+    # the script reclaimed or wedging the membership).  Requires
+    # selection="fixed".  None keeps every default loop untouched and
+    # bit-identical.
+    controller: Optional[object] = None  # repro.autoscale.Controller
     # Record the run's event trace (dispatches, arrivals + dispositions,
     # crashes, fires, records, offloads) into RunResult.trace for
     # deterministic postmortem replay (repro.chaos.replay_trace).  Async
@@ -183,6 +195,12 @@ class RunResult:
     # over the workers that applied anything; static membership gives each
     # worker ~1/p).
     service_fractions: Dict[int, float] = field(default_factory=dict)
+    # --- closed-loop autoscaling (repro.autoscale) ------------------------- #
+    # Integral of |active - paused| over the run (the capacity actually
+    # provisioned) — the cost model's first factor.  Metered only when a
+    # controller is configured (the probe owns the meter); 0.0 otherwise.
+    worker_seconds: float = 0.0
+    controller_actions: int = 0  # applied controller decisions
     # --- trace capture (cfg.capture_trace) -------------------------------- #
     trace: Optional[object] = None  # repro.chaos.RunTrace
 

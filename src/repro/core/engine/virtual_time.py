@@ -77,13 +77,15 @@ class VirtualTimeExecutor(Executor):
             else measure_compute(problem, coord.blocks)  # memoized partition
         )
         if cfg.mode == "sync":
-            if cfg.scenario is not None:
+            if cfg.scenario is not None or cfg.controller is not None:
                 return self._run_sync_chaos(problem, cfg, coord, compute)
             return self._run_sync(problem, cfg, coord, compute)
-        if cfg.scenario is not None or cfg.capture_trace:
-            # Chaos scenarios / trace capture take their own event loop;
-            # scenario-free capture-free runs never enter it, so the
-            # golden-tested default loop stays byte-for-byte.
+        if (cfg.scenario is not None or cfg.capture_trace
+                or cfg.controller is not None):
+            # Chaos scenarios / trace capture / autoscale controllers take
+            # their own event loop; scenario-free capture-free
+            # controller-free runs never enter it, so the golden-tested
+            # default loop stays byte-for-byte.
             return self._run_async_chaos(problem, cfg, coord, compute)
         if cfg.accel_eval == "worker" or cfg.eval_time is not None:
             # Opt-in evaluation-cost model; the default loop below stays
@@ -240,6 +242,10 @@ class VirtualTimeExecutor(Executor):
                and arrivals < coord.max_arrivals):
             for ev in clock.due(t):
                 coord.apply_scenario_event(ev, t)
+            # Controller decisions land at round boundaries — the BSP
+            # granularity; actions need no plumbing here because the round
+            # set below is re-derived from the membership every round.
+            coord.controller_tick(t, arrivals)
             parts = [w for w in coord.round_participants() if w in alive]
             if not parts:
                 nt = clock.next_time()
@@ -321,6 +327,7 @@ class VirtualTimeExecutor(Executor):
             seq += 1
 
         def launch(worker: int, now: float) -> None:
+            parked.discard(worker)  # in flight now: parked means awaiting
             prof = coord.fault_for(worker)
             gen = coord.preempt_gen[worker]
             bid, idx = coord.next_dispatch(worker)
@@ -331,6 +338,24 @@ class VirtualTimeExecutor(Executor):
                 coord.tracer.dispatch(now, worker, bid, gen)
             push(done, "work", (worker, gen, coord.wu, idx, vals))
 
+        def plumb_controller(actions, now: float) -> None:
+            """Backend plumbing for applied controller actions: launch
+            joined workers, relaunch parked ones a resume freed."""
+            for cev in actions:
+                if cev.kind == "join":
+                    if coord.dispatchable(cev.worker):
+                        launch(cev.worker, now)
+                    elif cev.worker in coord.active:
+                        parked.add(cev.worker)  # joined into a pause
+                elif cev.kind == "resume":
+                    for pw in sorted(parked):
+                        if coord.dispatchable(pw):
+                            launch(pw, now)
+
+        # Initial controller decision (tick 0) shapes the membership
+        # before the first dispatches — joins/preempts here determine
+        # which workers the launch loop below starts.
+        coord.controller_tick(0.0)
         for ev in clock.drain():
             push(ev.t, "chaos", (ev,))
         for w in range(cfg.n_workers):
@@ -417,6 +442,9 @@ class VirtualTimeExecutor(Executor):
                     return coord.result(t, coord.wu, True)
             if cfg.max_wall is not None and t > cfg.max_wall:
                 break
+            # Controller decision opportunity at the arrival tick: a
+            # preempt of this very worker suppresses its relaunch below.
+            plumb_controller(coord.controller_tick(t, arrivals), t)
             if crashed:
                 if prof.restart_after is not None:
                     push(t + prof.restart_after, "restart", (worker, gen))

@@ -212,6 +212,12 @@ class SolverService:
                 self._active += 1
                 req.ticket.dispatched_s = time.monotonic()
             try:
+                if req.cfg.controller is not None:
+                    # Close the serve->autoscale loop: the controller's
+                    # signal probe reads this service's backlog, so a
+                    # policy can scale membership with admission pressure.
+                    req.cfg.controller.queue_depth_fn = (
+                        lambda: len(self._scheduler))
                 session = get_executor(req.cfg.executor).submit(
                     req.problem, req.cfg, start=False)
                 result = session.execute()

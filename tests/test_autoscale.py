@@ -1,0 +1,255 @@
+"""Closed-loop autoscaling: policy registry, decision goldens, trace replay.
+
+Covers the acceptance contract of the autoscale PR:
+
+- the policy registry (every registered policy instantiates by name and
+  carries a one-line description for the README docs check);
+- deterministic virtual-backend decision goldens: for a fixed seed and
+  ``compute_time``, every registered policy reproduces a committed
+  join/preempt/pause sequence exactly — the golden set and the registry
+  are asserted equal, so registering a policy without a golden fails
+  loudly here;
+- controller-driven thread runs capture traces that replay bit-exactly
+  (``replay_trace`` strips the controller and replays the recorded
+  events, so the replay needs no policy at all);
+- the worker-seconds cost model and the zero-cost-when-disabled contract
+  (a controller-free run meters nothing and takes the golden default
+  path, pinned separately by tests/test_hotpath_goldens.py).
+"""
+
+import hashlib
+import math
+
+import numpy as np
+import pytest
+
+from repro.autoscale import (
+    Controller,
+    DrainAheadPolicy,
+    StaticPolicy,
+    TargetStalenessPolicy,
+    get_policy,
+    policy_library,
+    run_cost,
+)
+from repro.chaos import get_scenario, replay_trace, trace_agreement
+from repro.core import FaultProfile, RunConfig, run_fixed_point
+from repro.problems import JacobiProblem
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+def _jac():
+    return JacobiProblem(grid=8, sweeps=5, seed=0)
+
+
+# Per-policy kwargs for the golden scenario below (6-worker fleet under a
+# spot_wave scaled to land inside the short virtual run).
+POLICY_KW = {
+    "static": {"size": 3},
+    "target_staleness": {"target": 3.0, "initial_size": 3},
+    "drain_ahead": {"lookahead": 0.05},
+}
+
+
+def _golden_cfg(ctl):
+    return RunConfig(mode="async", executor="virtual", n_workers=6,
+                     tol=1e-6, max_updates=10**5, seed=0, compute_time=2e-3,
+                     faults=FaultProfile(delay_mean=4e-3),
+                     scenario=get_scenario("spot_wave", 6).scaled(0.05),
+                     controller=ctl)
+
+
+# The committed decision goldens: fixed seed + compute_time on the virtual
+# backend => this exact applied-action sequence, on any machine.
+GOLDEN_DECISIONS = {
+    "static": [
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 5},
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 4},
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 3},
+    ],
+    "target_staleness": [
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 5},
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 4},
+        {"tick": 0, "t": 0.0, "kind": "preempt", "worker": 3},
+        # Post-wave: refill capacity, then evict the scripted straggler
+        # (worker 0, lowest service fraction) — its blocks migrate.
+        {"tick": 22, "t": 0.333, "kind": "join", "worker": 4},
+        {"tick": 38, "t": 0.476, "kind": "preempt", "worker": 0},
+    ],
+    "drain_ahead": [
+        {"tick": 0, "t": 0.0, "kind": "pause", "worker": 1},
+        {"tick": 0, "t": 0.0, "kind": "pause", "worker": 2},
+        {"tick": 0, "t": 0.0, "kind": "pause", "worker": 3},
+    ],
+}
+
+
+# --------------------------------------------------------------------- #
+class TestPolicyRegistry:
+    def test_shipped_policies_registered(self):
+        lib = policy_library()
+        assert {"static", "target_staleness", "drain_ahead"} <= set(lib)
+        for name, desc in lib.items():
+            assert isinstance(desc, str) and desc  # README table rows
+
+    def test_get_policy_instantiates(self):
+        assert isinstance(get_policy("static", size=2), StaticPolicy)
+        assert isinstance(get_policy("target_staleness"),
+                          TargetStalenessPolicy)
+        assert isinstance(get_policy("drain_ahead"), DrainAheadPolicy)
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(KeyError, match="unknown policy"):
+            get_policy("does_not_exist")
+
+    def test_every_policy_has_a_golden(self):
+        """Registering a policy without committing its decision golden
+        (and smoke kwargs) must fail loudly here."""
+        assert set(GOLDEN_DECISIONS) == set(policy_library())
+        assert set(POLICY_KW) == set(policy_library())
+
+
+# --------------------------------------------------------------------- #
+class TestDecisionGoldens:
+    """Fixed seed => identical applied join/preempt/pause sequence."""
+
+    @pytest.mark.parametrize("name", sorted(POLICY_KW))
+    def test_decision_golden(self, name):
+        ctl = get_policy(name, **POLICY_KW[name])
+        r = run_fixed_point(_jac(), _golden_cfg(ctl))
+        assert r.converged
+        assert ctl.decision_log == GOLDEN_DECISIONS[name]
+        assert r.controller_actions == len(ctl.decision_log)
+
+    @pytest.mark.parametrize("name", sorted(POLICY_KW))
+    def test_decision_log_reproducible(self, name):
+        """Two fresh controller instances, same config: identical applied
+        decisions AND identical solves (decisions are part of the
+        deterministic virtual schedule, not an overlay on it)."""
+        def go():
+            ctl = get_policy(name, **POLICY_KW[name])
+            r = run_fixed_point(_jac(), _golden_cfg(ctl))
+            return r, ctl
+
+        r1, c1 = go()
+        r2, c2 = go()
+        assert c1.decision_log == c2.decision_log
+        assert r1.worker_updates == r2.worker_updates
+        assert r1.wall_time == r2.wall_time
+        assert _sha(r1.x) == _sha(r2.x)
+
+    def test_reset_clears_controller_state(self):
+        """One controller instance reused across runs behaves like a fresh
+        one — ``reset`` is called by the coordinator at run start."""
+        ctl = get_policy("target_staleness", **POLICY_KW["target_staleness"])
+        run_fixed_point(_jac(), _golden_cfg(ctl))
+        first = list(ctl.decision_log)
+        run_fixed_point(_jac(), _golden_cfg(ctl))
+        assert ctl.decision_log == first == \
+            GOLDEN_DECISIONS["target_staleness"]
+
+
+# --------------------------------------------------------------------- #
+class TestControllerTraceReplay:
+    """Controller-driven thread traces replay bit-exactly: the recorded
+    schedule contains the controller's membership events as ordinary
+    scenario events, so the replay (controller stripped) reproduces the
+    measured float trajectory exactly."""
+
+    def test_thread_controller_capture_replays_bit_exact(self):
+        ctl = get_policy("target_staleness", target=2.0, initial_size=3)
+        cfg = RunConfig(mode="async", executor="thread", n_workers=4,
+                        tol=1e-6, max_updates=10**5, seed=0,
+                        capture_trace=True, controller=ctl)
+        r = run_fixed_point(_jac(), cfg)
+        assert r.converged and r.trace is not None
+        assert r.trace.meta["backend"] == "thread"
+        assert r.trace.meta["controller"] == "target_staleness"
+        # The tick-0 shrink is in the trace as scenario events.
+        assert r.trace.counts().get("scenario", 0) >= 1
+        rep = replay_trace(_jac(), r.trace, cfg)
+        ag = trace_agreement(r, rep)
+        assert ag["mean_abs_log10_ratio"] == 0.0
+        assert ag["final_ratio"] == pytest.approx(1.0)
+        np.testing.assert_array_equal(r.x, rep.x)
+        # Replay reproduces the membership accounting the controller caused.
+        assert rep.preemptions == r.preemptions
+        assert rep.joins == r.joins
+
+    def test_virtual_controller_capture_replays_bit_exact(self):
+        ctl = get_policy("target_staleness", **POLICY_KW["target_staleness"])
+        cfg = _golden_cfg(ctl)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capture_trace=True)
+        r = run_fixed_point(_jac(), cfg)
+        assert r.converged and r.trace is not None
+        rep = replay_trace(_jac(), r.trace, cfg)
+        assert trace_agreement(r, rep)["mean_abs_log10_ratio"] == 0.0
+        np.testing.assert_array_equal(r.x, rep.x)
+        assert rep.preemptions == r.preemptions
+        assert rep.joins == r.joins
+
+
+# --------------------------------------------------------------------- #
+class TestSignalsAndCost:
+    def test_signals_snapshot_contents(self):
+        """A probing controller sees a coherent snapshot: service
+        fractions over live members, staleness within the limit, the
+        metered worker-seconds growing."""
+        seen = []
+
+        class Spy(Controller):
+            name = "spy"
+            tick_every = 8
+
+            def decide(self, sig):
+                seen.append(sig)
+                return []
+
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", executor="virtual", n_workers=4, tol=1e-6,
+            max_updates=10**5, seed=0, compute_time=1e-3, controller=Spy()))
+        assert r.converged and len(seen) >= 2
+        last = seen[-1]
+        assert last.n_workers == 4
+        assert last.active == frozenset(range(4))
+        assert last.arrivals > seen[0].arrivals
+        assert last.arrival_rate > 0.0
+        assert 0.0 <= last.staleness_p50 <= last.staleness_p95 \
+            <= last.stale_limit
+        assert abs(sum(last.service_fractions.values()) - 1.0) < 1e-9
+        assert last.worker_seconds >= seen[0].worker_seconds >= 0.0
+        assert last.queue_depth == 0  # no serve layer installed a fn
+
+    def test_worker_seconds_metered_only_with_controller(self):
+        base = dict(mode="async", executor="virtual", tol=1e-6,
+                    max_updates=10**5, seed=0, compute_time=1e-3)
+        off = run_fixed_point(_jac(), RunConfig(**base))
+        on = run_fixed_point(_jac(), RunConfig(controller=StaticPolicy(),
+                                               **base))
+        assert off.worker_seconds == 0.0 and off.controller_actions == 0
+        assert on.worker_seconds > 0.0
+        # Full fleet held for the whole run: meter ~= p * wall.
+        assert on.worker_seconds == pytest.approx(4 * on.wall_time, rel=0.05)
+        # And metering does not change the solve itself.
+        assert on.worker_updates == off.worker_updates
+        assert _sha(on.x) == _sha(off.x)
+
+    def test_run_cost_model(self):
+        base = dict(mode="async", executor="virtual", tol=1e-6,
+                    max_updates=10**5, seed=0, compute_time=1e-3)
+        off = run_fixed_point(_jac(), RunConfig(**base))
+        on = run_fixed_point(_jac(), RunConfig(controller=StaticPolicy(),
+                                               **base))
+        assert math.isinf(run_cost(off))  # unmetered: no cost claim
+        assert run_cost(on) == pytest.approx(
+            on.worker_seconds * on.wall_time)
+
+    def test_controller_requires_fixed_selection(self):
+        with pytest.raises(ValueError, match="selection"):
+            run_fixed_point(_jac(), RunConfig(
+                mode="async", executor="virtual", tol=1e-6, seed=0,
+                selection="uniform", controller=StaticPolicy()))

@@ -25,6 +25,7 @@ from repro.chaos import (
     FaultScenario,
     RunTrace,
     ScenarioClock,
+    ScenarioEvent,
     get_scenario,
     replay_trace,
     scenario_library,
@@ -388,6 +389,83 @@ class TestVirtualChaos:
         r_fast = run_fixed_point(_jac(), RunConfig(**base))
         assert r_slow.converged and r_fast.converged
         assert r_slow.wall_time > r_fast.wall_time  # the ramp cost time
+
+
+# --------------------------------------------------------------------- #
+class TestScenarioControllerComposition:
+    """Scripted scenario ("weather") + controller ("pilot") share one
+    idempotent actuation path — composing them must never double-apply a
+    membership event, and the coordinator's safety rails must keep the
+    controller from resurrecting workers the *script* reclaimed."""
+
+    def _wave(self):
+        return (FaultScenario("wave")
+                .preempt(0.02, 1)
+                .preempt(0.03, 2)
+                .join(0.08, 1)
+                .join(0.09, 2))
+
+    def test_adversarial_controller_cannot_double_apply(self):
+        """A controller that re-issues the script's own events every tick
+        (join the script-down workers, preempt the already-gone ones) gets
+        nothing through: each scripted event applies exactly once and the
+        decision log stays empty."""
+        from repro.autoscale import Controller
+
+        class Meddler(Controller):
+            name = "meddler"
+            tick_every = 1
+
+            def decide(self, sig):
+                evs = [ScenarioEvent(sig.t, "join", w)
+                       for w in sorted(sig.scenario_down)]
+                evs += [ScenarioEvent(sig.t, "preempt", w)
+                        for w in range(sig.n_workers)
+                        if w not in sig.active]
+                return evs
+
+        ctl = Meddler()
+        r = run_fixed_point(_jac(), RunConfig(
+            mode="async", tol=1e-6, max_updates=10**5, compute_time=1e-3,
+            seed=0, scenario=self._wave(), controller=ctl))
+        assert r.converged
+        # Exactly the script's four events, each applied once.
+        assert r.preemptions == 2 and r.joins == 2
+        assert r.reassigned_blocks == 4
+        # Every meddling intent was inadmissible: joins of scenario_down
+        # workers (reclaimed infrastructure) and preempts of non-members.
+        assert r.controller_actions == 0
+        assert ctl.decision_log == []
+
+    def test_cooperating_controller_counts_compose(self):
+        """Scripted events and admissible controller actions land in the
+        same counters, each exactly once: a tick-0 static shrink adds one
+        preemption on top of the script's, and the composed run stays
+        bit-reproducible."""
+        from repro.autoscale import StaticPolicy
+
+        base = dict(mode="async", tol=1e-6, max_updates=10**5,
+                    compute_time=1e-3, seed=0)
+
+        def go():
+            ctl = StaticPolicy(size=3)
+            r = run_fixed_point(_jac(), RunConfig(
+                scenario=self._wave(), controller=ctl, **base))
+            return r, ctl
+
+        r1, c1 = go()
+        r2, c2 = go()
+        assert r1.converged and r2.converged
+        # 1 controller shrink (worker 3, the highest id) + 2 scripted.
+        assert r1.controller_actions == 1 == len(c1.decision_log)
+        assert c1.decision_log[0]["kind"] == "preempt"
+        assert c1.decision_log[0]["worker"] == 3
+        assert r1.preemptions == 3 and r1.joins == 2
+        # Composition is deterministic on the virtual backend.
+        assert c1.decision_log == c2.decision_log
+        assert r1.worker_updates == r2.worker_updates
+        assert r1.wall_time == r2.wall_time
+        assert _sha(r1.x) == _sha(r2.x)
 
 
 # --------------------------------------------------------------------- #

@@ -12,6 +12,7 @@ never an error.
 """
 
 import hashlib
+import os
 
 import numpy as np
 import pytest
@@ -145,10 +146,26 @@ class TestThreadBackend:
         assert np.linalg.norm(r.x - p.x_star) < 1e-8
 
     def test_async_threads_converge_to_fixed_point(self):
+        """Async thread runs reach the fixed point within an update budget.
+
+        Regression note: a flat ``max_updates=50000`` was a machine lottery —
+        on a 1-core box the GIL serializes the 4 workers, every snapshot is
+        maximally stale, and the run needs ~48k updates (measured right at
+        the budget's edge; reproduced at seed HEAD).  The budget is now
+        core-count-aware: convergence is gated on *arrivals*, scaled by how
+        oversubscribed the worker threads are, never on wall time.
+        """
         p = ToyContraction()
+        n_workers = 4
+        oversub = max(1, -(-n_workers // (os.cpu_count() or 1)))  # ceil div
+        budget = 50000 * oversub
         r = run_fixed_point(p, RunConfig(mode="async", executor="thread",
-                                         tol=1e-10, max_updates=50000))
-        assert r.converged
+                                         n_workers=n_workers,
+                                         tol=1e-10, max_updates=budget))
+        assert r.converged, (
+            f"no convergence in {r.worker_updates}/{budget} updates "
+            f"(cpu_count={os.cpu_count()})"
+        )
         assert np.linalg.norm(r.x - p.x_star) < 1e-8
         assert r.wall_time > 0.0
         assert r.rounds == r.worker_updates
@@ -253,6 +270,64 @@ class TestWorkerEvalParity:
         assert r.converged
         assert prob.residual_norm(r.x) < tol
         assert r.error_norm < tol / (1 - 0.8) * np.sqrt(prob.n) * 1.01
+
+
+class TestControllerParity:
+    """``controller=target_staleness`` rows of the backend-parity matrix:
+    a closed-loop autoscaling policy reshaping the membership mid-run must
+    leave the fixed point intact on every in-container backend (virtual,
+    thread, process).  Membership accounting must balance: every applied
+    decision is counted, joins never exceed preemptions plus the fleet."""
+
+    CONTROLLER_BACKENDS = ["virtual", "thread", "process"]
+
+    @staticmethod
+    def _controller():
+        from repro.autoscale import get_policy
+
+        # Shrink to 3 of 4 at tick 0, then PI-regulate around p95=2.0 —
+        # small enough problems that the controller provably acts.
+        return get_policy("target_staleness", target=2.0, initial_size=3)
+
+    @pytest.mark.parametrize("backend", backend_params(CONTROLLER_BACKENDS))
+    def test_jacobi_controller_parity(self, backend):
+        from repro.problems import JacobiProblem
+
+        prob = JacobiProblem(grid=8, sweeps=5)
+        tol = 1e-6
+        kw = {"compute_time": 1e-3} if backend == "virtual" else {}
+        ctl = self._controller()
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", executor=backend, n_workers=4, tol=tol,
+            max_updates=10**5, controller=ctl, **kw))
+        assert r.converged
+        assert prob.residual_norm(r.x) < tol
+        assert r.error_norm < 1e-3
+        # Membership accounting balances across the decision loop.
+        assert r.controller_actions == len(ctl.decision_log)
+        assert r.controller_actions >= 1  # the tick-0 shrink always applies
+        assert 0 <= r.joins <= r.preemptions + 4
+        assert 0.0 < r.worker_seconds <= 4 * r.wall_time + 1e-9
+
+    @pytest.mark.parametrize("backend", backend_params(CONTROLLER_BACKENDS))
+    def test_value_iteration_controller_parity(self, backend):
+        from repro.problems import GarnetMDP, ValueIterationProblem
+
+        prob = ValueIterationProblem(
+            GarnetMDP(S=60, A=4, b=5, gamma=0.8, seed=0))
+        tol = 1e-5
+        kw = {"compute_time": 1e-3} if backend == "virtual" else {}
+        ctl = self._controller()
+        r = run_fixed_point(prob, RunConfig(
+            mode="async", executor=backend, n_workers=4, tol=tol,
+            max_updates=10**5, controller=ctl, **kw))
+        assert r.converged
+        assert prob.residual_norm(r.x) < tol
+        assert r.error_norm < tol / (1 - 0.8) * np.sqrt(prob.n) * 1.01
+        assert r.controller_actions == len(ctl.decision_log)
+        assert r.controller_actions >= 1
+        assert 0 <= r.joins <= r.preemptions + 4
+        assert 0.0 < r.worker_seconds <= 4 * r.wall_time + 1e-9
 
 
 class TestProcessBackend:

@@ -30,7 +30,15 @@ Fails when:
   (``repro.chaos.scenario_library()``), or has a scenario without
   sync+async measurements on the virtual backend and a real backend;
 - the scenario table in README.md (after ``<!-- scenario-table -->``)
-  disagrees with the registered chaos library.
+  disagrees with the registered chaos library;
+- ``BENCH_autoscale.json`` (the closed-loop autoscaling benchmark,
+  rewritten by ``make perf``) is missing, lacks its gate spec
+  (backend / controller / min_ratio) or cost model, misses a gated
+  scenario, or a gated scenario lacks the gate backend's arms / best
+  static arm / cost ratio;
+- the policy table in README.md (after ``<!-- policy-table -->``)
+  disagrees with the registered autoscaling policy library
+  (``repro.autoscale.policy_library()``).
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
@@ -51,6 +59,7 @@ HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 TABLE_MARKER = "<!-- executor-table -->"
 SCENARIO_MARKER = "<!-- scenario-table -->"
 SERVICE_MARKER = "<!-- service-table -->"
+POLICY_MARKER = "<!-- policy-table -->"
 
 
 def _slug(heading: str) -> str:
@@ -258,6 +267,74 @@ def check_chaos_trajectory(errors: list) -> None:
                     f"BENCH_chaos.json: {name}.{backend} missing speedup")
 
 
+def check_autoscale_trajectory(errors: list) -> None:
+    """BENCH_autoscale.json must exist, keep its shape, and cover every
+    gated scenario with the gate backend's arms and cost ratio."""
+    path = ROOT / "BENCH_autoscale.json"
+    if not path.exists():
+        errors.append("BENCH_autoscale.json missing "
+                      "(run `python -m benchmarks.autoscale`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_autoscale.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("backend", "controller", "min_ratio"):
+        if key not in gate:
+            errors.append(f"BENCH_autoscale.json: missing gate.{key}")
+    if "cost_model" not in data:
+        errors.append("BENCH_autoscale.json: missing cost_model")
+    scenarios = data.get("scenarios", {})
+    gated = set(gate.get("min_ratio", {}))
+    if gated and not gated <= set(scenarios):
+        errors.append(
+            "BENCH_autoscale.json gated scenarios not all measured: "
+            f"gate={sorted(gated)} file={sorted(scenarios)}")
+    backend = gate.get("backend")
+    controller = gate.get("controller")
+    for name, entry in scenarios.items():
+        if "virtual" not in entry:
+            errors.append(
+                f"BENCH_autoscale.json: {name} missing the virtual "
+                "predictor rows")
+        rows = entry.get(backend)
+        if rows is None:
+            errors.append(
+                f"BENCH_autoscale.json: {name} missing gate backend "
+                f"{backend!r} rows")
+            continue
+        arms = rows.get("arms", {})
+        if controller is not None and controller not in arms:
+            errors.append(
+                f"BENCH_autoscale.json: {name}.{backend} missing the "
+                f"{controller!r} arm")
+        if not any(a.startswith("static_") for a in arms):
+            errors.append(
+                f"BENCH_autoscale.json: {name}.{backend} has no static "
+                "arms to dominate")
+        for key in ("best_static", "cost_ratio"):
+            if key not in rows:
+                errors.append(
+                    f"BENCH_autoscale.json: {name}.{backend} missing {key}")
+
+
+def check_policy_table(errors: list) -> None:
+    from repro.autoscale import policy_library
+
+    text = (ROOT / "README.md").read_text()
+    if POLICY_MARKER not in text:
+        errors.append(f"README.md: missing {POLICY_MARKER} marker")
+        return
+    names = _marker_table_names(text, POLICY_MARKER)
+    library = set(policy_library())
+    if names != library:
+        errors.append(
+            "README.md policy table does not match the autoscale registry: "
+            f"table={sorted(names)} library={sorted(library)}")
+
+
 def check_scenario_table(errors: list) -> None:
     from repro.chaos import scenario_library
 
@@ -299,15 +376,18 @@ def main() -> None:
     check_offload_trajectory(errors)
     check_serve_trajectory(errors)
     check_chaos_trajectory(errors)
+    check_autoscale_trajectory(errors)
+    check_policy_table(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
             print(f"  - {e}")
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
-          "and anchors, executor + scenario + service tables match their "
-          "registries, BENCH_hotpath.json / BENCH_offload.json / "
-          "BENCH_serve.json / BENCH_chaos.json schemas intact)")
+          "and anchors, executor + scenario + service + policy tables "
+          "match their registries, BENCH_hotpath.json / BENCH_offload.json "
+          "/ BENCH_serve.json / BENCH_chaos.json / BENCH_autoscale.json "
+          "schemas intact)")
 
 
 if __name__ == "__main__":
