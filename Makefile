@@ -38,13 +38,21 @@
 #                     (benchmarks/autoscale.py --virtual-only).
 # `make chaos-smoke`— fast chaos-scenario sanity: every scenario in the
 #                     registered library (spot_wave, rolling_restart,
-#                     bimodal_stragglers, flash_crowd) runs sync + async on
-#                     the VIRTUAL backend only, asserting convergence and
-#                     membership accounting (benchmarks/chaos_scenarios.py
+#                     bimodal_stragglers, flash_crowd, sdc_storm) runs sync
+#                     + async on the VIRTUAL backend only, asserting
+#                     convergence and membership/SDC accounting
+#                     (benchmarks/chaos_scenarios.py
 #                     --virtual-only; the measured real-backend sweep +
 #                     BENCH_chaos.json rewrite is `make chaos-bench`).
+# `make recovery-smoke` — fast durable-solve sanity (~10 s, virtual
+#                     backend only): checkpoint/resume is bit-identical to
+#                     an uninterrupted run, and the SDC guard converges
+#                     under a corruption storm where the unguarded run
+#                     fails (benchmarks/recovery.py --smoke; the measured
+#                     process-backend resume-vs-redo gate +
+#                     BENCH_recovery.json rewrite rides in `make perf`).
 # `make smoke`      — docs-check + perf gate + chaos-smoke + serve-smoke
-#                     + autoscale-smoke + ~2 min
+#                     + autoscale-smoke + recovery-smoke + ~2 min
 #                     real-concurrency benchmark: sync-vs-async under a
 #                     100 ms straggler measured on the thread AND process
 #                     backends (asserts the paper's >1.5x async speedup
@@ -55,7 +63,7 @@
 PYTHON ?= python
 
 .PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke \
-	autoscale-smoke
+	autoscale-smoke recovery-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -68,6 +76,7 @@ perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.accel_offload --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.autoscale --check
+	PYTHONPATH=src $(PYTHON) -m benchmarks.recovery --check
 
 serve-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --smoke
@@ -81,7 +90,10 @@ chaos-bench:
 autoscale-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.autoscale --virtual-only
 
-smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke
+recovery-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.recovery --smoke
+
+smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke recovery-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

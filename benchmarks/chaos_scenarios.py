@@ -2,8 +2,8 @@
 
 Runs every scenario registered in the chaos library
 (``repro.chaos.scenario_library()``: ``spot_wave``, ``rolling_restart``,
-``bimodal_stragglers``, ``flash_crowd``) on block Jacobi, sync and async,
-on the virtual + thread + process backends:
+``bimodal_stragglers``, ``flash_crowd``, ``sdc_storm``) on block Jacobi,
+sync and async, on the virtual + thread + process backends:
 
 - the **virtual** rows are calibrated with this machine's measured
   per-update compute cost, so they are *predictions* of each scenario's
@@ -77,7 +77,19 @@ NOMINAL_HORIZON_S = 2.0
 #: RunResult.to_dict() keys kept per run in BENCH_chaos.json
 _KEYS = ("converged", "worker_updates", "wall_time", "arrivals_per_sec",
          "crashes", "restarts", "preemptions", "joins", "reassigned_blocks",
-         "preempt_discards", "service_fractions")
+         "preempt_discards", "service_fractions", "sdc_rejects",
+         "quarantined")
+
+#: Per-scenario RunConfig extras.  sdc_storm corrupts worker returns, so
+#: it runs with the coordinator-side guard on — the benchmark measures
+#: throughput *under screening*; the unguarded failure mode (divergence)
+#: is the subject of benchmarks/recovery.py, not a wall-clock row here.
+SCENARIO_CFG = {"sdc_storm": {"sdc_guard": True}}
+
+#: Scenarios excluded from thread trace capture/replay: sdc_storm's
+#: corruption draws come from the coordinator rng mid-apply, which the
+#: replay clock cannot reproduce against a different arrival order.
+_NO_CAPTURE = {"sdc_storm"}
 
 
 def _problem(fast: bool) -> JacobiProblem:
@@ -115,15 +127,18 @@ def measure(fast: bool = False) -> dict:
             scales[backend] = max(base.wall_time, 1e-3) / NOMINAL_HORIZON_S
         for name in scenario_library():
             entry: dict = {}
+            extra = SCENARIO_CFG.get(name, {})
             for backend, kw in backends:
                 scale = scales[backend]
-                cap = backend == "thread"  # capture + replay the thread run
+                # Capture + replay the thread run (where the scenario's
+                # rng draws replay deterministically).
+                cap = backend == "thread" and name not in _NO_CAPTURE
                 s = run_fixed_point(prob, _cfg(
                     backend, "sync", get_scenario(name, P).scaled(scale),
-                    **kw))
+                    **kw, **extra))
                 acfg = _cfg(backend, "async",
                             get_scenario(name, P).scaled(scale),
-                            capture_trace=cap, **kw)
+                            capture_trace=cap, **kw, **extra)
                 a = run_fixed_point(prob, acfg)
                 entry[backend] = {
                     "sync": result_stats(s, *_KEYS),
@@ -184,23 +199,32 @@ def run_virtual_only(fast: bool = False) -> list:
         # Library timings assume second-scale runs; compress them onto the
         # smoke's short virtual horizon so every script actually fires.
         factory = lambda: get_scenario(name, P).scaled(0.1)  # noqa: E731
-        vs, va = _pair(prob, "virtual", factory, compute_time=2e-3)
+        extra = SCENARIO_CFG.get(name, {})
+        vs, va = _pair(prob, "virtual", factory, compute_time=2e-3, **extra)
         assert vs.converged and va.converged, f"{name}/virtual diverged"
         scn = factory()
         n_pre = sum(1 for ev in scn.events if ev.kind == "preempt")
         # Runs may converge mid-script, so observed counts are bounded by
-        # the scripted ones — and a scripted preemption that fires must
+        # the scripted ones (plus any k-strikes quarantines, which preempt
+        # through the same machinery) — and a preemption that fires must
         # reassign blocks.
-        assert va.preemptions <= n_pre
+        assert va.preemptions <= n_pre + va.quarantined
         assert va.joins <= va.preemptions or va.preemptions == 0
         if va.preemptions and va.preemptions < P:
             assert va.reassigned_blocks > 0, f"{name}: no blocks reassigned"
         assert abs(sum(va.service_fractions.values()) - 1.0) < 1e-6
+        if name == "sdc_storm":
+            # The storm must actually hit the guard: corrupted returns are
+            # rejected (never applied) on both modes, and the run still
+            # converges above.
+            assert va.sdc_rejects > 0, "sdc_storm: guard rejected nothing"
+            assert vs.sdc_rejects > 0, "sdc_storm: sync guard saw nothing"
         for mode, r in (("sync", vs), ("async", va)):
             rows.append(result_row(
                 f"chaos_smoke/{name}/virtual/{mode}", r,
                 f";pre={r.preemptions};joins={r.joins};"
-                f"reassigned={r.reassigned_blocks}"))
+                f"reassigned={r.reassigned_blocks};sdc={r.sdc_rejects};"
+                f"quar={r.quarantined}"))
         rows.append(row(f"chaos_smoke/{name}/virtual/speedup", 0.0,
                         f"pred={vs.wall_time / max(va.wall_time, 1e-9):.2f}x"))
     return rows

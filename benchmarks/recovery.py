@@ -1,0 +1,350 @@
+"""Durable-solve benchmark + gate (BENCH_recovery.json).
+
+Two recovery claims, one committed artifact:
+
+- **Resume beats redo** — a straggler-dominated process-backend solve is
+  killed mid-run by a scripted ``coordinator_crash`` (the warm worker
+  pool survives; only the control plane dies).  Finishing from the latest
+  checkpoint must cost <= ``GATE_MAX_TTS_RATIO`` (0.5x) of the measured
+  restart-from-scratch time-to-solution: the kill lands at ~70% progress
+  with checkpoints every 5%, so the resumed leg redoes <~35% of the work
+  and the ratio holds with margin on any machine where wall time scales
+  with remaining updates (the straggler delay dominates, not constant
+  overheads).
+- **The SDC guard pays for itself** — on the deterministic virtual
+  backend, a bit-flip corruption storm (``FaultProfile.corrupt_prob``)
+  makes the unguarded solve fail its convergence budget, while the
+  guarded solve (``RunConfig.sdc_guard``) converges spending at most
+  ``1/GATE_MIN_SDC_EFFICIENCY`` (1/0.9) times the fault-free arrival
+  budget — rejected arrivals are the only overhead the guard adds.
+
+``--check`` is the ``make perf`` gate; ``REPRO_PERF_SKIP_GATE=1``
+records without gating.  ``--smoke`` (``make recovery-smoke``) is the
+fast virtual-only CI path: checkpoint/resume bit-identity against an
+uninterrupted golden run plus the guarded-vs-unguarded SDC comparison,
+no wall-clock measurement, no JSON rewrite.
+
+Run:  PYTHONPATH=src python -m benchmarks.recovery [--check] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.chaos import FaultScenario
+from repro.core import RunConfig, run_fixed_point, shutdown_pools
+from repro.core.anderson import AndersonConfig
+from repro.core.engine.process import pool_stats
+from repro.core.engine.types import CoordinatorCrash, FaultProfile
+from repro.problems import JacobiProblem
+from repro.recover import (
+    SolveCheckpoint,
+    latest_checkpoint,
+    list_checkpoints,
+    resume_fixed_point,
+)
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_recovery.json"
+
+GATE_MAX_TTS_RATIO = 0.5  # resume-after-kill TTS over restart-from-scratch
+GATE_MIN_SDC_EFFICIENCY = 0.9  # fault-free arrivals over guarded arrivals
+GATE_BACKEND = "process"
+
+#: Resume-vs-redo configuration: the per-update straggler delay dominates
+#: wall time, so TTS is proportional to remaining work units on any host.
+_RESUME_P = 4
+_RESUME_UPDATES = 1200
+_RESUME_DELAY_S = 3e-3
+_KILL_FRAC = 0.7  # scripted crash at this fraction of the scratch TTS
+_CKPT_EVERY = _RESUME_UPDATES // 20  # 5% cadence -> kill finds a >=50% ckpt
+
+#: SDC storm configuration (virtual backend, deterministic).
+_SDC_P = 4
+_SDC_CORRUPT_PROB = 0.05
+_SDC_TOL = 1e-8
+_SDC_BUDGET_FACTOR = 3  # unguarded budget = factor * fault-free arrivals
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+# --------------------------------------------------------------------- #
+# Resume-after-kill vs restart-from-scratch (process backend)
+# --------------------------------------------------------------------- #
+def _resume_cfg(ckpt_dir=None, scenario=None,
+                max_updates=_RESUME_UPDATES, **kw) -> RunConfig:
+    return RunConfig(
+        executor=GATE_BACKEND, mode="async", n_workers=_RESUME_P, seed=11,
+        max_updates=max_updates, tol=1e-300, max_wall=120.0,
+        faults=FaultProfile(delay_mean=_RESUME_DELAY_S,
+                            delay_std=_RESUME_DELAY_S / 3),
+        accel=AndersonConfig(m=5), fire_every=4,
+        checkpoint_every=_CKPT_EVERY if ckpt_dir else None,
+        checkpoint_dir=ckpt_dir, scenario=scenario, **kw)
+
+
+def measure_resume() -> dict:
+    """Kill a solve at ~70% and race the resumed leg against a redo."""
+    prob = JacobiProblem(grid=16, sweeps=10, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        # Spawn the pool outside the timed region: every leg below (the
+        # scratch baseline, the killed run, the resumed run) measures on
+        # identical warm-pool footing.
+        run_fixed_point(prob, _resume_cfg(max_updates=50))
+        t0 = time.perf_counter()
+        scratch = run_fixed_point(prob, _resume_cfg())
+        scratch_s = time.perf_counter() - t0
+        pids_before = sorted(
+            p for st in pool_stats().values() for p in st["pids"])
+
+        kill_at = _KILL_FRAC * scratch_s
+        try:
+            run_fixed_point(prob, _resume_cfg(
+                ckpt_dir=d,
+                scenario=FaultScenario().coordinator_crash(kill_at)))
+            raise RuntimeError(
+                "scripted coordinator_crash never fired — scratch TTS "
+                "estimate was off by more than the whole run")
+        except CoordinatorCrash:
+            pass
+        ckpt = latest_checkpoint(d)
+        if ckpt is None:
+            raise RuntimeError("crash landed before the first checkpoint")
+
+        t0 = time.perf_counter()
+        res = resume_fixed_point(prob, _resume_cfg(ckpt_dir=d), ckpt)
+        resume_s = time.perf_counter() - t0
+        pids_after = sorted(
+            p for st in pool_stats().values() for p in st["pids"])
+        return {
+            "backend": GATE_BACKEND,
+            "total_wu": _RESUME_UPDATES,
+            "scratch_tts_s": scratch_s,
+            "kill_at_s": kill_at,
+            "checkpoint_wu": ckpt.wu,
+            "resume_tts_s": resume_s,
+            "tts_ratio": resume_s / max(scratch_s, 1e-9),
+            "resumed_from": res.resumed_from,
+            "resumed_wu": res.worker_updates,
+            "zero_respawn": pids_before == pids_after,
+            "scratch_converged_wu": scratch.worker_updates,
+        }
+
+
+# --------------------------------------------------------------------- #
+# SDC: guarded vs unguarded under a corruption storm (virtual backend)
+# --------------------------------------------------------------------- #
+def _sdc_cfg(max_updates: int, *, corrupt: bool, guard: bool) -> RunConfig:
+    dirty = FaultProfile(corrupt_prob=_SDC_CORRUPT_PROB,
+                         corrupt_mode="bitflip")
+    faults = {1: dirty, 2: dirty} if corrupt else None
+    return RunConfig(
+        executor="virtual", mode="async", n_workers=_SDC_P, seed=2,
+        tol=_SDC_TOL, max_updates=max_updates, compute_time=1e-3,
+        faults=faults, sdc_guard=guard)
+
+
+def measure_sdc() -> dict:
+    prob = JacobiProblem(grid=16, sweeps=5, seed=0)
+    clean = run_fixed_point(prob, _sdc_cfg(10**6, corrupt=False, guard=False))
+    assert clean.converged, "fault-free baseline failed to converge"
+    a0 = clean.worker_updates
+    budget = _SDC_BUDGET_FACTOR * a0
+
+    guarded = run_fixed_point(prob, _sdc_cfg(budget, corrupt=True, guard=True))
+    g_arrivals = guarded.worker_updates + guarded.sdc_rejects
+    unguarded = run_fixed_point(
+        prob, _sdc_cfg(budget, corrupt=True, guard=False))
+    return {
+        "backend": "virtual",
+        "corrupt_prob": _SDC_CORRUPT_PROB,
+        "fault_free_arrivals": a0,
+        "budget_arrivals": budget,
+        "guarded": {
+            "converged": bool(guarded.converged),
+            "applied": guarded.worker_updates,
+            "rejects": guarded.sdc_rejects,
+            "quarantined": guarded.quarantined,
+            "arrivals": g_arrivals,
+            "efficiency": a0 / max(g_arrivals, 1),
+        },
+        "unguarded": {
+            "converged": bool(unguarded.converged),
+            "applied": unguarded.worker_updates,
+            "residual_norm": float(unguarded.residual_norm),
+        },
+    }
+
+
+# --------------------------------------------------------------------- #
+def check(cur: dict) -> list:
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    res = cur.get("resume", {})
+    ratio = res.get("tts_ratio")
+    if ratio is None:
+        fails.append("resume leg not measured")
+    elif ratio > GATE_MAX_TTS_RATIO:
+        fails.append(
+            f"resume-after-kill TTS is {ratio:.2f}x the scratch TTS "
+            f"(> {GATE_MAX_TTS_RATIO}x) — checkpointed progress is not "
+            "being reused")
+    if res.get("zero_respawn") is False:
+        fails.append("resume respawned pool workers (warm pool not reused)")
+    sdc = cur.get("sdc", {})
+    g = sdc.get("guarded", {})
+    if not g.get("converged"):
+        fails.append("guarded run failed to converge under the SDC storm")
+    eff = g.get("efficiency", 0.0)
+    if eff < GATE_MIN_SDC_EFFICIENCY:
+        fails.append(
+            f"guarded SDC efficiency {eff:.3f} < {GATE_MIN_SDC_EFFICIENCY} "
+            "(guard overhead exceeds 1/0.9x the fault-free arrival budget)")
+    if sdc.get("unguarded", {}).get("converged"):
+        fails.append(
+            "unguarded run converged under the storm — the corruption "
+            "channel is not actually harmful, gate is vacuous")
+    return fails
+
+
+def _rows(cur: dict) -> list:
+    res, sdc = cur["resume"], cur["sdc"]
+    g, u = sdc["guarded"], sdc["unguarded"]
+    return [
+        row("recovery/resume_tts", res["resume_tts_s"] * 1e6,
+            f"ratio={res['tts_ratio']:.2f}x;scratch={res['scratch_tts_s']:.2f}s"
+            f";ckpt_wu={res['checkpoint_wu']};respawn0={res['zero_respawn']}"),
+        row("recovery/sdc_guarded", 0.0,
+            f"eff={g['efficiency']:.3f};rejects={g['rejects']};"
+            f"quar={g['quarantined']};conv={g['converged']}"),
+        row("recovery/sdc_unguarded", 0.0,
+            f"conv={u['converged']};res={u['residual_norm']:.2e}"),
+    ]
+
+
+def _persist(cur: dict) -> None:
+    out = {
+        "description": "durable-solve benchmark: resume-after-kill vs "
+                       "restart-from-scratch on the process backend "
+                       "(coordinator_crash + checkpoint/resume, warm pool "
+                       "kept), and guarded-vs-unguarded convergence under "
+                       "a bit-flip SDC storm on the virtual backend (see "
+                       "benchmarks/recovery.py and docs/architecture.md, "
+                       "'Failure domains & recovery')",
+        "gate": {"backend": GATE_BACKEND,
+                 "max_resume_tts_ratio": GATE_MAX_TTS_RATIO,
+                 "min_sdc_efficiency": GATE_MIN_SDC_EFFICIENCY},
+        "resume": cur["resume"],
+        "sdc": cur["sdc"],
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def measure() -> dict:
+    try:
+        return {"resume": measure_resume(), "sdc": measure_sdc()}
+    finally:
+        shutdown_pools()
+
+
+# --------------------------------------------------------------------- #
+# Smoke: virtual-only durable-solve sanity (~10 s)
+# --------------------------------------------------------------------- #
+def run_smoke() -> list:
+    """Bit-identity of checkpoint/resume on the virtual backend, plus the
+    guarded/unguarded SDC comparison — no wall-clock, no JSON rewrite."""
+    prob = JacobiProblem(grid=16, sweeps=5, seed=0)
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        base = dict(executor="virtual", mode="async", n_workers=4, seed=7,
+                    max_updates=600, tol=1e-300, compute_time=1e-3,
+                    faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+                    accel=AndersonConfig(m=5), fire_every=4)
+        golden = run_fixed_point(prob, RunConfig(**base))
+        ckpted = run_fixed_point(prob, RunConfig(
+            **base, checkpoint_every=200, checkpoint_dir=d))
+        assert _sha(golden.x) == _sha(ckpted.x), \
+            "writing checkpoints changed the trajectory"
+        assert ckpted.checkpoints_written == 3
+        # Resume from the MIDDLE checkpoint (wu=200), so the resumed run
+        # actually re-executes two thirds of the trajectory.
+        ck = SolveCheckpoint.load(list_checkpoints(d)[0])
+        resumed = resume_fixed_point(prob, RunConfig(
+            **base, checkpoint_every=200, checkpoint_dir=d), ck)
+        assert _sha(resumed.x) == _sha(golden.x), \
+            "resumed run diverged from the uninterrupted golden run"
+        assert resumed.resumed_from == ck.tag
+        rows.append(row("recovery_smoke/resume_bit_identity", 0.0,
+                        f"from={ck.tag};wu={resumed.worker_updates};OK"))
+    sdc = measure_sdc()
+    g, u = sdc["guarded"], sdc["unguarded"]
+    assert g["converged"], "smoke: guarded SDC run failed to converge"
+    assert not u["converged"], "smoke: unguarded SDC run converged anyway"
+    assert g["efficiency"] >= GATE_MIN_SDC_EFFICIENCY
+    rows.append(row("recovery_smoke/sdc", 0.0,
+                    f"eff={g['efficiency']:.3f};rejects={g['rejects']};"
+                    f"unguarded_res={u['residual_norm']:.2e};OK"))
+    return rows
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point."""
+    if fast:
+        return run_smoke()
+    cur = measure()
+    _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("recovery_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast virtual-only sanity (no JSON rewrite)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when a recovery gate fails")
+    args = ap.parse_args()
+    if args.smoke:
+        for r in run_smoke():
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print("recovery-smoke: OK (virtual resume bit-identical; SDC guard "
+              "converges where unguarded fails)", file=sys.stderr)
+        return
+    cur = measure()
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    _persist(cur)
+    print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("recovery-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                f"resume TTS <= {GATE_MAX_TTS_RATIO}x scratch on "
+                f"{GATE_BACKEND} + SDC guard efficiency >= "
+                f"{GATE_MIN_SDC_EFFICIENCY}")
+        print(f"recovery-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ MODULES = [
     "accel_offload",      # evaluation-pipeline offload gate (BENCH_offload.json)
     "chaos_scenarios",    # chaos scenario library sweep (BENCH_chaos.json)
     "autoscale",          # closed-loop autoscaling gate (BENCH_autoscale.json)
+    "recovery",           # durable-solve gate (BENCH_recovery.json)
 ]
 
 # ``--smoke`` subset: ~2 min; exercises the real-concurrency thread and

@@ -7,7 +7,8 @@ scripts (timestamped profile changes, preemptions, joins, pauses and
 delay-trace segments) interpreted identically by every engine backend
 (virtual seconds on the simulator, wall seconds on thread/process/ray), a
 registered scenario library (``spot_wave``, ``rolling_restart``,
-``bimodal_stragglers``, ``flash_crowd``), and trace capture/replay for
+``bimodal_stragglers``, ``flash_crowd``, ``sdc_storm``), and trace
+capture/replay for
 postmortem comparison of a measured real-backend run against its
 deterministic virtual re-execution.
 
@@ -29,6 +30,7 @@ from .library import (
     rolling_restart,
     scenario,
     scenario_library,
+    sdc_storm,
     spot_wave,
 )
 from .scenario import EVENT_KINDS, FaultScenario, ScenarioClock, ScenarioEvent
@@ -46,6 +48,7 @@ __all__ = [
     "rolling_restart",
     "bimodal_stragglers",
     "flash_crowd",
+    "sdc_storm",
     "RunTrace",
     "TraceRecorder",
     "replay_trace",

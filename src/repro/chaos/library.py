@@ -22,7 +22,7 @@ from .scenario import FaultScenario
 
 __all__ = ["scenario", "scenario_library", "get_scenario",
            "spot_wave", "rolling_restart", "bimodal_stragglers",
-           "flash_crowd"]
+           "flash_crowd", "sdc_storm"]
 
 _LIBRARY: Dict[str, dict] = {}
 
@@ -107,6 +107,29 @@ def bimodal_stragglers(n_workers: int, *, t0: float = 0.2, t1: float = 4.0,
     s = FaultScenario("bimodal_stragglers",
                       "alternating fast/slow service on worker 0")
     s.bimodal_delay(t0, t1, period, FaultProfile(delay_mean=slow), worker=0)
+    return s
+
+
+@scenario("sdc_storm",
+          "silent-data-corruption storm: a growing fraction of returns "
+          "from half the fleet is corrupted (bit-flips ramping in "
+          "probability), exercising the coordinator-side SDC guard and "
+          "the k-strikes quarantine")
+def sdc_storm(n_workers: int, *, t0: float = 0.3, t1: float = 3.0,
+              p0: float = 0.02, p1: float = 0.25, steps: int = 4,
+              mode: str = "bitflip") -> FaultScenario:
+    s = FaultScenario(
+        "sdc_storm",
+        "ramped corrupt_prob across half the fleet (bit-flip SDC)")
+    dirty = list(range(1, max(2, n_workers // 2 + 1)))
+    # Piecewise-constant ramp: each step raises corrupt_prob on the dirty
+    # subset; clean workers keep the run's baseline profile throughout.
+    for k in range(steps + 1):
+        frac = k / steps
+        prof = FaultProfile(corrupt_prob=p0 + frac * (p1 - p0),
+                            corrupt_mode=mode)
+        for w in dirty:
+            s.set_profile(t0 + frac * (t1 - t0), prof, worker=w)
     return s
 
 

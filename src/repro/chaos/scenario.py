@@ -23,7 +23,12 @@ An event is ``(t, kind, worker, profile)`` with ``kind`` one of:
 - ``pause``       — the worker (or all) stops taking new work after its
   current task; its blocks stay assigned and its in-flight result still
   applies (unlike ``preempt``);
-- ``resume``      — a paused worker is dispatched again.
+- ``resume``      — a paused worker is dispatched again;
+- ``coordinator_crash`` — the control plane itself dies at ``t``:
+  the backend raises :class:`repro.recover.CoordinatorCrash` out of the
+  run (workers drain into their bounded buffers first on the process
+  backend).  Recovery is the serve layer's job — resubmit from the
+  latest checkpoint (``ServiceConfig.crash_retries``).
 
 Delay-trace segments (``bimodal_delay``, ``ramp_delay``) are sugar that
 compiles down to sequences of ``set_profile`` events, so every backend
@@ -45,7 +50,8 @@ from ..core.engine.types import FaultProfile
 
 __all__ = ["ScenarioEvent", "FaultScenario", "ScenarioClock", "EVENT_KINDS"]
 
-EVENT_KINDS = ("set_profile", "preempt", "join", "pause", "resume")
+EVENT_KINDS = ("set_profile", "preempt", "join", "pause", "resume",
+               "coordinator_crash")
 
 
 @dataclass
@@ -109,6 +115,10 @@ class FaultScenario:
     def resume(self, t: float, worker: Optional[int] = None) -> "FaultScenario":
         return self.at(t, "resume", worker)
 
+    def coordinator_crash(self, t: float) -> "FaultScenario":
+        """Kill the control plane at ``t`` (raises CoordinatorCrash)."""
+        return self.at(t, "coordinator_crash")
+
     # ------------------------------------------------------------------ #
     # Delay-trace segments (compile to set_profile sequences)
     # ------------------------------------------------------------------ #
@@ -165,6 +175,10 @@ class FaultScenario:
                 raise ValueError(f"negative event time {ev.t}")
             if ev.kind in ("preempt", "join") and ev.worker is None:
                 raise ValueError(f"{ev.kind} needs an explicit worker")
+            if ev.kind == "coordinator_crash" and ev.worker is not None:
+                raise ValueError(
+                    "coordinator_crash kills the control plane, not a "
+                    "worker; leave worker unset")
             if ev.worker is not None and not 0 <= ev.worker < n_workers:
                 raise ValueError(
                     f"event worker {ev.worker} out of range for "

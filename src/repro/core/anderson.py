@@ -265,6 +265,59 @@ class AndersonState:
         self.last_alpha = None
 
     # ----------------------------------------------------------------- #
+    # Checkpoint/restore (repro.recover)
+    # ----------------------------------------------------------------- #
+    def snapshot(self) -> dict:
+        """Checkpointable state: counters plus the live window, oldest
+        first.  Scratch buffers and the wrap position are not state — a
+        restored window compacted to the front is numerically identical
+        (every Gram/combine operates on contiguous window views)."""
+        out = {
+            "n_accept": int(self.n_accept),
+            "n_reject": int(self.n_reject),
+            "n_fire": int(self.n_fire),
+            "last_alpha": (None if self.last_alpha is None
+                           else np.asarray(self.last_alpha,
+                                           dtype=np.float64).copy()),
+        }
+        if self._len:
+            out["X"] = self._window(self._X).copy()
+            out["G"] = self._window(self._G).copy()
+            out["F"] = self._window(self._F).copy()
+        return out
+
+    def restore(self, snap: dict) -> None:
+        """Inverse of :meth:`snapshot`.
+
+        The window rows land compacted at the front of fresh buffers; the
+        incremental Gram is rebuilt by replaying the per-row rank-1
+        updates (each entry is the same full-length BLAS dot product the
+        uninterrupted run computed, so subsequent fires stay on the same
+        float sequence in both Gram modes).
+        """
+        self.n_accept = int(snap["n_accept"])
+        self.n_reject = int(snap["n_reject"])
+        self.n_fire = int(snap["n_fire"])
+        la = snap.get("last_alpha")
+        self.last_alpha = None if la is None else np.asarray(la, np.float64)
+        X = snap.get("X")
+        if X is None:
+            self._start = self._len = 0
+            return
+        X = np.asarray(X, np.float64)
+        h, n = X.shape
+        self._alloc(n)
+        self._X[:h] = X
+        self._G[:h] = np.asarray(snap["G"], np.float64)
+        self._F[:h] = np.asarray(snap["F"], np.float64)
+        self._start, self._len = 0, h
+        if self._B is not None:
+            for k in range(h):
+                r = self._F[:k + 1] @ self._F[k]
+                self._B[k, :k + 1] = r
+                self._B[:k + 1, k] = r
+
+    # ----------------------------------------------------------------- #
     # Extrapolation
     # ----------------------------------------------------------------- #
     def propose(self) -> Optional[np.ndarray]:

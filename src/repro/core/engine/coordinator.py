@@ -282,6 +282,36 @@ class Coordinator:
             raise ValueError(
                 "capture_trace records async schedules only (a sync run is "
                 "already reproducible from its round plan)")
+        if cfg.checkpoint_every is not None:
+            if cfg.checkpoint_every < 1:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1 (got {cfg.checkpoint_every})")
+            if not cfg.checkpoint_dir:
+                raise ValueError(
+                    "checkpoint_every requires checkpoint_dir (where the "
+                    "SolveCheckpoint JSON + npz files land)")
+            if cfg.mode != "async":
+                raise ValueError(
+                    "checkpointing covers async solves only (a sync run is "
+                    "already reproducible from its round plan)")
+            if cfg.accel_eval == "worker" or cfg.eval_time is not None:
+                # Arrival boundaries are the consistency points; offloaded
+                # fires / the eval-cost model keep evaluation plans in
+                # flight across them, so a snapshot there is not consistent.
+                raise ValueError(
+                    "checkpointing requires accel_eval='coordinator' and no "
+                    "eval_time (in-flight offloaded evaluations cannot be "
+                    "checkpointed)")
+        if cfg.resume_from is not None:
+            if cfg.scenario is not None or cfg.controller is not None \
+                    or cfg.capture_trace:
+                raise ValueError(
+                    "a resumed run cannot re-attach a scenario, controller "
+                    "or trace capture (their state died with the control "
+                    "plane); use repro.recover.resume_fixed_point, which "
+                    "strips them")
+            if cfg.mode != "async":
+                raise ValueError("resume_from covers async solves only")
         if cfg.scenario is not None or cfg.controller is not None:
             if cfg.accel_eval == "worker" and cfg.executor == "virtual":
                 # Thread/process/ray run offloaded fires through a real
@@ -396,6 +426,22 @@ class Coordinator:
         # preemptions (voluntary shedding) do not land here.
         self.scenario_down: set = set()
         self.controller_actions = 0
+        # --- durable solves (repro.recover) ----------------------------- #
+        # SDC guard state: a sliding window of accepted update norms is the
+        # divergence baseline; per-worker strike counts feed the k-strikes
+        # quarantine.  All of it is inert (and rng-free) when
+        # cfg.sdc_guard is off, so default paths stay bit-identical.
+        self.sdc_rejects = 0
+        self.quarantined = 0
+        self._sdc_norms: List[float] = []
+        self._sdc_strikes: dict = {}
+        self._sdc_block_rejects: dict = {}  # block key -> consecutive rejects
+        # Checkpoint bookkeeping: backends call maybe_checkpoint at arrival
+        # boundaries; _last_ckpt_wu stops a wu that stalls on drops from
+        # re-writing the same checkpoint.
+        self.checkpoints_written = 0
+        self.resumed_from: Optional[str] = None
+        self._last_ckpt_wu = -1
         self.probe = None
         if cfg.controller is not None:
             from ...autoscale.signals import SignalProbe  # lazy: optional
@@ -526,6 +572,17 @@ class Coordinator:
                 self.paused.clear()
             else:
                 self.paused.discard(ev.worker)
+        elif ev.kind == "coordinator_crash":
+            # The one event that targets the control plane itself, not a
+            # worker.  Raising here unwinds whatever backend loop applied
+            # the event; workers keep draining into their bounded buffers
+            # and the serve layer's retry policy resubmits from the latest
+            # checkpoint (repro.recover).
+            from .types import CoordinatorCrash
+
+            raise CoordinatorCrash(
+                f"scenario killed the coordinator at t={t:.6g} "
+                f"(wu={self.wu})")
         else:
             raise ValueError(f"unknown scenario event kind {ev.kind!r}")
         if self.tracer is not None:
@@ -681,11 +738,39 @@ class Coordinator:
             return False
         if profile.noise_std > 0.0:
             values = values + self.rng.normal(0.0, profile.noise_std, values.shape)
+        if profile.sample_corrupt(self.rng):
+            # Silent-data-corruption channel: the block was corrupted in
+            # flight.  Injected coordinator-side (one code path for all
+            # four backends), drawn from the coordinator rng so virtual
+            # runs stay deterministic; rng untouched when disabled.
+            values = profile.corrupt(values, self.rng)
         # (full_map returns arrive already restricted to the worker's owned
         # components by the worker_eval wrapper — paper §6 redesign keeps
         # ownership but evaluates globally — so both return modes apply
         # identically here.)
         ind = self._block_slices.get(id(indices), indices)
+        if cfg.sdc_guard:
+            if not self._sdc_admit(ind, values):
+                self.sdc_rejects += 1
+                if worker is not None and cfg.sdc_strikes > 0:
+                    s = self._sdc_strikes.get(worker, 0) + 1
+                    self._sdc_strikes[worker] = s
+                    if (s >= cfg.sdc_strikes and worker in self.active
+                            and len(self.active - self.paused) > 1):
+                        # k consecutive strikes: quarantine the repeat
+                        # offender through the elastic-membership machinery
+                        # (its blocks rebalance to the survivors) — but
+                        # never the last dispatchable worker, which would
+                        # wedge the run.
+                        self.preempt_worker(worker)
+                        self.quarantined += 1
+                return False
+            if worker is not None:
+                # Strikes are *consecutive*: an accepted arrival clears the
+                # count, so sporadic screen false-positives (a stale-but-
+                # legitimate return) never push a healthy worker over the
+                # quarantine line in a long run.
+                self._sdc_strikes.pop(worker, None)
         if cfg.block_damping is not None:
             a = cfg.block_damping
             self.x[ind] = (1.0 - a) * self.x[ind] + a * values
@@ -704,6 +789,93 @@ class Coordinator:
         if worker is not None:
             self.applied_by_worker[worker] = (
                 self.applied_by_worker.get(worker, 0) + 1)
+        return True
+
+    #: Block-consensus escape: after this many *consecutive* divergence
+    #: rejections of the same block, the next finite arrival for it is
+    #: admitted regardless of magnitude.  Independent workers keep
+    #: producing the same "divergent" value only when the iterate itself
+    #: holds the corruption (one slipped through while the baseline was
+    #: still warming up) — without the escape the guard would reject the
+    #: correction forever and wedge the block.
+    _SDC_ESCAPE_REJECTS = 3
+
+    @staticmethod
+    def _sdc_block_key(ind):
+        """Hashable identity for the screen's per-block reject counter."""
+        if isinstance(ind, slice):
+            return (ind.start, ind.stop, ind.step)
+        a = np.asarray(ind)
+        return (int(a[0]), int(a[-1]), int(a.size))
+
+    def _sdc_admit(self, ind, values: np.ndarray) -> bool:
+        """SDC screen for one arriving block (``cfg.sdc_guard`` only).
+
+        Two tests: every component finite, and the update norm
+        ``||values - x[ind]||`` within ``cfg.sdc_threshold`` times the
+        median of the last ``cfg.sdc_window`` *accepted* update norms.
+        The baseline warms up before rejecting on divergence (a cold
+        median would misfire on the legitimately large early updates),
+        and admitted norms feed the window, so the baseline tracks the
+        natural decay toward convergence.  A corrupted block is not a
+        stale block: stale returns differ from the live iterate by a few
+        applied updates, corrupted ones by orders of magnitude.
+
+        The per-block consecutive-reject escape (``_SDC_ESCAPE_REJECTS``)
+        keeps the screen self-healing: when a corruption *has* landed in
+        the iterate, the stream of rejected "divergent" arrivals is
+        actually independent workers agreeing on the correction, and the
+        escape lets it through (without feeding its large norm into the
+        baseline window).
+        """
+        if not np.isfinite(values).all():
+            return False
+        upd = float(np.linalg.norm(values - self.x[ind]))
+        base = self._sdc_norms
+        key = self._sdc_block_key(ind)
+        if len(base) >= max(4, self.cfg.sdc_window // 4):
+            med = float(np.median(base))
+            if upd > self.cfg.sdc_threshold * max(med, 1e-300):
+                n = self._sdc_block_rejects.get(key, 0) + 1
+                if n < self._SDC_ESCAPE_REJECTS:
+                    self._sdc_block_rejects[key] = n
+                    return False
+                # Escape: admit the consensus correction; its norm stays
+                # out of the baseline (it describes the corruption, not
+                # the run's natural update scale).
+                self._sdc_block_rejects.pop(key, None)
+                return True
+        self._sdc_block_rejects.pop(key, None)
+        base.append(upd)
+        if len(base) > self.cfg.sdc_window:
+            del base[0]
+        return True
+
+    # ----------------------------------------------------------------- #
+    # Durable solves (repro.recover)
+    # ----------------------------------------------------------------- #
+    def checkpoint_due(self) -> bool:
+        ce = self.cfg.checkpoint_every
+        return (ce is not None and self.wu > 0 and self.wu % ce == 0
+                and self.wu != self._last_ckpt_wu)
+
+    def maybe_checkpoint(self, t: float, loop_state=None) -> bool:
+        """Write a SolveCheckpoint if the cadence says one is due.
+
+        Backends call this at arrival boundaries — a consistent point: no
+        apply, fire or record is mid-flight.  ``loop_state`` is the
+        backend's own resumable loop state (the virtual backend's event
+        heap; cadence counters elsewhere), passed as a dict or a zero-arg
+        callable evaluated only when a checkpoint is actually due.
+        """
+        if not self.checkpoint_due():
+            return False
+        from ...recover.checkpoint import write_checkpoint  # lazy: no cycle
+
+        write_checkpoint(self, t,
+                         loop_state() if callable(loop_state) else loop_state)
+        self._last_ckpt_wu = self.wu
+        self.checkpoints_written += 1
         return True
 
     # ----------------------------------------------------------------- #
@@ -1039,6 +1211,10 @@ class Coordinator:
             worker_seconds=(self.probe.worker_seconds
                             if self.probe is not None else 0.0),
             controller_actions=self.controller_actions,
+            sdc_rejects=self.sdc_rejects,
+            quarantined=self.quarantined,
+            checkpoints_written=self.checkpoints_written,
+            resumed_from=self.resumed_from,
             trace=(self.tracer.to_trace() if self.tracer is not None
                    else None),
         )

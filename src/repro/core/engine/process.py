@@ -87,7 +87,7 @@ from .coordinator import (
     worker_eval,
 )
 from .poolreg import PoolRegistry, payload_key
-from .types import RunConfig, RunResult, _fault_for
+from .types import CoordinatorCrash, RunConfig, RunResult, _fault_for
 
 __all__ = [
     "ProcessPoolExecutor",
@@ -312,13 +312,15 @@ class _WorkerPool:
         partition is O(n) of int64 per queue, real serialization time on
         the warm-run path."""
         seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
-        if cfg.controller is not None:
+        if cfg.controller is not None or cfg.resume_from is not None:
             # Controllers live coordinator-side only and may hold
-            # un-picklable hooks (e.g. a serve-queue depth closure) —
-            # strip before the config crosses the process boundary.
+            # un-picklable hooks (e.g. a serve-queue depth closure);
+            # resume checkpoints carry the coordinator's arrays, which
+            # workers have no use for — strip both before the config
+            # crosses the process boundary.
             import dataclasses as _dc
 
-            cfg = _dc.replace(cfg, controller=None)
+            cfg = _dc.replace(cfg, controller=None, resume_from=None)
         for w, q in enumerate(self.task_qs):
             q.put(("run", cfg, seeds[w], blocks[w]))
         self._await(self.n_workers, {"ready"})
@@ -512,6 +514,12 @@ class ProcessPoolExecutor(Executor):
                     if cfg.capture_trace:
                         return self._run_async_chaos(cfg, coord, pool)
                     return self._run_async(cfg, coord, pool)
+                except CoordinatorCrash:
+                    # coordinator_crash chaos event: the *control plane*
+                    # died, not a worker.  The loop drained every in-flight
+                    # result before unwinding, so the warm pool is clean
+                    # and intact for the resumed session — keep it.
+                    raise
                 except Exception:
                     # A worker error (or timeout) leaves queues in an
                     # unknown state: retire the whole pool rather than
@@ -564,13 +572,42 @@ class ProcessPoolExecutor(Executor):
     def _run_async(
         self, cfg: RunConfig, coord: Coordinator, pool: _WorkerPool
     ) -> RunResult:
-        t0 = time.perf_counter()
-        coord.record(0.0)
         since_fire = 0
         alive = set(range(cfg.n_workers))
+        if cfg.resume_from is not None:
+            # Reconstruct a checkpointed solve on the (warm) pool: restore
+            # the coordinator, push the restored iterate into shared
+            # memory, and continue the wall clock from the checkpoint's
+            # time so wall_time stays cumulative across the kill.  The
+            # pool lease taken in _execute is the same one any other run
+            # takes — a same-payload resume reuses the warm interpreters
+            # with zero respawns.
+            from ...recover.checkpoint import (
+                resolve_checkpoint, restore_coordinator)
+
+            ckpt = resolve_checkpoint(cfg.resume_from)
+            restore_coordinator(coord, ckpt)
+            loop = ckpt.loop
+            if loop.get("kind") != "process_async":
+                raise ValueError(
+                    f"checkpoint loop state is {loop.get('kind')!r}, not "
+                    "resumable on the process backend's async loop")
+            since_fire = int(loop.get("since_fire", 0))
+            alive = {int(w) for w in loop.get("alive", alive)}
+            alive &= {w for w in range(cfg.n_workers)
+                      if coord.dispatchable(w)}
+            pool.write_x(coord)
+            t0 = time.perf_counter() - ckpt.t
+        else:
+            t0 = time.perf_counter()
+            coord.record(0.0)
         pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
         rejoin_owed: Set[int] = set()  # restartable crashes mid-downtime
         stop = False
+
+        def _loop_state():
+            return ({"kind": "process_async", "since_fire": since_fire,
+                     "alive": sorted(alive)}, {})
 
         def dispatch(w: int) -> None:
             idx = coord.select_indices(w)
@@ -616,9 +653,16 @@ class ProcessPoolExecutor(Executor):
                             coord.maybe_fire_accel()
                             since_fire = 0
                     pool.write_x(coord)
+                    if cfg.sdc_guard and not coord.dispatchable(w):
+                        # Quarantined by the k-strikes policy: stop
+                        # dispatching to it (the interpreter stays pooled,
+                        # exactly like a simulated permanent crash).
+                        alive.discard(w)
+                        redispatch = False
                 stop = coord.arrival_tick(time.perf_counter() - t0)
                 if not stop and redispatch:
                     dispatch(w)
+                coord.maybe_checkpoint(time.perf_counter() - t0, _loop_state)
         t = time.perf_counter() - t0
         # In-flight evaluations are discarded (same as the old teardown);
         # draining leaves the pool's queues empty for the next run.
@@ -749,9 +793,16 @@ class ProcessPoolExecutor(Executor):
         eval_worker: Optional[int] = None
         eval_item: Optional[EvalItem] = None
         stop = False
+        crash_box: List[CoordinatorCrash] = []
 
         def elapsed() -> float:
             return time.perf_counter() - t0
+
+        def _loop_state():
+            # Chaos-loop checkpoints resume on the *default* process loop
+            # (the script's remaining events die with the control plane).
+            return ({"kind": "process_async", "since_fire": since_fire,
+                     "alive": sorted(alive)}, {})
 
         def dispatch(w: int) -> None:
             gen = coord.preempt_gen[w]
@@ -818,7 +869,16 @@ class ProcessPoolExecutor(Executor):
                 parked.discard(ev.worker)
 
         def apply_event(ev, now: float) -> None:
-            coord.apply_scenario_event(ev, now)
+            try:
+                coord.apply_scenario_event(ev, now)
+            except CoordinatorCrash as e:
+                # The control plane just died.  Remember the crash and let
+                # the loop fall through to the drain below: workers keep
+                # draining into the pool's bounded queues, which must be
+                # empty before the (kept-warm) pool can serve the resumed
+                # session.
+                crash_box.append(e)
+                return
             plumb(ev)
 
         def ctl_tick(now: float) -> bool:
@@ -842,19 +902,22 @@ class ProcessPoolExecutor(Executor):
 
         for ev in clock.due(0.0):
             apply_event(ev, 0.0)
-        ctl_tick(0.0)  # tick 0: initial fleet shaping before first dispatch
-        for w in sorted(alive):
-            if w in pending:
-                continue  # a t=0 join event already dispatched it
-            if coord.dispatchable(w):
-                dispatch(w)
-            elif w in coord.active:
-                parked.add(w)  # paused before first dispatch: resumable
+        if not crash_box:
+            ctl_tick(0.0)  # tick 0: fleet shaping before first dispatch
+            for w in sorted(alive):
+                if w in pending:
+                    continue  # a t=0 join event already dispatched it
+                if coord.dispatchable(w):
+                    dispatch(w)
+                elif w in coord.active:
+                    parked.add(w)  # paused before first dispatch: resumable
         idle_since = 0.0
-        while alive and not stop:
+        while alive and not stop and not crash_box:
             now = elapsed()
             for ev in clock.due(now):
                 apply_event(ev, now)
+            if crash_box:
+                break
             ctl_tick(now)
             nt = clock.next_time()
             if not pending and not rejoin_owed and eval_worker is None:
@@ -1002,11 +1065,14 @@ class ProcessPoolExecutor(Executor):
                 stop = arrival_tick_either()
                 if not stop:
                     idle_or_park(w)
+                coord.maybe_checkpoint(elapsed(), _loop_state)
         t = elapsed()
         outstanding = set(pending)
         if eval_worker is not None:
             outstanding.add(eval_worker)
         pool.drain(outstanding, rejoin_owed)
+        if crash_box:
+            raise crash_box[0]
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
 

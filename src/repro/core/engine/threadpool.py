@@ -37,7 +37,13 @@ import numpy as np
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor
 from .coordinator import Coordinator, warm_problem, worker_eval
-from .types import FaultProfile, RunConfig, RunResult, _fault_for
+from .types import (
+    CoordinatorCrash,
+    FaultProfile,
+    RunConfig,
+    RunResult,
+    _fault_for,
+)
 
 __all__ = ["ThreadPoolExecutor"]
 
@@ -156,11 +162,37 @@ class ThreadPoolExecutor(Executor):
         # rng (drop/noise/selection) behind the lock and everything else out.
         seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers)
         worker_rngs = [np.random.default_rng(s) for s in seeds]
-        t0 = time.perf_counter()
-        coord.record(0.0)
+        if cfg.resume_from is not None:
+            # Reconstruct a checkpointed solve: the coordinator (and with
+            # it the iterate, rng, Anderson window, counters) restores from
+            # the snapshot; the wall clock continues from the checkpoint's
+            # time so wall_time stays cumulative across the kill.  Worker
+            # rngs re-derive from the seed — deterministic single-worker
+            # fault-free runs continue bit-identically; faulty multi-worker
+            # runs continue correctly (arrival order is real scheduling
+            # either way).
+            from ...recover.checkpoint import (
+                resolve_checkpoint, restore_coordinator)
+
+            ckpt = resolve_checkpoint(cfg.resume_from)
+            restore_coordinator(coord, ckpt)
+            loop = ckpt.loop
+            if loop.get("kind") != "thread_async":
+                raise ValueError(
+                    f"checkpoint loop state is {loop.get('kind')!r}, not "
+                    "resumable on the thread backend's async loop")
+            state["since_fire"] = int(loop.get("since_fire", 0))
+            t0 = time.perf_counter() - ckpt.t
+        else:
+            t0 = time.perf_counter()
+            coord.record(0.0)
 
         def elapsed() -> float:
             return time.perf_counter() - t0
+
+        def _loop_state():
+            return ({"kind": "thread_async",
+                     "since_fire": state["since_fire"]}, {})
 
         def worker_loop(w: int) -> None:
             prof = _fault_for(cfg, w)
@@ -168,6 +200,11 @@ class ThreadPoolExecutor(Executor):
             while not stop.is_set():
                 with lock, coord.busy():
                     if stop.is_set():
+                        return
+                    if not coord.dispatchable(w):
+                        # Quarantined by the k-strikes SDC policy, or out
+                        # of a resumed membership: this thread is done
+                        # (static fault-free runs never take this exit).
                         return
                     x_snap = coord.x.copy()
                     launch_wu = coord.wu
@@ -209,6 +246,7 @@ class ThreadPoolExecutor(Executor):
                             state["since_fire"] = 0
                     if coord.arrival_tick(elapsed()):
                         stop.set()
+                    coord.maybe_checkpoint(elapsed(), _loop_state)
 
         threads = [
             threading.Thread(target=worker_loop, args=(w,), daemon=True,
@@ -325,7 +363,8 @@ class ThreadPoolExecutor(Executor):
         lock = threading.Lock()
         cond = threading.Condition(lock)
         stop = threading.Event()
-        state = {"since_fire": 0, "fire_plan": None, "rec_plan": None}
+        state = {"since_fire": 0, "fire_plan": None, "rec_plan": None,
+                 "crash": None}
         clock = ScenarioClock(cfg.scenario)
         seeds = np.random.SeedSequence(cfg.seed).spawn(cfg.n_workers + 1)
         worker_rngs = [np.random.default_rng(s) for s in seeds[:-1]]
@@ -443,8 +482,18 @@ class ThreadPoolExecutor(Executor):
                                 cond.notify_all()
                 with cond:
                     now = elapsed()
-                    for ev in clock.due(now):
-                        coord.apply_scenario_event(ev, now)
+                    try:
+                        for ev in clock.due(now):
+                            coord.apply_scenario_event(ev, now)
+                    except CoordinatorCrash as e:
+                        # The control plane just died.  Stop every worker
+                        # (they drain their in-flight results and exit —
+                        # nothing commits past this point) and hand the
+                        # crash to the main thread to re-raise.
+                        state["crash"] = e
+                        stop.set()
+                        cond.notify_all()
+                        return
                     if ctl:
                         coord.controller_tick(now)
                     cond.notify_all()
@@ -553,6 +602,10 @@ class ThreadPoolExecutor(Executor):
                         # of this very worker parks it at the loop top (its
                         # gen is stale now); a join frees a parked worker.
                         cond.notify_all()
+                    coord.maybe_checkpoint(
+                        elapsed(),
+                        lambda: ({"kind": "thread_async",
+                                  "since_fire": state["since_fire"]}, {}))
 
         threads = [
             threading.Thread(target=worker_loop, args=(w,), daemon=True,
@@ -570,6 +623,11 @@ class ThreadPoolExecutor(Executor):
         driver.join(timeout=5.0)
         if eval_pool is not None:
             eval_pool.shutdown(wait=True)
+        if state["crash"] is not None:
+            # coordinator_crash scenario event: the run has no result — the
+            # serve layer's retry policy resubmits from the latest
+            # checkpoint (repro.recover).
+            raise state["crash"]
         t = elapsed()
         with lock:
             coord.record(t)
@@ -652,6 +710,8 @@ class ThreadPoolExecutor(Executor):
                 with lock, coord.busy():
                     if stop.is_set():
                         return
+                    if not coord.dispatchable(w):
+                        return  # quarantined by the k-strikes SDC policy
                     x_snap = coord.x.copy()
                     launch_wu = coord.wu
                     bid, idx = coord.next_dispatch(w)

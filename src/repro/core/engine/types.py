@@ -16,7 +16,19 @@ import numpy as np
 
 from ..anderson import AndersonConfig
 
-__all__ = ["FaultProfile", "RunConfig", "RunResult"]
+__all__ = ["FaultProfile", "RunConfig", "RunResult", "CoordinatorCrash"]
+
+
+class CoordinatorCrash(RuntimeError):
+    """The control plane died mid-solve.
+
+    Raised out of a backend's coordinator loop when a chaos scenario's
+    ``coordinator_crash`` event fires: the session fails (workers keep
+    draining into their bounded buffers and are torn down with the loop),
+    and any checkpoints written so far stay on disk.  The serve layer's
+    crash-retry policy (``ServiceConfig.crash_retries``) catches exactly
+    this type and resubmits the solve from the latest checkpoint.
+    """
 
 
 @dataclass
@@ -48,6 +60,17 @@ class FaultProfile:
     # lost in flight.  The coordinator falls back to evaluating that item
     # itself, so a lossy eval service degrades throughput, never correctness.
     eval_crash_prob: float = 0.0
+    # Silent-data-corruption channel (Coleman & Sosonkina-style faults that
+    # *corrupt* data instead of delaying it): with probability
+    # ``corrupt_prob`` per returned update, the worker's value block is
+    # corrupted in flight.  Unlike delay/staleness this is not a bounded
+    # perturbation — a single corrupted block poisons the iterate and every
+    # subsequent Anderson window unless the coordinator-side guard
+    # (``RunConfig.sdc_guard``) rejects it.  Modes: ``"bitflip"`` flips one
+    # random bit of one float64 element, ``"nan"`` overwrites one element
+    # with NaN, ``"scale"`` multiplies one element by 1e8.
+    corrupt_prob: float = 0.0
+    corrupt_mode: str = "bitflip"  # "bitflip" | "nan" | "scale"
 
     def sample_delay(self, rng: np.random.Generator) -> float:
         if self.delay_mean == 0.0 and self.delay_std == 0.0:
@@ -57,6 +80,27 @@ class FaultProfile:
     def sample_crash(self, rng: np.random.Generator) -> bool:
         """Draw a crash event; consumes randomness only when enabled."""
         return self.crash_prob > 0.0 and rng.random() < self.crash_prob
+
+    def sample_corrupt(self, rng: np.random.Generator) -> bool:
+        """Draw an SDC event; consumes randomness only when enabled."""
+        return self.corrupt_prob > 0.0 and rng.random() < self.corrupt_prob
+
+    def corrupt(self, values: np.ndarray,
+                rng: np.random.Generator) -> np.ndarray:
+        """Return a corrupted *copy* of ``values`` (one element hit)."""
+        v = np.array(values, dtype=np.float64)
+        i = int(rng.integers(v.size))
+        if self.corrupt_mode == "nan":
+            v[i] = np.nan
+        elif self.corrupt_mode == "scale":
+            v[i] *= 1e8
+        elif self.corrupt_mode == "bitflip":
+            bit = np.uint64(int(rng.integers(64)))
+            u = v.view(np.uint64)
+            u[i] ^= np.uint64(1) << bit
+        else:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}")
+        return v
 
 
 @dataclass
@@ -148,6 +192,32 @@ class RunConfig:
     # deterministic postmortem replay (repro.chaos.replay_trace).  Async
     # mode with selection="fixed" only.
     capture_trace: bool = False
+    # --- durable solves (repro.recover) ----------------------------------- #
+    # Write a SolveCheckpoint (JSON + npz under checkpoint_dir) every this
+    # many applied worker updates: a consistent coordinator snapshot taken
+    # at an arrival boundary (iterate, rng, Anderson window, membership,
+    # accounting, and — on the virtual backend — the event heap, so a
+    # resumed virtual run is bit-identical to the uninterrupted one).
+    # None disables checkpointing and leaves every default loop untouched.
+    checkpoint_every: Optional[int] = None
+    checkpoint_dir: Optional[str] = None  # required when checkpoint_every set
+    # Resume handle: a repro.recover.SolveCheckpoint (or a path to one).
+    # The backend restores the coordinator from it before entering its loop
+    # instead of starting from problem.initial_state(); use
+    # repro.recover.resume_fixed_point rather than setting this directly.
+    resume_from: Optional[object] = None
+    # --- SDC quarantine (coordinator-side guard) --------------------------- #
+    # Screen every arriving block for NaN/Inf and for update norms that
+    # diverge from a windowed baseline of recently accepted update norms;
+    # rejected arrivals count RunResult.sdc_rejects (never applied), and a
+    # worker collecting sdc_strikes rejections is quarantined — preempted
+    # through the elastic-membership machinery, its blocks rebalanced to
+    # the survivors (RunResult.quarantined).  Off by default: the guard
+    # consumes no randomness and default paths stay bit-identical.
+    sdc_guard: bool = False
+    sdc_window: int = 32  # baseline window (accepted update norms)
+    sdc_threshold: float = 25.0  # reject when norm > threshold * median
+    sdc_strikes: int = 3  # rejections before quarantine (0 => never)
 
 
 @dataclass
@@ -201,6 +271,11 @@ class RunResult:
     # controller is configured (the probe owns the meter); 0.0 otherwise.
     worker_seconds: float = 0.0
     controller_actions: int = 0  # applied controller decisions
+    # --- durable solves (repro.recover) ------------------------------------ #
+    sdc_rejects: int = 0  # corrupted arrivals rejected by the SDC guard
+    quarantined: int = 0  # workers quarantined by the k-strikes policy
+    checkpoints_written: int = 0  # SolveCheckpoints written this run
+    resumed_from: Optional[str] = None  # checkpoint tag this run resumed from
     # --- trace capture (cfg.capture_trace) -------------------------------- #
     trace: Optional[object] = None  # repro.chaos.RunTrace
 

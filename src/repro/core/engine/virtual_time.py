@@ -148,7 +148,6 @@ class VirtualTimeExecutor(Executor):
         compute: float
     ) -> RunResult:
         t = 0.0
-        coord.record(t)
         # Event tuples: (done, seq, worker, launch_wu, idx, vals); a restart
         # marker has idx=None and performs the relaunch when *popped*, so
         # the restarted worker snapshots x after its downtime — the same
@@ -170,19 +169,89 @@ class VirtualTimeExecutor(Executor):
             heapq.heappush(heap, (at, seq, worker, coord.wu, None, None))
             seq += 1
 
-        for w in range(cfg.n_workers):
-            launch(w, 0.0)
+        def loop_state():
+            """Resumable loop state for a SolveCheckpoint: the event heap
+            (block-id references where possible; payload arrays in the npz)
+            plus the cadence counters and the measured compute cost (reused
+            on resume so ``done`` arithmetic replays exactly)."""
+            block_ids = {id(blk): b for b, blk in enumerate(coord.blocks)}
+            meta = {"kind": "virtual_async", "t": t, "seq": seq,
+                    "compute": compute, "since_record": since_record,
+                    "since_fire": since_fire, "arrivals": arrivals,
+                    "heap": []}
+            arrays = {}
+            for k, (done, s, w, lwu, idx, vals) in enumerate(heap):
+                ent = {"done": done, "seq": s, "worker": w, "launch_wu": lwu}
+                if idx is None:
+                    ent["kind"] = "restart"
+                else:
+                    ent["kind"] = "work"
+                    bid = block_ids.get(id(idx))
+                    if bid is not None:
+                        ent["block"] = bid
+                    else:  # dynamic selection: store the index set itself
+                        arrays[f"heap_idx_{k}"] = np.asarray(idx)
+                    arrays[f"heap_vals_{k}"] = np.asarray(vals)
+                meta["heap"].append(ent)
+            return meta, arrays
 
-        since_record = 0  # arrivals (applied or not) since last residual check
-        since_fire = 0
-        arrivals = 0
+        if cfg.resume_from is not None:
+            # Reconstruct a checkpointed solve: restore the coordinator,
+            # rebuild the event heap against *this* coordinator's memoized
+            # block objects (the id-keyed slice cache must recognize them),
+            # and skip the initial record/launches — both already happened
+            # before the snapshot.  From here the loop replays the exact
+            # float/rng sequence of the uninterrupted run.
+            from ...recover.checkpoint import (
+                resolve_checkpoint, restore_coordinator)
+
+            ckpt = resolve_checkpoint(cfg.resume_from)
+            restore_coordinator(coord, ckpt)
+            loop = ckpt.loop
+            if loop.get("kind") != "virtual_async":
+                raise ValueError(
+                    f"checkpoint loop state is {loop.get('kind')!r}, not "
+                    "resumable on the virtual backend's default async loop")
+            t = float(loop["t"])
+            seq = int(loop["seq"])
+            compute = float(loop["compute"])
+            since_record = int(loop["since_record"])
+            since_fire = int(loop["since_fire"])
+            arrivals = int(loop["arrivals"])
+            for k, ent in enumerate(loop["heap"]):
+                if ent["kind"] == "restart":
+                    idx = vals = None
+                elif "block" in ent:
+                    idx = coord.blocks[int(ent["block"])]
+                    vals = ckpt.arrays[f"heap_vals_{k}"]
+                else:
+                    idx = ckpt.arrays[f"heap_idx_{k}"]
+                    vals = ckpt.arrays[f"heap_vals_{k}"]
+                heap.append((float(ent["done"]), int(ent["seq"]),
+                             int(ent["worker"]), int(ent["launch_wu"]),
+                             idx, vals))
+            heapq.heapify(heap)
+        else:
+            coord.record(t)
+            for w in range(cfg.n_workers):
+                launch(w, 0.0)
+            since_record = 0  # arrivals (applied or not) since last record
+            since_fire = 0
+            arrivals = 0
+
         while (heap and coord.wu < cfg.max_updates
                and arrivals < coord.max_arrivals):
             t, _, worker, launch_wu, idx, vals = heapq.heappop(heap)
             prof = _fault_for(cfg, worker)
             if idx is None:  # restart marker: worker rejoins now
                 coord.restarts += 1
-                launch(worker, t)
+                if coord.dispatchable(worker):
+                    launch(worker, t)
+                continue
+            if cfg.sdc_guard and worker not in coord.active:
+                # In-flight result of a worker the k-strikes policy already
+                # quarantined: discard, same as a preempted incarnation.
+                coord.preempt_discards += 1
                 continue
             arrivals += 1
             crashed = prof.sample_crash(coord.rng)
@@ -190,7 +259,8 @@ class VirtualTimeExecutor(Executor):
                 coord.crashes += 1
             else:
                 applied = coord.apply_return(
-                    idx, vals, prof, staleness=coord.wu - launch_wu
+                    idx, vals, prof, staleness=coord.wu - launch_wu,
+                    worker=worker if cfg.sdc_guard else None,
                 )
                 if applied:
                     since_fire += 1
@@ -210,8 +280,9 @@ class VirtualTimeExecutor(Executor):
             if crashed:
                 if prof.restart_after is not None:
                     schedule_restart(worker, t + prof.restart_after)
-                continue  # permanent crash: worker never relaunches
-            launch(worker, t)
+            elif coord.dispatchable(worker):
+                launch(worker, t)
+            coord.maybe_checkpoint(t, loop_state)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
 
@@ -367,9 +438,51 @@ class VirtualTimeExecutor(Executor):
         since_record = 0
         since_fire = 0
         arrivals = 0
+        t_now = 0.0
+
+        def loop_state():
+            """Chaos-loop checkpoints resume on the *default* loop (the
+            scenario's remaining events die with the control plane, by
+            contract), so the state is emitted in the default loop's
+            ``virtual_async`` format: pending chaos events are dropped,
+            and so are in-flight results/restarts of preempted
+            incarnations — the live loop would discard them anyway."""
+            block_ids = {id(blk): b for b, blk in enumerate(coord.blocks)}
+            meta = {"kind": "virtual_async", "t": t_now, "seq": seq,
+                    "compute": compute, "since_record": since_record,
+                    "since_fire": since_fire, "arrivals": arrivals,
+                    "heap": []}
+            arrays = {}
+            for done, s, tag, data in heap:
+                k = len(meta["heap"])  # arrays key by *kept* position
+                if tag == "chaos":
+                    continue
+                if tag == "restart":
+                    w, gen = data
+                    if gen != coord.preempt_gen[w]:
+                        continue
+                    meta["heap"].append(
+                        {"done": done, "seq": s, "worker": w,
+                         "launch_wu": coord.wu, "kind": "restart"})
+                    continue
+                w, gen, lwu, idx, vals = data
+                if gen != coord.preempt_gen[w]:
+                    continue
+                ent = {"done": done, "seq": s, "worker": w,
+                       "launch_wu": lwu, "kind": "work"}
+                bid = block_ids.get(id(idx))
+                if bid is not None:
+                    ent["block"] = bid
+                else:
+                    arrays[f"heap_idx_{k}"] = np.asarray(idx)
+                arrays[f"heap_vals_{k}"] = np.asarray(vals)
+                meta["heap"].append(ent)
+            return meta, arrays
+
         while (heap and coord.wu < cfg.max_updates
                and arrivals < coord.max_arrivals):
             t, _, tag, data = heapq.heappop(heap)
+            t_now = t
             if tag == "chaos":
                 (ev,) = data
                 was_paused = set(coord.paused)
@@ -448,11 +561,11 @@ class VirtualTimeExecutor(Executor):
             if crashed:
                 if prof.restart_after is not None:
                     push(t + prof.restart_after, "restart", (worker, gen))
-                continue  # permanent crash: worker never relaunches
-            if coord.dispatchable(worker):
+            elif coord.dispatchable(worker):
                 launch(worker, t)
             elif worker in coord.active:  # paused mid-flight: park
                 parked.add(worker)
+            coord.maybe_checkpoint(t, loop_state)
         coord.record(t)
         return coord.result(t, coord.wu, coord.converged())
 

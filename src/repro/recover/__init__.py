@@ -1,0 +1,47 @@
+"""Durable solves: checkpoint/restore, crash recovery, SDC quarantine.
+
+Three failure domains, one subsystem:
+
+- **Checkpoint/restore** — :class:`SolveCheckpoint` snapshots the full
+  coordinator state (iterate, rng, Anderson window + Gram, membership,
+  accounting) plus the backend's resumable loop state at arrival
+  boundaries; :func:`resume_fixed_point` reconstructs the session on any
+  backend, bit-identically on virtual/thread.
+- **Coordinator crash recovery** — the ``coordinator_crash`` chaos event
+  raises :class:`CoordinatorCrash` out of the control plane; the serve
+  layer's retry policy (``ServiceConfig.crash_retries``) catches it and
+  resubmits from the latest checkpoint with at-most-once commits.
+- **SDC quarantine** — ``FaultProfile.corrupt_prob`` injects bit-flip /
+  NaN / scale corruption at worker returns; the coordinator-side guard
+  (``RunConfig.sdc_guard``) screens NaN/Inf and residual-divergent
+  arrivals and quarantines repeat offenders (``RunConfig.sdc_strikes``)
+  through the elastic-membership preempt machinery.
+
+See docs/architecture.md "Failure domains & recovery".
+"""
+
+from ..core.engine.types import CoordinatorCrash
+from .checkpoint import (
+    SolveCheckpoint,
+    capture,
+    latest_checkpoint,
+    list_checkpoints,
+    resolve_checkpoint,
+    restore_coordinator,
+    write_checkpoint,
+)
+from .resume import resume_config, resume_fixed_point, submit_resume
+
+__all__ = [
+    "CoordinatorCrash",
+    "SolveCheckpoint",
+    "capture",
+    "write_checkpoint",
+    "latest_checkpoint",
+    "list_checkpoints",
+    "resolve_checkpoint",
+    "restore_coordinator",
+    "resume_config",
+    "resume_fixed_point",
+    "submit_resume",
+]

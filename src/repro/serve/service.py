@@ -37,6 +37,8 @@ from typing import Dict, Optional
 from ..core.engine import RunConfig, RunResult, get_executor
 from ..core.engine.coordinator import problem_payload
 from ..core.engine.poolreg import payload_key
+from ..core.engine.types import CoordinatorCrash
+from ..recover import latest_checkpoint, resume_config
 from .scheduler import AdmissionError, FairScheduler, QueuedRequest
 
 __all__ = ["ServiceConfig", "SolverService", "Ticket"]
@@ -52,6 +54,13 @@ class ServiceConfig:
     default_weight: float = 1.0  # weight for tenants not listed
     family_affinity: bool = True  # batch same-payload requests per dispatcher
     affinity_slack: float = 0.5  # max virtual-tag detour for an affinity pick
+    # Coordinator-crash recovery: when a dispatched solve dies with
+    # CoordinatorCrash and the request was checkpointing
+    # (cfg.checkpoint_dir), resubmit it from the latest checkpoint up to
+    # this many times before failing the ticket.  Commits are at-most-once:
+    # checkpoints are written at arrival boundaries, so work applied after
+    # the snapshot is redone by the resumed run, never double-counted.
+    crash_retries: int = 0
 
     def __post_init__(self) -> None:
         if self.max_active < 1:
@@ -160,6 +169,7 @@ class SolverService:
         self._served: Dict[str, int] = {}  # tenant -> completed requests
         self._failed = 0
         self._rejected = 0
+        self._crash_resumes = 0  # coordinator crashes resumed from checkpoint
         self._dispatchers = [
             threading.Thread(target=self._dispatch_loop, args=(i,),
                              name=f"solver-serve-{i}", daemon=True)
@@ -218,9 +228,7 @@ class SolverService:
                     # policy can scale membership with admission pressure.
                     req.cfg.controller.queue_depth_fn = (
                         lambda: len(self._scheduler))
-                session = get_executor(req.cfg.executor).submit(
-                    req.problem, req.cfg, start=False)
-                result = session.execute()
+                result = self._run_request(req)
             except BaseException as e:  # noqa: BLE001 - delivered via ticket
                 with self._cond:
                     self._active -= 1
@@ -236,6 +244,35 @@ class SolverService:
                     self._cond.notify_all()
             last_family = req.family
 
+    def _run_request(self, req) -> RunResult:
+        """Execute one request, resuming through coordinator crashes.
+
+        A dispatched solve that dies with :class:`CoordinatorCrash` is
+        resubmitted from the latest checkpoint in ``cfg.checkpoint_dir``
+        (``ServiceConfig.crash_retries`` attempts) before the ticket
+        fails.  :func:`repro.recover.resume_config` strips the scenario —
+        the script's remaining events died with the control plane — so a
+        scripted crash cannot re-kill the resumed attempt.
+        """
+        cfg = req.cfg
+        attempt = 0
+        while True:
+            try:
+                session = get_executor(cfg.executor).submit(
+                    req.problem, cfg, start=False)
+                return session.execute()
+            except CoordinatorCrash:
+                if (attempt >= self.config.crash_retries
+                        or req.cfg.checkpoint_dir is None):
+                    raise
+                ckpt = latest_checkpoint(req.cfg.checkpoint_dir)
+                if ckpt is None:  # crashed before the first checkpoint
+                    raise
+                attempt += 1
+                with self._cond:
+                    self._crash_resumes += 1
+                cfg = resume_config(req.cfg, ckpt)
+
     # ------------------------------------------------------------------ #
     def stats(self) -> Dict[str, object]:
         with self._cond:
@@ -246,6 +283,7 @@ class SolverService:
                 "served": dict(self._served),
                 "failed": self._failed,
                 "rejected": self._rejected,
+                "crash_resumes": self._crash_resumes,
                 "max_active": self.config.max_active,
                 "closed": self._closed,
             }

@@ -113,7 +113,8 @@ class TestScenarioScript:
     def test_library_registry(self):
         lib = scenario_library()
         assert set(lib) == {"spot_wave", "rolling_restart",
-                            "bimodal_stragglers", "flash_crowd"}
+                            "bimodal_stragglers", "flash_crowd",
+                            "sdc_storm"}
         for name, desc in lib.items():
             assert desc  # human-readable description per entry
             get_scenario(name, 4).validate(4)

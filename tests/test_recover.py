@@ -1,0 +1,517 @@
+"""Durable solves: checkpoint/restore, coordinator crash recovery, SDC.
+
+Covers the acceptance contract of the durable-solve PR:
+
+- SolveCheckpoint save/load round trip (meta + arrays, atomic files);
+- virtual-backend resume is bit-identical to the uninterrupted golden run
+  from the same point, and writing checkpoints never changes a
+  trajectory;
+- thread-backend resume continues bit-identically on a deterministic
+  (single-worker, fault-free) config and correctly otherwise;
+- process-backend resume reuses the warm pool (zero respawns) and a
+  mid-resume dispose() defers until the lease drains;
+- the coordinator_crash scenario event kills the control plane on the
+  thread and process backends, and SolverService.crash_retries resumes
+  the request from the latest checkpoint with at-most-once commits;
+- the SDC guard: corruption modes, NaN/divergence screening, the
+  block-consensus escape, k-strikes quarantine, and guarded-vs-unguarded
+  convergence under a corruption storm;
+- RunResult round-trips the new durable-solve fields and tolerates
+  unknown keys (forward compatibility of committed artifacts).
+"""
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.chaos import FaultScenario
+from repro.core import (
+    FaultProfile,
+    RunConfig,
+    RunResult,
+    available_executors,
+    run_fixed_point,
+)
+from repro.core.anderson import AndersonConfig
+from repro.core.engine.coordinator import Coordinator
+from repro.core.engine.types import CoordinatorCrash
+from repro.problems import JacobiProblem
+from repro.recover import (
+    SolveCheckpoint,
+    capture,
+    latest_checkpoint,
+    list_checkpoints,
+    resolve_checkpoint,
+    resume_config,
+    resume_fixed_point,
+    write_checkpoint,
+)
+
+needs_process = pytest.mark.skipif(
+    "process" not in available_executors(), reason="process backend missing")
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+def _jac():
+    return JacobiProblem(grid=16, sweeps=5, seed=0)
+
+
+def _vcfg(**kw):
+    base = dict(executor="virtual", mode="async", n_workers=4, seed=7,
+                max_updates=600, tol=1e-300, compute_time=1e-3,
+                faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+                accel=AndersonConfig(m=5), fire_every=4)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+# --------------------------------------------------------------------- #
+class TestCheckpointRoundTrip:
+    def test_save_load_round_trip(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        paths = list_checkpoints(str(tmp_path))
+        assert [os.path.basename(p) for p in paths] == [
+            "ckpt-00000200.json", "ckpt-00000400.json", "ckpt-00000600.json"]
+        ck = SolveCheckpoint.load(paths[0])
+        assert ck.tag == "ckpt-00000200" and ck.wu == 200
+        assert ck.meta["executor"] == "virtual"
+        assert "x" in ck.arrays and ck.arrays["x"].dtype == np.float64
+        # The sibling npz rides along whichever path spelling is used.
+        ck2 = SolveCheckpoint.load(paths[0][:-5] + ".npz")
+        np.testing.assert_array_equal(ck.arrays["x"], ck2.arrays["x"])
+
+    def test_resolve_checkpoint_forms(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=300, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        by_dir = resolve_checkpoint(str(tmp_path))
+        assert by_dir.tag == "ckpt-00000600"  # dir resolves to latest
+        by_path = resolve_checkpoint(list_checkpoints(str(tmp_path))[0])
+        assert by_path.tag == "ckpt-00000300"
+        assert resolve_checkpoint(by_path) is by_path  # passthrough
+        with pytest.raises(TypeError):
+            resolve_checkpoint(42)
+
+    def test_capture_restore_preserves_coordinator_state(self):
+        prob = _jac()
+        cfg = _vcfg()
+        r = run_fixed_point(prob, cfg)
+        coord = Coordinator(prob, cfg)
+        coord2 = Coordinator(prob, cfg)
+        coord.x = r.x.copy()
+        coord.wu = 123
+        coord.drops = 4
+        coord._sdc_norms = [0.5, 0.25]
+        coord._sdc_strikes = {2: 1}
+        coord._sdc_block_rejects = {(0, 64, None): 2}
+        ck = capture(coord, t=1.5)
+        from repro.recover import restore_coordinator
+
+        restore_coordinator(coord2, ck)
+        np.testing.assert_array_equal(coord2.x, coord.x)
+        assert coord2.wu == 123 and coord2.drops == 4
+        assert coord2._sdc_norms == [0.5, 0.25]
+        assert coord2._sdc_strikes == {2: 1}
+        assert coord2._sdc_block_rejects == {(0, 64, None): 2}
+        assert coord2.resumed_from == ck.tag
+
+    def test_format_version_checked(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=600, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        path = list_checkpoints(str(tmp_path))[0]
+        meta = json.loads(open(path).read())
+        meta["format"] = 999
+        open(path, "w").write(json.dumps(meta))
+        with pytest.raises(ValueError, match="format"):
+            SolveCheckpoint.load(path)
+
+    def test_no_half_written_checkpoints(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        leftovers = [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+        assert leftovers == []
+
+
+# --------------------------------------------------------------------- #
+class TestVirtualResume:
+    def test_checkpointing_never_changes_the_trajectory(self, tmp_path):
+        golden = run_fixed_point(_jac(), _vcfg())
+        ckpted = run_fixed_point(_jac(), _vcfg(
+            checkpoint_every=200, checkpoint_dir=str(tmp_path)))
+        assert _sha(golden.x) == _sha(ckpted.x)
+        assert golden.wall_time == ckpted.wall_time
+        assert ckpted.checkpoints_written == 3
+
+    @pytest.mark.parametrize("resume_at", [0, 1])
+    def test_resume_bit_identical_to_golden(self, tmp_path, resume_at):
+        prob = _jac()
+        golden = run_fixed_point(prob, _vcfg())
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path))
+        run_fixed_point(prob, cfg)
+        ck = SolveCheckpoint.load(list_checkpoints(str(tmp_path))[resume_at])
+        resumed = resume_fixed_point(prob, cfg, ck)
+        assert _sha(resumed.x) == _sha(golden.x)
+        assert resumed.worker_updates == golden.worker_updates
+        assert resumed.wall_time == golden.wall_time
+        assert resumed.accel_fires == golden.accel_fires
+        assert resumed.accel_accepts == golden.accel_accepts
+        assert resumed.resumed_from == ck.tag
+        assert resumed.history[-1] == golden.history[-1]
+
+    def test_resume_with_selection_rng_and_noise(self, tmp_path):
+        """rng-consuming channels (uniform selection, noise, drops) resume
+        bit-identically too: the checkpoint carries the generator state."""
+        prob = _jac()
+        base = dict(executor="virtual", mode="async", n_workers=4, seed=3,
+                    max_updates=500, tol=1e-300, compute_time=1e-3,
+                    selection="uniform", selection_k=32,
+                    faults=FaultProfile(delay_mean=1e-3, delay_std=5e-4,
+                                        noise_std=1e-9, drop_prob=0.05))
+        golden = run_fixed_point(prob, RunConfig(**base))
+        cfg = RunConfig(**base, checkpoint_every=200,
+                        checkpoint_dir=str(tmp_path))
+        run_fixed_point(prob, cfg)
+        ck = SolveCheckpoint.load(list_checkpoints(str(tmp_path))[0])
+        resumed = resume_fixed_point(prob, cfg, ck)
+        assert _sha(resumed.x) == _sha(golden.x)
+        assert resumed.drops == golden.drops
+
+    def test_resume_config_strips_control_plane(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path),
+                    scenario=FaultScenario().pause(0.1).resume(0.2))
+        run_fixed_point(_jac(), cfg)
+        rc = resume_config(cfg)
+        assert rc.scenario is None and rc.controller is None
+        assert not rc.capture_trace
+        assert rc.resume_from.tag == "ckpt-00000600"
+        assert rc.checkpoint_every == 200  # the chain keeps extending
+
+    def test_resume_validation(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        ck = latest_checkpoint(str(tmp_path))
+        with pytest.raises(ValueError, match="scenario"):
+            run_fixed_point(_jac(), dataclasses.replace(
+                cfg, resume_from=ck,
+                scenario=FaultScenario().pause(0.1)))
+        with pytest.raises(ValueError, match="n_workers"):
+            resume_fixed_point(_jac(), dataclasses.replace(
+                cfg, n_workers=2), ck)
+
+    def test_checkpoint_requires_async(self):
+        with pytest.raises(ValueError, match="async"):
+            run_fixed_point(_jac(), RunConfig(
+                mode="sync", executor="virtual", n_workers=4,
+                max_updates=100, checkpoint_every=10, checkpoint_dir="/tmp"))
+
+
+# --------------------------------------------------------------------- #
+class TestThreadResume:
+    def test_thread_resume_bit_identical_deterministic(self, tmp_path):
+        """n_workers=1, fault-free: the continuation replays the exact
+        arithmetic (worker rngs re-derive from the seed)."""
+        prob = _jac()
+        base = dict(executor="thread", mode="async", n_workers=1, seed=3,
+                    max_updates=400, accel=AndersonConfig(m=5), fire_every=4)
+        golden = run_fixed_point(prob, RunConfig(**base))
+        cfg = RunConfig(**base, checkpoint_every=20,
+                        checkpoint_dir=str(tmp_path))
+        run_fixed_point(prob, cfg)
+        ck = SolveCheckpoint.load(list_checkpoints(str(tmp_path))[1])
+        resumed = resume_fixed_point(prob, cfg, ck)
+        assert _sha(resumed.x) == _sha(golden.x)
+        assert resumed.worker_updates == golden.worker_updates
+        assert resumed.resumed_from == ck.tag
+        # The wall clock continues from the checkpoint, not from zero.
+        assert resumed.wall_time >= ck.t
+
+    def test_thread_resume_multiworker_converges(self, tmp_path):
+        prob = _jac()
+        cfg = RunConfig(executor="thread", mode="async", n_workers=4,
+                        seed=5, tol=1e-8, max_updates=10**5,
+                        faults=FaultProfile(delay_mean=1e-3, delay_std=5e-4),
+                        checkpoint_every=100, checkpoint_dir=str(tmp_path))
+        first = run_fixed_point(prob, cfg)
+        assert first.converged and first.checkpoints_written > 0
+        resumed = resume_fixed_point(prob, cfg)
+        assert resumed.converged
+        assert resumed.resumed_from is not None
+
+
+# --------------------------------------------------------------------- #
+class TestCoordinatorCrash:
+    def _crash_cfg(self, executor, d, t_crash=0.25, **kw):
+        return RunConfig(
+            executor=executor, mode="async", n_workers=2, seed=5,
+            max_updates=1500, tol=1e-300,
+            faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+            checkpoint_every=100, checkpoint_dir=str(d),
+            scenario=FaultScenario().coordinator_crash(t_crash), **kw)
+
+    def test_virtual_scripted_crash_raises(self, tmp_path):
+        with pytest.raises(CoordinatorCrash, match="killed the coordinator"):
+            run_fixed_point(_jac(), RunConfig(
+                executor="virtual", mode="async", n_workers=4, seed=7,
+                max_updates=10**5, tol=1e-300, compute_time=1e-3,
+                checkpoint_every=100, checkpoint_dir=str(tmp_path),
+                scenario=FaultScenario().coordinator_crash(0.2)))
+        assert latest_checkpoint(str(tmp_path)) is not None
+
+    def test_thread_crash_then_resume_at_most_once(self, tmp_path):
+        prob = _jac()
+        cfg = self._crash_cfg("thread", tmp_path)
+        with pytest.raises(CoordinatorCrash):
+            run_fixed_point(prob, cfg)
+        ck = latest_checkpoint(str(tmp_path))
+        assert ck is not None
+        resumed = resume_fixed_point(prob, cfg, ck)
+        # At-most-once commits: total applied work is the full budget,
+        # whatever was in flight at the kill (the checkpointed wu plus the
+        # resumed run's arrivals land exactly on the budget, with nothing
+        # double-counted past max_updates).
+        assert resumed.worker_updates == 1500
+        assert resumed.resumed_from == ck.tag
+
+    def test_service_retry_resumes_from_checkpoint(self, tmp_path):
+        from repro.serve import ServiceConfig, SolverService
+
+        prob = _jac()
+        cfg = self._crash_cfg("thread", tmp_path)
+        svc = SolverService(ServiceConfig(max_active=1, crash_retries=1))
+        try:
+            t = svc.submit(prob, cfg)
+            r = t.result(timeout=120)
+            st = svc.stats()
+        finally:
+            svc.close()
+        assert r.worker_updates == 1500
+        assert r.resumed_from is not None
+        assert st["crash_resumes"] == 1 and st["failed"] == 0
+
+    def test_service_without_retries_fails_the_ticket(self, tmp_path):
+        from repro.serve import ServiceConfig, SolverService
+
+        prob = _jac()
+        cfg = self._crash_cfg("thread", tmp_path)
+        svc = SolverService(ServiceConfig(max_active=1))  # crash_retries=0
+        try:
+            t = svc.submit(prob, cfg)
+            with pytest.raises(CoordinatorCrash):
+                t.result(timeout=120)
+            assert svc.stats()["failed"] == 1
+        finally:
+            svc.close()
+
+    def test_crash_event_validation(self):
+        with pytest.raises(ValueError, match="worker unset"):
+            FaultScenario().at(0.1, "coordinator_crash", worker=1).validate(4)
+
+
+# --------------------------------------------------------------------- #
+@needs_process
+class TestProcessRecovery:
+    def test_crash_keeps_pool_warm_and_resume_reuses_it(self, tmp_path):
+        from repro.core.engine.process import pool_stats, shutdown_pools
+
+        prob = _jac()
+        cfg = RunConfig(
+            executor="process", mode="async", n_workers=2, seed=5,
+            max_updates=1200, tol=1e-300,
+            faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+            checkpoint_every=100, checkpoint_dir=str(tmp_path),
+            scenario=FaultScenario().coordinator_crash(0.4))
+        try:
+            with pytest.raises(CoordinatorCrash):
+                run_fixed_point(prob, cfg)
+            stats = pool_stats()
+            assert stats, "CoordinatorCrash disposed the warm pool"
+            pids = sorted(p for st in stats.values() for p in st["pids"])
+            resumed = resume_fixed_point(prob, cfg)
+            assert resumed.worker_updates == 1200
+            assert resumed.resumed_from is not None
+            stats2 = pool_stats()
+            pids2 = sorted(p for st in stats2.values() for p in st["pids"])
+            assert pids == pids2, "resume respawned pool workers"
+        finally:
+            shutdown_pools()
+
+    def test_dispose_during_resume_defers_until_lease_drains(self, tmp_path):
+        from repro.core.engine import submit_fixed_point
+        from repro.core.engine.process import (
+            _POOLS,
+            pool_stats,
+            shutdown_pools,
+        )
+        from repro.recover import submit_resume
+
+        prob = _jac()
+        cfg = RunConfig(
+            executor="process", mode="async", n_workers=2, seed=5,
+            max_updates=800, tol=1e-300,
+            faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+            checkpoint_every=100, checkpoint_dir=str(tmp_path))
+        try:
+            run_fixed_point(prob, cfg)  # warm pool + checkpoint chain
+            ck = SolveCheckpoint.load(list_checkpoints(str(tmp_path))[2])
+            session = submit_resume(prob, cfg, ck)
+            # Wait until the resume session actually holds its lease —
+            # submit_resume returns before the session thread acquires it.
+            deadline = time.monotonic() + 30
+            while True:
+                stats = pool_stats()
+                if stats and any(st["leases"] > 0 for st in stats.values()):
+                    break
+                assert time.monotonic() < deadline, "lease never acquired"
+                time.sleep(0.01)
+            (key,) = list(stats)
+            # dispose() mid-resume must not kill the leased pool under the
+            # running session; it is torn down once the lease drains.
+            _POOLS.dispose(key)
+            res = session.result()
+            assert res.worker_updates == 800
+            assert res.resumed_from == ck.tag
+            assert key not in pool_stats()  # deferred teardown happened
+        finally:
+            shutdown_pools()
+
+
+# --------------------------------------------------------------------- #
+class TestSDCGuard:
+    def _storm_cfg(self, *, guard, budget=4200, mode="bitflip", prob=0.05,
+                   strikes=0, **kw):
+        dirty = FaultProfile(corrupt_prob=prob, corrupt_mode=mode)
+        base = dict(executor="virtual", mode="async", n_workers=4, seed=2,
+                    tol=1e-8, max_updates=budget, compute_time=1e-3,
+                    faults={1: dirty, 2: dirty}, sdc_guard=guard,
+                    sdc_strikes=strikes)
+        base.update(kw)
+        return RunConfig(**base)
+
+    def test_corrupt_modes(self):
+        rng = np.random.default_rng(0)
+        v = np.ones(16)
+        for mode in ("bitflip", "nan", "scale"):
+            prof = FaultProfile(corrupt_prob=1.0, corrupt_mode=mode)
+            out = prof.corrupt(v, rng)
+            assert out is not v and not np.array_equal(out, v)
+        assert np.isnan(
+            FaultProfile(corrupt_prob=1.0, corrupt_mode="nan").corrupt(
+                v, rng)).sum() == 1
+        with pytest.raises(ValueError, match="corrupt_mode"):
+            FaultProfile(corrupt_prob=1.0, corrupt_mode="bogus").corrupt(
+                v, rng)
+
+    def test_corrupt_draw_consumes_no_rng_when_disabled(self):
+        rng1 = np.random.default_rng(0)
+        rng2 = np.random.default_rng(0)
+        assert not FaultProfile().sample_corrupt(rng1)
+        assert rng1.random() == rng2.random()
+
+    def test_guarded_converges_where_unguarded_fails(self):
+        guarded = run_fixed_point(_jac(), self._storm_cfg(guard=True))
+        unguarded = run_fixed_point(_jac(), self._storm_cfg(guard=False))
+        assert guarded.converged and guarded.sdc_rejects > 0
+        assert not unguarded.converged
+        assert unguarded.residual_norm > 1.0
+
+    def test_guard_efficiency_near_fault_free(self):
+        clean = run_fixed_point(_jac(), self._storm_cfg(
+            guard=False, prob=0.0, faults=None))
+        assert clean.converged
+        guarded = run_fixed_point(_jac(), self._storm_cfg(guard=True))
+        arrivals = guarded.worker_updates + guarded.sdc_rejects
+        assert clean.worker_updates / arrivals >= 0.9
+
+    def test_nan_storm_screened(self):
+        guarded = run_fixed_point(_jac(), self._storm_cfg(
+            guard=True, mode="nan", prob=0.2))
+        assert guarded.converged
+        assert guarded.sdc_rejects > 0
+        assert np.isfinite(guarded.x).all()
+
+    def test_k_strikes_quarantines_repeat_offender(self):
+        # One worker corrupting nearly every return.  k must undercut the
+        # per-block consensus escape (3 consecutive rejects admit), so two
+        # consecutive rejections quarantine it through the preempt
+        # machinery before the escape can let corruption through.
+        dirty = FaultProfile(corrupt_prob=0.95, corrupt_mode="scale")
+        r = run_fixed_point(_jac(), RunConfig(
+            executor="virtual", mode="async", n_workers=4, seed=2,
+            tol=1e-8, max_updates=3 * 10**4, compute_time=1e-3,
+            faults={1: dirty}, sdc_guard=True, sdc_strikes=2))
+        # The offender goes; a poisoned block can strike out its successor
+        # owners too, so the count may exceed one — but every quarantine
+        # flows through the preempt machinery and rebalances blocks.
+        assert r.quarantined >= 1
+        assert r.preemptions == r.quarantined
+        assert r.reassigned_blocks > 0
+        assert r.converged
+
+    def test_quarantine_never_takes_the_last_worker(self):
+        dirty = FaultProfile(corrupt_prob=0.95, corrupt_mode="scale")
+        r = run_fixed_point(_jac(), RunConfig(
+            executor="virtual", mode="async", n_workers=2, seed=2,
+            tol=1e-6, max_updates=3 * 10**4, compute_time=1e-3,
+            faults={0: dirty, 1: dirty}, sdc_guard=True, sdc_strikes=2))
+        assert r.quarantined <= 1  # one of two may go; never both
+
+    def test_guard_off_is_bitwise_inert(self):
+        """sdc_guard=False draws no rng and changes no golden trajectory
+        (the hot-path golden suite pins the same invariant globally)."""
+        a = run_fixed_point(_jac(), _vcfg())
+        b = run_fixed_point(_jac(), _vcfg())
+        assert _sha(a.x) == _sha(b.x)
+
+    def test_block_consensus_escape_heals_slipped_corruption(self):
+        """A corruption that lands in the iterate (while the baseline is
+        warming up) is healed: the stream of rejected corrections is
+        admitted after the per-block escape, so the run still converges
+        instead of wedging on a permanently 'divergent' block."""
+        coord = Coordinator(_jac(), RunConfig(
+            executor="virtual", mode="async", n_workers=4,
+            max_updates=100, sdc_guard=True))
+        ind = slice(0, 8)
+        # Warm the baseline with small accepted norms.
+        for _ in range(8):
+            assert coord._sdc_admit(ind, coord.x[ind] + 1e-6)
+        # A "correction" far from the (poisoned) iterate: rejected twice,
+        # admitted on the third consecutive attempt.
+        fix = coord.x[ind] + 10.0
+        assert not coord._sdc_admit(ind, fix)
+        assert not coord._sdc_admit(ind, fix)
+        assert coord._sdc_admit(ind, fix)
+
+
+# --------------------------------------------------------------------- #
+class TestRunResultDurableFields:
+    def test_new_fields_round_trip(self, tmp_path):
+        cfg = _vcfg(checkpoint_every=200, checkpoint_dir=str(tmp_path))
+        run_fixed_point(_jac(), cfg)
+        ck = SolveCheckpoint.load(list_checkpoints(str(tmp_path))[0])
+        r = resume_fixed_point(_jac(), cfg, ck)
+        assert r.checkpoints_written > 0 and r.resumed_from == ck.tag
+        d = json.loads(json.dumps(r.to_dict()))
+        for key in ("sdc_rejects", "quarantined", "checkpoints_written",
+                    "resumed_from"):
+            assert key in d
+        back = RunResult.from_dict(d)
+        assert back.sdc_rejects == r.sdc_rejects
+        assert back.quarantined == r.quarantined
+        assert back.checkpoints_written == r.checkpoints_written
+        assert back.resumed_from == r.resumed_from
+
+    def test_unknown_keys_tolerated(self):
+        r = run_fixed_point(_jac(), _vcfg(max_updates=50))
+        d = r.to_dict()
+        d["a_future_field"] = {"nested": [1, 2, 3]}
+        back = RunResult.from_dict(d)
+        assert back.worker_updates == r.worker_updates
+        assert not hasattr(back, "a_future_field")

@@ -38,7 +38,16 @@ Fails when:
   static arm / cost ratio;
 - the policy table in README.md (after ``<!-- policy-table -->``)
   disagrees with the registered autoscaling policy library
-  (``repro.autoscale.policy_library()``).
+  (``repro.autoscale.policy_library()``);
+- ``BENCH_recovery.json`` (the durable-solve benchmark, rewritten by
+  ``make perf``) is missing, lacks its gate spec (backend /
+  max_resume_tts_ratio / min_sdc_efficiency), or its resume / sdc
+  sections lack the measured ratio, the zero-respawn record, or the
+  guarded/unguarded arms;
+- the recovery-knob table in README.md (after
+  ``<!-- recovery-knobs -->``) names a knob that exists on neither
+  ``RunConfig`` nor ``FaultProfile``, or omits the load-bearing trio
+  (checkpoint_every / checkpoint_dir / corrupt_prob).
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
@@ -60,6 +69,7 @@ TABLE_MARKER = "<!-- executor-table -->"
 SCENARIO_MARKER = "<!-- scenario-table -->"
 SERVICE_MARKER = "<!-- service-table -->"
 POLICY_MARKER = "<!-- policy-table -->"
+RECOVERY_MARKER = "<!-- recovery-knobs -->"
 
 
 def _slug(heading: str) -> str:
@@ -350,6 +360,63 @@ def check_scenario_table(errors: list) -> None:
             f"table={sorted(names)} library={sorted(library)}")
 
 
+def check_recovery_trajectory(errors: list) -> None:
+    """BENCH_recovery.json must exist and keep its documented shape."""
+    path = ROOT / "BENCH_recovery.json"
+    if not path.exists():
+        errors.append("BENCH_recovery.json missing "
+                      "(run `python -m benchmarks.recovery`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_recovery.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("backend", "max_resume_tts_ratio", "min_sdc_efficiency"):
+        if key not in gate:
+            errors.append(f"BENCH_recovery.json: missing gate.{key}")
+    resume = data.get("resume", {})
+    for key in ("scratch_tts_s", "resume_tts_s", "tts_ratio",
+                "checkpoint_wu", "zero_respawn", "resumed_from"):
+        if key not in resume:
+            errors.append(f"BENCH_recovery.json: missing resume.{key}")
+    sdc = data.get("sdc", {})
+    for arm, keys in (("guarded", ("converged", "efficiency", "rejects")),
+                      ("unguarded", ("converged",))):
+        for key in keys:
+            if key not in sdc.get(arm, {}):
+                errors.append(f"BENCH_recovery.json: missing sdc.{arm}.{key}")
+
+
+def check_recovery_knobs(errors: list) -> None:
+    """Every knob in the README recovery table must exist on RunConfig or
+    FaultProfile, and the load-bearing trio must be documented."""
+    from dataclasses import fields
+
+    from repro.core import FaultProfile, RunConfig
+
+    text = (ROOT / "README.md").read_text()
+    if RECOVERY_MARKER not in text:
+        errors.append(f"README.md: missing {RECOVERY_MARKER} marker")
+        return
+    names = _marker_table_names(text, RECOVERY_MARKER)
+    known = ({f.name for f in fields(RunConfig)}
+             | {f.name for f in fields(FaultProfile)})
+    unknown = names - known
+    if unknown:
+        errors.append(
+            "README.md recovery-knob table names knobs that exist on "
+            "neither RunConfig nor FaultProfile: "
+            f"{sorted(unknown)}")
+    required = {"checkpoint_every", "checkpoint_dir", "corrupt_prob"}
+    missing = required - names
+    if missing:
+        errors.append(
+            "README.md recovery-knob table omits load-bearing knobs: "
+            f"{sorted(missing)}")
+
+
 def check_executor_table(errors: list) -> None:
     from repro.core import known_executors
 
@@ -378,15 +445,18 @@ def main() -> None:
     check_chaos_trajectory(errors)
     check_autoscale_trajectory(errors)
     check_policy_table(errors)
+    check_recovery_trajectory(errors)
+    check_recovery_knobs(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
             print(f"  - {e}")
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
-          "and anchors, executor + scenario + service + policy tables "
-          "match their registries, BENCH_hotpath.json / BENCH_offload.json "
-          "/ BENCH_serve.json / BENCH_chaos.json / BENCH_autoscale.json "
+          "and anchors, executor + scenario + service + policy + "
+          "recovery-knob tables match their registries, "
+          "BENCH_hotpath.json / BENCH_offload.json / BENCH_serve.json / "
+          "BENCH_chaos.json / BENCH_autoscale.json / BENCH_recovery.json "
           "schemas intact)")
 
 
