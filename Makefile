@@ -44,6 +44,12 @@
 #                     (benchmarks/chaos_scenarios.py
 #                     --virtual-only; the measured real-backend sweep +
 #                     BENCH_chaos.json rewrite is `make chaos-bench`).
+# `make kernels-smoke` — fast device-plane sanity (~10 s): the fused
+#                     Pallas block kernels bit-match their numpy oracles in
+#                     interpret mode, and a virtual run ignores the
+#                     device_plane knob (bit-identity contract)
+#                     (tests/test_kernels.py device-plane classes +
+#                     tests/test_device_plane.py resolver/bit-identity).
 # `make recovery-smoke` — fast durable-solve sanity (~10 s, virtual
 #                     backend only): checkpoint/resume is bit-identical to
 #                     an uninterrupted run, and the SDC guard converges
@@ -52,7 +58,8 @@
 #                     process-backend resume-vs-redo gate +
 #                     BENCH_recovery.json rewrite rides in `make perf`).
 # `make smoke`      — docs-check + perf gate + chaos-smoke + serve-smoke
-#                     + autoscale-smoke + recovery-smoke + ~2 min
+#                     + autoscale-smoke + recovery-smoke + kernels-smoke
+#                     + ~2 min
 #                     real-concurrency benchmark: sync-vs-async under a
 #                     100 ms straggler measured on the thread AND process
 #                     backends (asserts the paper's >1.5x async speedup
@@ -63,7 +70,7 @@
 PYTHON ?= python
 
 .PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke \
-	autoscale-smoke recovery-smoke
+	autoscale-smoke recovery-smoke kernels-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -93,7 +100,16 @@ autoscale-smoke:
 recovery-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recovery --smoke
 
-smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke recovery-smoke
+kernels-smoke:
+	PYTHONPATH=src $(PYTHON) -m pytest -q \
+		"tests/test_kernels.py::TestJacobiHaloKernel" \
+		"tests/test_kernels.py::TestBellmanBlockKernel" \
+		"tests/test_device_plane.py::TestResolver" \
+		"tests/test_device_plane.py::TestBitIdentity" \
+		"tests/test_device_plane.py::TestPinModes"
+
+smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke \
+	recovery-smoke kernels-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

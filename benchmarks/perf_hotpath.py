@@ -15,6 +15,11 @@ state sizes:
 3. **process-pool run latency** — a cold ``run()`` (spawn + JAX import +
    jit warm-up) vs a warm one on the same problem, plus the worker-pid
    check proving the warm run spawned zero new interpreters.
+4. **device-plane dispatch cycle** — the steady-state per-dispatch cost of
+   one async worker with ``RunConfig.device_plane`` on (halo slices + fused
+   resident-block step) vs off (O(n) iterate snapshot + host
+   ``block_update``), at Jacobi g=2048 (gated >=2x) and Garnet VI S=10^6
+   (informational).
 
 ``PRE_PR_BASELINE`` pins the same metrics measured at the commit before the
 overhaul (same container, 2-core CPU); ``--check`` (the ``make perf`` gate)
@@ -84,6 +89,7 @@ PRE_PR_BASELINE = {
 GATE_ARRIVALS_X = 2.0     # jacobi_g512 arrivals/sec vs baseline
 GATE_FIRE_X = 5.0         # accel fire time at n=262144, m=5 vs baseline
 GATE_WARM_RUN_S = 1.0     # a warm pooled run must cost well under a spawn
+GATE_DEVICE_X = 2.0       # jacobi_g2048 dispatch cycle, device on vs off
 
 
 def _bench(fn, min_time=0.25, min_reps=3) -> float:
@@ -143,6 +149,37 @@ def accel_fire_sec(n, m=5, beta=1.0, gram="exact", rounds=4) -> float:
     return _bench(one) / rounds
 
 
+def device_dispatch_sec(problem, n_workers=8, mode="jnp") -> dict:
+    """Seconds per steady-state worker dispatch cycle, device plane on/off.
+
+    Models exactly what one async worker costs the run per dispatch:
+
+    * **off** — the host path: snapshot the full iterate (the O(n) copy
+      every dispatch pays, 32 MB at Jacobi g=2048) then ``block_update``.
+    * **on** — the device-resident path: copy only the plan's ``needs``
+      slices (two g-length halo rows / the dependency closure) and run the
+      fused ``step``; the block itself never leaves the device between
+      dispatches (the freshness protocol's steady state).
+    """
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(problem.n)
+    blocks = problem.default_blocks(n_workers)
+    blk = blocks[n_workers // 2]  # interior block: both halos live
+
+    def off():
+        snap = np.copy(x)
+        problem.block_update(snap, blk)
+
+    plan = problem.device_block_plan(blk, mode)
+    plan.refresh(x[blk])
+
+    def on():
+        plan.step(*[np.copy(x[s]) for s in plan.needs])
+
+    t_off, t_on = _bench(off), _bench(on)
+    return {"off": t_off, "on": t_on, "speedup": t_off / t_on}
+
+
 def pool_run_latency() -> dict:
     """Cold vs warm process-backend run on the same problem."""
     shutdown_pools()  # make the first run honestly cold
@@ -183,6 +220,18 @@ def measure(fast: bool = False) -> dict:
         cur["accel_fire_sec"][key] = accel_fire_sec(n, gram="exact")
         cur["accel_fire_incremental_sec"][key] = accel_fire_sec(
             n, gram="incremental")
+    cur["device_dispatch_sec"] = {}
+    if not fast:
+        # the ISSUE's large-n rows: the device plane's whole point is that
+        # the per-dispatch O(n) iterate transfer dwarfs the block compute
+        cur["device_dispatch_sec"]["jacobi_g2048"] = device_dispatch_sec(
+            JacobiProblem(grid=2048, sweeps=1, seed=0))
+        # informational: a Garnet closure at S=10^6 touches most of the
+        # state space, so the dependency-slice win is structural, not O(n)
+        cur["device_dispatch_sec"]["vi_s1e6"] = device_dispatch_sec(
+            ValueIterationProblem(
+                GarnetMDP(S=10**6, A=4, b=5, gamma=0.95, seed=0,
+                          sample="fast")))
     cur["process_run_sec"] = pool_run_latency()
     return cur
 
@@ -204,6 +253,12 @@ def check(cur: dict) -> list:
             x = base["accel_fire_sec"][key] / cur["accel_fire_sec"][key]
             if x < GATE_FIRE_X:
                 fails.append(f"accel fire {key}: {x:.2f}x < {GATE_FIRE_X}x")
+        key = "jacobi_g2048"
+        if key in cur.get("device_dispatch_sec", {}):
+            x = cur["device_dispatch_sec"][key]["speedup"]
+            if x < GATE_DEVICE_X:
+                fails.append(
+                    f"device dispatch {key}: {x:.2f}x < {GATE_DEVICE_X}x")
     pool = cur["process_run_sec"]
     if not pool["workers_reused"]:
         fails.append("warm process run did not reuse the worker pool")
@@ -228,6 +283,10 @@ def _rows(cur: dict) -> list:
         b = base["accel_fire_sec"].get(key)
         rows.append(row(f"hotpath_fire_incr_{key}", v * 1e6,
                         f"{b / v:.1f}x pre-PR" if b else ""))
+    for key, v in cur.get("device_dispatch_sec", {}).items():
+        rows.append(row(f"hotpath_device_{key}", v["on"] * 1e6,
+                        f"off={v['off']*1e3:.1f}ms "
+                        f"({v['speedup']:.1f}x device-on)"))
     pool = cur["process_run_sec"]
     rows.append(row("hotpath_pool_cold_run", pool["first"] * 1e6,
                     f"warm={pool['second']*1e3:.0f}ms "
@@ -286,7 +345,8 @@ def main() -> None:
             raise SystemExit(1)
         gates = ("pool-reuse only (--fast skips the large-n ratio gates)"
                  if args.fast else
-                 "arrivals >=2x, accel fire >=5x, warm pool reused")
+                 "arrivals >=2x, accel fire >=5x, device dispatch >=2x, "
+                 "warm pool reused")
         print(f"perf-check: OK ({gates})", file=sys.stderr)
 
 

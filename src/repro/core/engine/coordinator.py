@@ -203,6 +203,16 @@ class EvalItem:
         self.x = x
 
 
+# Below this iterate size an eager pin copy costs less than the lock
+# round-trip a deferred (copy-on-write) materialization forces on the
+# fire path: the opener already holds the backend lock at accel_begin,
+# while a lazy pin makes the eval thread queue for the contended lock
+# before its first evaluation — dead time that counts against the
+# staleness guard.  Lazy pins pay off once copying all of x under the
+# lock is the bigger stall.
+LAZY_PIN_MIN_N = 1 << 16
+
+
 class AccelPlan:
     """State of one in-flight Anderson/DIIS fire (begin -> feed* -> commit).
 
@@ -214,7 +224,8 @@ class AccelPlan:
     """
 
     __slots__ = ("x_pin", "wu_begin", "t_begin", "mver", "stage", "g", "cand",
-                 "cur_res", "verdict", "done", "_item")
+                 "cur_res", "verdict", "done", "_item", "_pin_lazy",
+                 "_pin_saves")
 
     def __init__(self, x_pin: np.ndarray, wu_begin: int, t_begin: float,
                  mver: int = 0):
@@ -222,6 +233,12 @@ class AccelPlan:
         self.wu_begin = wu_begin
         self.t_begin = t_begin
         self.mver = mver  # membership version at begin (reassignment guard)
+        # Copy-on-write pin (accel_begin(pin="lazy")): while True, x_pin is
+        # the *live* iterate and _pin_saves holds the (indices, old values)
+        # of every block overwritten since begin; materialize_pin replays
+        # them onto a copy to reconstruct the begin-time snapshot.
+        self._pin_lazy = False
+        self._pin_saves: List[Tuple[object, np.ndarray]] = []
         self.stage = "map"  # "map" -> ("cur" -> "cand")? -> done
         self.g: Optional[np.ndarray] = None
         self.cand: Optional[np.ndarray] = None
@@ -375,6 +392,29 @@ class Coordinator:
         # eval-cost model charges modeled time through accel_commit instead).
         self.measure_fire_windows = False
         self._fires_inflight = 0
+        # --- pin bookkeeping (accel_begin pin modes) ------------------- #
+        # Lazy (copy-on-write) pins registered here get their overwritten
+        # blocks saved by apply_return until materialize_pin reconstructs
+        # the begin-time snapshot; _x_spare recycles the buffer a full
+        # accel commit displaces so materialization reuses it instead of
+        # allocating a fresh O(n) array every fire.
+        self._pin_watch: List[AccelPlan] = []
+        self._x_spare: Optional[np.ndarray] = None
+        self.pin_copies_avoided = 0
+        self.pin_cow_saves = 0
+        # --- device-resident data plane (cfg.device_plane) ------------- #
+        # Freshness signals for backends keeping blocks device-resident: a
+        # worker's resident block mirrors x[block] iff its own last apply
+        # was verbatim (no damping/noise/corruption rewrote the values)
+        # and no accel commit has rewritten x since (commit_version).
+        self.commit_version = 0
+        self.last_apply_verbatim = False
+        self.device_dispatches = 0
+        self.device_refreshes = 0
+        # Last fused block-local residual norm per worker (a convergence
+        # proxy for observability; the recorded history stays the true
+        # full residual).
+        self.device_local_norms: dict = {}
         self._accel_stale_limit = (
             cfg.accel_stale_limit if cfg.accel_stale_limit is not None
             else 4 * cfg.n_workers
@@ -730,20 +770,27 @@ class Coordinator:
         service-fraction accounting; it changes no numerical behaviour.
         """
         cfg = self.cfg
+        # Freshness signal for device-resident blocks: True iff this call
+        # wrote ``values`` through verbatim (no noise/corruption/damping),
+        # i.e. the worker's own copy of the block still mirrors x[ind].
+        self.last_apply_verbatim = False
         if profile.max_staleness is not None and staleness > profile.max_staleness:
             self.stale_drops += 1
             return False
         if profile.drop_prob > 0.0 and self.rng.random() < profile.drop_prob:
             self.drops += 1
             return False
+        verbatim = True
         if profile.noise_std > 0.0:
             values = values + self.rng.normal(0.0, profile.noise_std, values.shape)
+            verbatim = False
         if profile.sample_corrupt(self.rng):
             # Silent-data-corruption channel: the block was corrupted in
             # flight.  Injected coordinator-side (one code path for all
             # four backends), drawn from the coordinator rng so virtual
             # runs stay deterministic; rng untouched when disabled.
             values = profile.corrupt(values, self.rng)
+            verbatim = False
         # (full_map returns arrive already restricted to the worker's owned
         # components by the worker_eval wrapper — paper §6 redesign keeps
         # ownership but evaluates globally — so both return modes apply
@@ -771,14 +818,24 @@ class Coordinator:
                 # legitimate return) never push a healthy worker over the
                 # quarantine line in a long run.
                 self._sdc_strikes.pop(worker, None)
+        if self._pin_watch:
+            # Copy-on-write for lazy accel pins: save this block's current
+            # values (O(block)) so materialize_pin can undo the write when
+            # it reconstructs the begin-time snapshot.  ``ind`` objects are
+            # coordinator-owned (memoized slices / the block arrays), so
+            # storing them is safe.
+            for p in self._pin_watch:
+                p._pin_saves.append((ind, np.copy(self.x[ind])))
         if cfg.block_damping is not None:
             a = cfg.block_damping
             self.x[ind] = (1.0 - a) * self.x[ind] + a * values
+            verbatim = False
         else:
             self.x[ind] = values
         if not self._trivial_project:
             self.x = _writable(self.problem.project(self.x))
         self.wu += 1
+        self.last_apply_verbatim = verbatim
         self._x_version += 1
         if self._fires_inflight > 0:
             self.fire_window_arrivals += 1
@@ -891,19 +948,81 @@ class Coordinator:
             return self.problem.full_map(item.x)
         return self.problem.residual_norm(item.x)
 
-    def accel_begin(self, t: float = 0.0) -> Optional[AccelPlan]:
+    def accel_begin(self, t: float = 0.0,
+                    pin: str = "copy") -> Optional[AccelPlan]:
         """Open a fire: pin the iterate, emit the full-map work item.
 
         Returns None when acceleration is off (or monitor-mode).  The pin
-        is a copy, so arrivals applied while the plan's evaluations are in
-        flight never leak into them — offloaded staleness stays at the
-        evaluation level.
+        keeps the plan's evaluations well-defined while arrivals keep
+        landing — offloaded staleness stays at the evaluation level.
+        ``pin`` selects how:
+
+        * ``"copy"`` — eager O(n) copy (always safe; the historic default);
+        * ``"ref"``  — pin the live iterate by reference.  Only for callers
+          that drive begin -> feed* -> commit atomically (inline fires): no
+          arrival can land mid-plan, the Anderson window copies what it
+          keeps, and the commit rebinds rather than mutates, so the copy
+          was dead weight.  Counted in ``pin_copies_avoided``.
+        * ``"lazy"`` — copy-on-write: pin by reference *and* register the
+          plan so :meth:`apply_return` saves each overwritten block's old
+          values until :meth:`materialize_pin` reconstructs the begin-time
+          snapshot (O(blocks written) instead of O(n) when few arrivals
+          land in the begin -> evaluate window).  Requires an identity
+          projection (a projection rewrites all of x in place of slices);
+          falls back to an eager copy otherwise.
         """
         if self.accel is None or self.cfg.accel_mode == "monitor":
             return None
-        plan = AccelPlan(self.x.copy(), self.wu, t, self._membership_version)
+        if pin == "lazy" and not self._trivial_project:
+            pin = "copy"
+        if pin == "copy":
+            x_pin = self.x.copy()
+        else:
+            x_pin = self.x
+        plan = AccelPlan(x_pin, self.wu, t, self._membership_version)
+        if pin == "ref":
+            self.pin_copies_avoided += 1
+        elif pin == "lazy":
+            plan._pin_lazy = True
+            self._pin_watch.append(plan)
         self._fires_inflight += 1
         return plan
+
+    def materialize_pin(self, plan: AccelPlan) -> None:
+        """Turn a lazy (copy-on-write) pin into a private snapshot.
+
+        Replays the blocks :meth:`apply_return` saved since ``accel_begin``
+        onto a copy of the live iterate (newest first), reconstructing the
+        begin-time iterate bit-for-bit.  Must run atomically with arrivals
+        (under the backend lock / in a single-threaded parent) and before
+        the plan's pinned iterate is read outside that atomicity — i.e.
+        before the full-map item ships to an evaluator.  Idempotent; no-op
+        for eager pins.  Reuses the buffer the last full accel commit
+        displaced (``_x_spare``) when shapes allow.
+        """
+        if not plan._pin_lazy:
+            return
+        spare = self._x_spare
+        if spare is not None and spare.shape == self.x.shape \
+                and spare.dtype == self.x.dtype:
+            self._x_spare = None
+            np.copyto(spare, self.x)
+            snap = spare
+        else:
+            snap = self.x.copy()
+        for ind, old in reversed(plan._pin_saves):
+            snap[ind] = old
+        self.pin_cow_saves += len(plan._pin_saves)
+        item = plan._item
+        if item is not None and item.x is plan.x_pin:
+            item.x = snap
+        plan.x_pin = snap
+        plan._pin_lazy = False
+        plan._pin_saves = []
+        try:
+            self._pin_watch.remove(plan)
+        except ValueError:
+            pass
 
     def accel_feed(self, plan: AccelPlan, value, offloaded: bool = False) -> None:
         """Feed one evaluated item; advances the plan's state machine.
@@ -980,11 +1099,27 @@ class Coordinator:
             moved = {b for b, mv in self._block_moved_at.items()
                      if mv > plan.mver}
         if stale > self._accel_stale_limit or len(moved) >= len(self.blocks):
+            if plan._pin_lazy:
+                # Never evaluated: the lazy pin dies without ever paying
+                # its copy — a genuinely avoided O(n) pin.
+                plan._pin_lazy = False
+                plan._pin_saves = []
+                try:
+                    self._pin_watch.remove(plan)
+                except ValueError:
+                    pass
+                self.pin_copies_avoided += 1
             self.accel_discards += 1
             self.accel.record_reject()
             if self.tracer is not None:
                 self.tracer.fire("discard", t)
             return "discard"
+        # A commit rewrites x wholesale; any *other* lazy pin still watching
+        # must snapshot first (its saves only cover block writes, not the
+        # rebind below).  The committing plan itself was materialized before
+        # its full-map evaluation ran.
+        for p in [p for p in self._pin_watch if p is not plan]:
+            self.materialize_pin(p)
         if plan.verdict == "accept":
             self.accel.record_accept()
             target = plan.cand
@@ -1004,8 +1139,19 @@ class Coordinator:
                 self.x = _writable(self.problem.project(self.x))
             self.accel_partial_commits += 1
         else:
+            # Full rebind: recycle the displaced buffer as the spare the
+            # next lazy-pin materialization copies into (double-buffered
+            # commit — nothing else can hold this array: lazy pins were
+            # materialized above, inline ref pins commit atomically, and
+            # eager pins/records hold copies).
+            spare = self.x
             self.x = target
+            if (self._trivial_project and spare.shape == target.shape
+                    and spare.dtype == target.dtype
+                    and spare is not target):
+                self._x_spare = spare
         self._x_version += 1
+        self.commit_version += 1
         if self.tracer is not None:
             self.tracer.fire(plan.verdict, t)
         return plan.verdict
@@ -1019,8 +1165,14 @@ class Coordinator:
         residual-norm evaluations Eq. 5 needs.  The degenerate-window and
         safeguard-off paths skip the residual evaluations entirely.
         Returns the applied verdict (None when acceleration is off).
+
+        The pin is by reference: this method drives the whole plan
+        atomically (its callers hold the backend lock / are the virtual
+        event loop), so no arrival can land between begin and commit and
+        the historical O(n) pin copy was dead weight (the Anderson window
+        copies what it keeps; commits rebind x rather than mutate it).
         """
-        plan = self.accel_begin()
+        plan = self.accel_begin(pin="ref")
         if plan is None:
             return None
         t0 = time.perf_counter()
@@ -1215,6 +1367,10 @@ class Coordinator:
             quarantined=self.quarantined,
             checkpoints_written=self.checkpoints_written,
             resumed_from=self.resumed_from,
+            pin_copies_avoided=self.pin_copies_avoided,
+            pin_cow_saves=self.pin_cow_saves,
+            device_dispatches=self.device_dispatches,
+            device_refreshes=self.device_refreshes,
             trace=(self.tracer.to_trace() if self.tracer is not None
                    else None),
         )

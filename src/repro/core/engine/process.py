@@ -74,7 +74,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from ..fixedpoint import FixedPointProblem
+from ..fixedpoint import FixedPointProblem, as_block_slice
 from .base import Executor, register_executor
 from .coordinator import (
     AccelPlan,
@@ -86,6 +86,7 @@ from .coordinator import (
     warm_problem,
     worker_eval,
 )
+from .device_plane import resolve_device_plane
 from .poolreg import PoolRegistry, payload_key
 from .types import CoordinatorCrash, RunConfig, RunResult, _fault_for
 
@@ -139,6 +140,11 @@ def _worker_main(
     Messages in (``task_q``):
       ("run", cfg, seed_seq, my_block)   — per-run setup: warm + reseed
       ("async", idx_or_None)             — snapshot shm, eval, own-rng faults
+      ("device", fresh)                  — device-plane dispatch: the block
+                                           stays resident worker-side; read
+                                           only the plan's halo/dependency
+                                           slices from shm (plus the block
+                                           itself when ``fresh`` is False)
       ("sync", idx_or_None, delay, crashed) — coordinator-planned faults
       ("eval", kind)                     — EvalService item: the input x is
                                            in this worker's result slot;
@@ -170,7 +176,7 @@ def _worker_main(
         view = np.ndarray(n + 1, dtype=np.float64, buffer=shm.buf)
         slot_view = np.ndarray(n, dtype=np.float64, buffer=slot.buf)
         result_q.put((w, "boot", None, 0))
-        cfg = prof = rng = my_block = None
+        cfg = prof = rng = my_block = dplan = my_read = None
         while True:
             task = task_q.get()
             if task is None:
@@ -183,6 +189,22 @@ def _worker_main(
                 warm_problem(problem, cfg, worker=0, blocks=[my_block])
                 prof = _fault_for(cfg, w)
                 rng = np.random.default_rng(seed_seq)
+                # Device-resident data plane: same structural resolution
+                # as the parent (the stripped cfg fields — controller,
+                # resume_from — only ever relax it, so whenever the parent
+                # dispatches ("device", ...) this plan exists).
+                dplan = None
+                my_read = my_block
+                dmode = resolve_device_plane(problem, cfg, "process")
+                if dmode is not None:
+                    dplan = problem.device_block_plan(my_block, dmode)
+                    if dplan is not None:
+                        my_read = as_block_slice(my_block)
+                        if my_read is None:
+                            my_read = my_block
+                        zx = np.zeros(n)  # warm the fused-kernel jit now
+                        dplan.refresh(zx[my_read])
+                        dplan.step(*[zx[s] for s in dplan.needs])
                 result_q.put((w, "ready", None, 0))
                 continue
             if kind == "prof":
@@ -224,11 +246,27 @@ def _worker_main(
                     slot_view[:len(vals)] = vals
                     result_q.put((w, "ok", len(vals), int(snap[0])))
                 continue
-            _, idx = task
-            idx = my_block if idx is None else idx
-            with shm_lock:
-                snap = view.copy()
-            vals = worker_eval(problem, cfg, snap[1:], idx)
+            if kind == "device":
+                # Device-plane dispatch: the resident block advances on
+                # the device; only the halo/dependency slices (plus the
+                # block itself when the parent flagged it stale) cross
+                # from shared memory — never the O(n) iterate.
+                _, fresh = task
+                with shm_lock:
+                    snap_wu = int(view[0])
+                    blk = None if fresh else np.copy(view[1:][my_read])
+                    needs = [np.copy(view[1:][s]) for s in dplan.needs]
+                if blk is not None:
+                    dplan.refresh(blk)
+                vals, dnorm = dplan.step(*needs)
+            else:
+                _, idx = task
+                idx = my_block if idx is None else idx
+                with shm_lock:
+                    snap = view.copy()
+                snap_wu = int(snap[0])
+                vals = worker_eval(problem, cfg, snap[1:], idx)
+                dnorm = None
             if cfg.async_overhead > 0.0:
                 time.sleep(cfg.async_overhead)
             delay = prof.sample_delay(rng)
@@ -236,7 +274,7 @@ def _worker_main(
                 time.sleep(delay)
             if prof.sample_crash(rng):
                 will_rejoin = prof.restart_after is not None
-                result_q.put((w, "crash", will_rejoin, int(snap[0])))
+                result_q.put((w, "crash", will_rejoin, snap_wu))
                 if not will_rejoin:
                     # Simulated permanent crash: dead for the rest of THIS
                     # run (the parent stops dispatching to us) but the
@@ -248,7 +286,12 @@ def _worker_main(
                 result_q.put((w, "rejoin", None, 0))
                 continue
             slot_view[:len(vals)] = vals
-            result_q.put((w, "ok", len(vals), int(snap[0])))
+            if dnorm is None:
+                result_q.put((w, "ok", len(vals), snap_wu))
+            else:
+                # "okd": an "ok" that also carries the fused block-local
+                # residual norm the device kernel computed for free.
+                result_q.put((w, "okd", (len(vals), dnorm), snap_wu))
     except Exception as e:  # surface rebuild/eval failures to the parent
         import traceback
 
@@ -393,6 +436,16 @@ class _WorkerPool:
         with self.shm_lock:
             self.view[0] = coord.wu
             self.view[1:] = coord.x
+
+    def write_block(self, coord: Coordinator, ind) -> None:
+        """O(block) shared-memory sync: mirror one just-applied block (and
+        the update counter) instead of rewriting all of x.  Only valid
+        when nothing outside ``ind`` changed since the last sync — i.e.
+        identity-projection arrivals; commits and projections still go
+        through :meth:`write_x`."""
+        with self.shm_lock:
+            self.view[0] = coord.wu
+            self.view[1:][ind] = coord.x[ind]
 
     def close(self) -> None:
         for q in self.task_qs:
@@ -604,6 +657,22 @@ class ProcessPoolExecutor(Executor):
         pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
         rejoin_owed: Set[int] = set()  # restartable crashes mid-downtime
         stop = False
+        # Device-resident data plane: workers whose block is served by a
+        # resident device plan get ("device", fresh) dispatches — only the
+        # halo/dependency slices cross shared memory per dispatch, and
+        # arrivals sync shm with an O(block) write_block instead of the
+        # O(n) write_x (full writes remain only after accel commits).
+        # The workers resolve the same structural predicate in their "run"
+        # setup, so dispatch kinds and resident plans always agree.
+        dmode = resolve_device_plane(coord.problem, cfg, self.name)
+        dev_workers: Set[int] = set()
+        if dmode is not None:
+            dev_workers = {
+                w for w in range(cfg.n_workers)
+                if coord.problem.device_block_plan(coord.blocks[w], dmode)
+                is not None}
+        dev_fresh = dict.fromkeys(dev_workers, False)
+        dev_cver = dict.fromkeys(dev_workers, -1)
 
         def _loop_state():
             return ({"kind": "process_async", "since_fire": since_fire,
@@ -612,8 +681,16 @@ class ProcessPoolExecutor(Executor):
         def dispatch(w: int) -> None:
             idx = coord.select_indices(w)
             pending[w] = idx
-            wire_idx = None if idx is coord.blocks[w] else idx
-            pool.task_qs[w].put(("async", wire_idx))
+            if w in dev_workers:
+                fresh = (dev_fresh[w]
+                         and coord.commit_version == dev_cver[w])
+                coord.device_dispatches += 1
+                if not fresh:
+                    coord.device_refreshes += 1
+                pool.task_qs[w].put(("device", fresh))
+            else:
+                wire_idx = None if idx is coord.blocks[w] else idx
+                pool.task_qs[w].put(("async", wire_idx))
 
         for w in sorted(alive):
             dispatch(w)
@@ -634,6 +711,10 @@ class ProcessPoolExecutor(Executor):
                 redispatch = True
                 if kind == "crash":
                     coord.crashes += 1
+                    if w in dev_workers:
+                        # The resident block advanced past the lost
+                        # return; it no longer mirrors x.
+                        dev_fresh[w] = False
                     if not data:  # data=True iff the worker will rejoin
                         alive.discard(w)
                         redispatch = False
@@ -643,16 +724,36 @@ class ProcessPoolExecutor(Executor):
                         # waits out the downtime in its queue.
                         rejoin_owed.add(w)
                 else:
+                    if kind == "okd":  # device arrival: data carries the
+                        vlen, dnorm = data  # fused block-local norm too
+                        coord.device_local_norms[w] = float(dnorm)
+                    else:
+                        vlen = data
                     applied = coord.apply_return(
-                        idx, pool.slot_views[w][:data], prof,
+                        idx, pool.slot_views[w][:vlen], prof,
                         staleness=coord.wu - snap_wu, worker=w)
+                    if w in dev_workers:
+                        # Freshness granted before any commit below: a
+                        # fire bumps commit_version and invalidates.
+                        dev_fresh[w] = applied and coord.last_apply_verbatim
+                        dev_cver[w] = coord.commit_version
+                    cv0 = coord.commit_version
                     if applied:
                         since_fire += 1
                         if (coord.accel is not None
                                 and since_fire >= cfg.fire_every):
                             coord.maybe_fire_accel()
                             since_fire = 0
-                    pool.write_x(coord)
+                    if (coord.commit_version != cv0
+                            or (applied and not coord._trivial_project)):
+                        # A commit (or projection) rewrote x wholesale.
+                        pool.write_x(coord)
+                    elif applied:
+                        # Identity-projection arrival: only this block
+                        # moved — O(block) shared-memory sync.
+                        pool.write_block(coord, idx)
+                    # Nothing applied, nothing committed: shm already
+                    # mirrors x; skip the write entirely.
                     if cfg.sdc_guard and not coord.dispatchable(w):
                         # Quarantined by the k-strikes policy: stop
                         # dispatching to it (the interpreter stays pooled,
@@ -820,7 +921,12 @@ class ProcessPoolExecutor(Executor):
             if eval_worker is not None:
                 return False
             while plans:
-                item = plans[0].next_item()
+                front = plans[0]
+                if isinstance(front, AccelPlan):
+                    # Lazy pin: snapshot now, just before the pinned
+                    # iterate leaves the single-threaded parent.
+                    coord.materialize_pin(front)
+                item = front.next_item()
                 if item is None:  # already complete (committed elsewhere)
                     plans.popleft()
                     continue
@@ -1056,7 +1162,8 @@ class ProcessPoolExecutor(Executor):
                             # while one is pending are coalesced.
                             if not any(isinstance(p, AccelPlan)
                                        for p in plans):
-                                plan = coord.accel_begin(elapsed())
+                                plan = coord.accel_begin(elapsed(),
+                                                         pin="lazy")
                                 if plan is not None:
                                     plans.append(plan)
                         else:
@@ -1122,7 +1229,14 @@ class ProcessPoolExecutor(Executor):
             if eval_worker is not None:
                 return False
             while plans:
-                item = plans[0].next_item()
+                front = plans[0]
+                if isinstance(front, AccelPlan):
+                    # Lazy pin: reconstruct the begin-time snapshot now,
+                    # right before the pinned iterate leaves the parent
+                    # through the worker's slot (single-threaded parent:
+                    # this is atomic with arrivals by construction).
+                    coord.materialize_pin(front)
+                item = front.next_item()
                 if item is None:  # already complete (committed elsewhere)
                     plans.popleft()
                     continue
@@ -1216,7 +1330,8 @@ class ProcessPoolExecutor(Executor):
                             # while one is pending are coalesced.
                             if not any(isinstance(p, AccelPlan)
                                        for p in plans):
-                                plan = coord.accel_begin(elapsed())
+                                plan = coord.accel_begin(elapsed(),
+                                                         pin="lazy")
                                 if plan is not None:
                                     plans.append(plan)
                     pool.write_x(coord)

@@ -36,7 +36,12 @@ import numpy as np
 
 from ..fixedpoint import FixedPointProblem
 from .base import Executor, register_executor
-from .coordinator import Coordinator, warm_problem, worker_eval
+from .coordinator import (
+    LAZY_PIN_MIN_N,
+    Coordinator,
+    warm_problem,
+    worker_eval,
+)
 from .types import (
     CoordinatorCrash,
     FaultProfile,
@@ -194,9 +199,35 @@ class ThreadPoolExecutor(Executor):
             return ({"kind": "thread_async",
                      "since_fire": state["since_fire"]}, {})
 
+        # Device-resident data plane (cfg.device_plane): when the run
+        # shape qualifies, each worker keeps its block resident as a
+        # device array and per dispatch ships only the halo/dependency
+        # slices its update reads — the O(n) snapshot copy and full-x
+        # transfer disappear from the hot loop.  Resolution is structural
+        # (see engine.device_plane); problems opt in per block.
+        from .device_plane import resolve_device_plane
+
+        dmode = resolve_device_plane(problem, cfg, self.name)
+        dplans = {}
+        if dmode is not None:
+            for dw in range(cfg.n_workers):
+                dp = problem.device_block_plan(coord.blocks[dw], dmode)
+                if dp is not None:
+                    dplans[dw] = dp
+            if dplans:
+                # Warm the fused-kernel specializations before the clock
+                # starts (mirrors warm_problem for the host path).
+                zx = np.zeros(problem.n)
+                for dw, dp in dplans.items():
+                    dp.refresh(zx[coord.blocks[dw]])
+                    dp.step(*[zx[s] for s in dp.needs])
+
         def worker_loop(w: int) -> None:
             prof = _fault_for(cfg, w)
             rng = worker_rngs[w]
+            dp = dplans.get(w)
+            dev_fresh = False  # resident block mirrors x[block]?
+            dev_cver = -1  # commit_version at the last freshness grant
             while not stop.is_set():
                 with lock, coord.busy():
                     if stop.is_set():
@@ -206,10 +237,25 @@ class ThreadPoolExecutor(Executor):
                         # of a resumed membership: this thread is done
                         # (static fault-free runs never take this exit).
                         return
-                    x_snap = coord.x.copy()
                     launch_wu = coord.wu
                     idx = coord.select_indices(w)
-                vals = worker_eval(problem, cfg, x_snap, idx)
+                    if dp is not None:
+                        # Fresh resident block: ship only the halo slices
+                        # (O(needs)); stale: re-ship the block (O(block)).
+                        # Never the full iterate.
+                        blk_vals = None
+                        if not (dev_fresh
+                                and coord.commit_version == dev_cver):
+                            blk_vals = np.copy(coord.x[idx])
+                        need_vals = [np.copy(coord.x[s]) for s in dp.needs]
+                    else:
+                        x_snap = coord.x.copy()
+                if dp is not None:
+                    if blk_vals is not None:
+                        dp.refresh(blk_vals)
+                    vals, dev_norm = dp.step(*need_vals)
+                else:
+                    vals = worker_eval(problem, cfg, x_snap, idx)
                 if cfg.async_overhead > 0.0:
                     time.sleep(cfg.async_overhead)
                 delay = prof.sample_delay(rng)
@@ -218,7 +264,10 @@ class ThreadPoolExecutor(Executor):
                 if prof.sample_crash(rng):
                     # A crash is still an arrival: it counts toward the
                     # record cadence and the stop checks must run, or an
-                    # all-crashing worker set would spin forever.
+                    # all-crashing worker set would spin forever.  The
+                    # resident block advanced past the lost return, so it
+                    # no longer mirrors x.
+                    dev_fresh = False
                     with lock:
                         coord.crashes += 1
                         if coord.arrival_tick(elapsed()):
@@ -238,6 +287,16 @@ class ThreadPoolExecutor(Executor):
                         idx, vals, prof, staleness=coord.wu - launch_wu,
                         worker=w
                     )
+                    if dp is not None:
+                        coord.device_dispatches += 1
+                        if blk_vals is not None:
+                            coord.device_refreshes += 1
+                        coord.device_local_norms[w] = dev_norm
+                        # Fresh iff our values landed verbatim; any commit
+                        # after this point (own fire below or another
+                        # worker's) bumps commit_version and invalidates.
+                        dev_fresh = applied and coord.last_apply_verbatim
+                        dev_cver = coord.commit_version
                     if applied:
                         state["since_fire"] += 1
                         if (coord.accel is not None
@@ -391,6 +450,14 @@ class ThreadPoolExecutor(Executor):
             return coord.eval_item(item), True
 
         def run_fire(plan, prof: FaultProfile) -> None:
+            if plan._pin_lazy:
+                # Lazy pin: snapshot atomically with arrivals, right before
+                # the full-map item leaves the lock for the eval thread.
+                # (_pin_lazy is set before the plan is submitted and only
+                # ever cleared, so the unlocked check is race-free; eager
+                # pins skip the lock round-trip entirely.)
+                with cond, coord.busy():
+                    coord.materialize_pin(plan)
             item = plan.next_item()
             while item is not None:
                 val, offloaded = eval_one(item, prof)
@@ -587,7 +654,10 @@ class ThreadPoolExecutor(Executor):
                             if offload:
                                 state["since_fire"] = 0
                                 if state["fire_plan"] is None:
-                                    plan = coord.accel_begin(elapsed())
+                                    plan = coord.accel_begin(
+                                        elapsed(),
+                                        pin=("lazy" if coord.x.size
+                                             >= LAZY_PIN_MIN_N else "copy"))
                                     if plan is not None:
                                         state["fire_plan"] = plan
                                         eval_pool.submit(run_fire, plan, prof)
@@ -640,9 +710,11 @@ class ThreadPoolExecutor(Executor):
         """Async loop with the EvalService on a dedicated eval thread.
 
         Worker threads behave exactly as in :meth:`_run_async`, but a due
-        fire only *opens* an :class:`AccelPlan` under the lock (an O(n)
-        pin) — its full-map/safeguard evaluations run on the eval thread,
-        which feeds results back and commits with the staleness guard.
+        fire only *opens* an :class:`AccelPlan` under the lock (a lazy
+        copy-on-write pin — O(1) at begin, materialized on the eval thread
+        right before its first evaluation) — its full-map/safeguard
+        evaluations run on the eval thread, which feeds results back and
+        commits with the staleness guard.
         Residual records take the same path.  At most one fire and one
         record are in flight; further due fires/records are coalesced.
         """
@@ -673,6 +745,14 @@ class ThreadPoolExecutor(Executor):
             return coord.eval_item(item), True
 
         def run_fire(plan, prof: FaultProfile) -> None:
+            if plan._pin_lazy:
+                # Lazy pin: snapshot atomically with arrivals, right before
+                # the full-map item leaves the lock for the eval thread.
+                # (_pin_lazy is set before the plan is submitted and only
+                # ever cleared, so the unlocked check is race-free; eager
+                # pins skip the lock round-trip entirely.)
+                with lock, coord.busy():
+                    coord.materialize_pin(plan)
             item = plan.next_item()
             while item is not None:
                 val, offloaded = eval_one(item, prof)
@@ -763,7 +843,10 @@ class ThreadPoolExecutor(Executor):
                                 and state["since_fire"] >= cfg.fire_every):
                             state["since_fire"] = 0
                             if state["fire_plan"] is None:
-                                plan = coord.accel_begin(elapsed())
+                                plan = coord.accel_begin(
+                                    elapsed(),
+                                    pin=("lazy" if coord.x.size
+                                         >= LAZY_PIN_MIN_N else "copy"))
                                 if plan is not None:
                                     state["fire_plan"] = plan
                                     eval_pool.submit(run_fire, plan, prof)

@@ -218,6 +218,24 @@ class RunConfig:
     sdc_window: int = 32  # baseline window (accepted update norms)
     sdc_threshold: float = 25.0  # reject when norm > threshold * median
     sdc_strikes: int = 3  # rejections before quarantine (0 => never)
+    # --- device-resident data plane (kernels + real backends) -------------- #
+    # Keep each worker's block resident as a JAX array across the dispatch
+    # loop, shipping only halo/dependency slices per dispatch and running
+    # the fused block-update(+local-residual) kernels instead of
+    # re-materializing the full iterate host-side.  Modes:
+    #   "off"        — host numpy path everywhere (pre-existing behaviour)
+    #   "auto"       — (default) flips the jnp device path on for real
+    #                  backends once n >= 2**20 and the run shape qualifies
+    #                  (async, fixed selection, block returns, identity
+    #                  projection, no scenario/controller/trace); otherwise
+    #                  identical to "off"
+    #   "jnp"/"on"   — force the fused jitted-jnp device step
+    #   "pallas"     — force the fused Pallas kernels (TPU lowering)
+    #   "interpret"  — force the Pallas kernels in interpret mode (CPU
+    #                  validation of the exact kernel bodies; slow)
+    # The virtual backend always ignores this knob — fixed-seed virtual
+    # runs stay bit-identical to the goldens whatever it is set to.
+    device_plane: str = "auto"
 
 
 @dataclass
@@ -276,6 +294,16 @@ class RunResult:
     quarantined: int = 0  # workers quarantined by the k-strikes policy
     checkpoints_written: int = 0  # SolveCheckpoints written this run
     resumed_from: Optional[str] = None  # checkpoint tag this run resumed from
+    # --- device-resident data plane --------------------------------------- #
+    # Inline (atomic) accel fires pin the iterate by reference instead of
+    # copying all of x — one avoided O(n) copy per inline fire.
+    pin_copies_avoided: int = 0
+    # Offloaded fires pin lazily (copy-on-write): each counts one O(block)
+    # save performed while the pin was unmaterialized, instead of the
+    # eager O(n) begin-time copy.
+    pin_cow_saves: int = 0
+    device_dispatches: int = 0  # block updates served by the device plane
+    device_refreshes: int = 0  # device blocks re-synced from the host iterate
     # --- trace capture (cfg.capture_trace) -------------------------------- #
     trace: Optional[object] = None  # repro.chaos.RunTrace
 

@@ -23,8 +23,36 @@ from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["FixedPointProblem", "contiguous_blocks", "as_block_slice",
-           "restrict"]
+__all__ = ["FixedPointProblem", "DeviceBlockPlan", "contiguous_blocks",
+           "as_block_slice", "restrict"]
+
+
+class DeviceBlockPlan:
+    """Contract for a device-resident block (``RunConfig.device_plane``).
+
+    A plan owns one block of the iterate as a device (JAX) array that
+    stays resident across the worker's dispatch loop.  Per dispatch the
+    backend ships only the host slices named by ``needs`` (halo rows,
+    dependency closures) instead of re-materializing the full iterate:
+
+    * ``needs`` — list of ``slice`` objects (or sorted index arrays, for
+      dependency closures) into the flat iterate whose current host
+      values ``step`` consumes each dispatch;
+    * ``refresh(block_values)`` — (re)load the resident block from host
+      values (after an accel commit or a non-verbatim apply);
+    * ``step(*need_vals)`` — run one fused block update on the resident
+      block, advance it in place, and return ``(values, local_norm)``
+      where ``values`` is the host copy for ``apply_return`` and
+      ``local_norm`` the kernel's fused block-local residual norm.
+    """
+
+    needs: List[slice] = []
+
+    def refresh(self, block_values: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def step(self, *need_vals: np.ndarray):
+        raise NotImplementedError
 
 
 def contiguous_blocks(n: int, p: int) -> List[np.ndarray]:
@@ -135,6 +163,22 @@ class FixedPointProblem(abc.ABC):
         this to return True explicitly.
         """
         return type(self).project is FixedPointProblem.project
+
+    # ------------------------------------------------------------------ #
+    # Device-resident data plane (RunConfig.device_plane)
+    # ------------------------------------------------------------------ #
+    def device_block_plan(self, indices, mode: str):
+        """A :class:`DeviceBlockPlan` for ``indices``, or None.
+
+        Problems whose block update can run against a device-resident
+        block plus a small set of host slices (halo rows, dependency
+        closures) return a plan here; ``None`` (the default) keeps the
+        host numpy path for this block.  ``mode`` selects the kernel
+        flavour: ``"jnp"`` (fused jitted jnp), ``"pallas"`` (fused Pallas
+        kernels), ``"interpret"`` (Pallas in interpret mode), or ``"ref"``
+        (numpy oracle — for differential testing).
+        """
+        return None
 
     # ------------------------------------------------------------------ #
     # Partitioning / reference

@@ -16,10 +16,13 @@ Baseline rule set (hillclimbed variants live in launch/dryrun.py):
 
 from __future__ import annotations
 
+import functools
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ParamSpec
@@ -104,6 +107,93 @@ def spec_tree_to_shardings(spec_tree, rules: Rules, mesh: Mesh):
 
 def sharding_for(shape: Tuple[int, ...], axes, rules: Rules, mesh: Mesh):
     return NamedSharding(mesh, resolve_axes(tuple(axes), shape, rules, mesh))
+
+
+# --------------------------------------------------------------------- #
+# Band-sharded stencil sweeps (engine device plane, RunConfig.device_plane)
+#
+# A device-resident Jacobi row-block can itself be sharded row-band-wise
+# across the local devices: each device owns rows/|devices| grid rows, the
+# per-sweep neighbor exchange is an explicit 1-hop ``lax.ppermute`` (the
+# same write-the-communication-the-hardware-wants discipline as the MoE
+# all-to-all in models/moe_shard_map.py), and only the two *global* halo
+# rows stay frozen at their dispatch values — arithmetic identical to the
+# single-device fused sweep, just distributed.
+# --------------------------------------------------------------------- #
+def band_mesh(rows: int, axis: str = "band") -> Optional[Mesh]:
+    """1-D all-local-devices mesh for band-sharding ``rows`` grid rows.
+
+    None (single-device fused path) unless there are >= 2 devices and
+    they divide ``rows`` evenly — predictable fallback over GSPMD padding,
+    same policy as :func:`resolve_axes`.
+    """
+    devs = jax.devices()
+    if len(devs) < 2 or rows % len(devs) != 0 or rows < 2 * len(devs):
+        return None
+    return Mesh(np.array(devs), (axis,))
+
+
+@functools.lru_cache(maxsize=None)
+def _band_sweep_fn(mesh: Mesh, sweeps: int, axis: str):
+    from jax.experimental.shard_map import shard_map
+
+    nd = mesh.shape[axis]
+    fwd = [(i, i + 1) for i in range(nd - 1)]  # band i's last row -> i+1
+    bwd = [(i + 1, i) for i in range(nd - 1)]  # band i's first row -> i-1
+
+    def body(band, top, bot, bg):
+        # band/bg: (rows/nd, g) local rows; top/bot: (1, g) global halos
+        # (replicated; masked in everywhere but the edge bands).
+        me = jax.lax.axis_index(axis)
+        blk0 = band
+
+        def one(_, cur):
+            up = jax.lax.ppermute(cur[-1:], axis, fwd)
+            dn = jax.lax.ppermute(cur[:1], axis, bwd)
+            t = jnp.where(me == 0, top, up)
+            b = jnp.where(me == nd - 1, bot, dn)
+            p = jnp.concatenate([t, cur, b], axis=0)
+            p = jnp.pad(p, ((0, 0), (1, 1)))
+            nb = p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+            return (bg + nb) / 4.0
+
+        new = jax.lax.fori_loop(0, sweeps, one, blk0)
+        d = new - blk0
+        norm = jax.lax.psum(jnp.sum(d * d), axis)
+        return new, norm
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None, None),
+                  P(axis, None)),
+        out_specs=(P(axis, None), P()),
+        check_rep=False,
+    ))
+
+
+# A band-sharded dispatch occupies every local device, so concurrent
+# dispatches (thread-backend workers) gain nothing — and on the CPU
+# runtime their ppermute rendezvous from different run_ids interleave and
+# deadlock.  One in-flight collective at a time.
+_BAND_LOCK = threading.Lock()
+
+
+def band_sharded_jacobi_sweeps(blk, top, bot, bg, *, sweeps: int,
+                               mesh: Mesh, axis: str = "band"):
+    """``sweeps`` fused Jacobi sweeps on a (rows, g) block, band-sharded
+    over ``mesh``; returns ``(new_block, block-local squared residual)``.
+
+    Element-wise arithmetic matches the single-device fused sweep exactly;
+    the residual reduction is a per-band sum + psum (summation order may
+    differ from the single-device reduction in the last bits).
+    """
+    g = blk.shape[1]
+    with _BAND_LOCK:
+        new, norm = _band_sweep_fn(mesh, int(sweeps), axis)(
+            jnp.asarray(blk), jnp.asarray(top).reshape(1, g),
+            jnp.asarray(bot).reshape(1, g), jnp.asarray(bg))
+        norm = float(norm)  # block until the collective drains
+    return new, norm
 
 
 def bytes_per_device(spec_tree, rules: Rules, mesh: Mesh) -> int:

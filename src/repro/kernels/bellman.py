@@ -32,6 +32,42 @@ def _bellman_kernel(idx_ref, probs_ref, r_ref, v_ref, o_ref, *, gamma: float):
     o_ref[...] = jnp.max(r + gamma * ev, axis=-1)
 
 
+def _bellman_block_kernel(idx_ref, probs_ref, r_ref, v_ref, vold_ref,
+                          o_ref, n_ref, *, gamma: float):
+    """Fused state-block Bellman backup + block-local inf-norm residual."""
+    idx = idx_ref[...]  # (rows, A, b) int32 — positions into v_ref
+    probs = probs_ref[...]  # (rows, A, b)
+    r = r_ref[...]  # (rows, A)
+    v = v_ref[...]  # (D,) resident successor values
+    succ = v[idx]  # VMEM gather
+    ev = jnp.sum(probs * succ, axis=-1)
+    tv = jnp.max(r + gamma * ev, axis=-1)
+    o_ref[...] = tv
+    n_ref[0, 0] = jnp.max(jnp.abs(tv - vold_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def bellman_block(idx: jax.Array, probs: jax.Array, rewards: jax.Array,
+                  v: jax.Array, v_old: jax.Array, *, gamma: float,
+                  interpret: bool = True):
+    """One Bellman backup for a block of ``rows`` states, fused with its
+    block-local residual.
+
+    ``v`` is the successor-value vector the (possibly remapped) ``idx``
+    gathers from — the full iterate, or just the block's dependency
+    closure when the device plane ships dependency slices.  ``v_old`` is
+    the block's previous values.  Returns ``(tv_block, local_inf_norm)``.
+    """
+    rows, A, b = idx.shape
+    tv, norm = pl.pallas_call(
+        functools.partial(_bellman_block_kernel, gamma=gamma),
+        out_shape=(jax.ShapeDtypeStruct((rows,), v.dtype),
+                   jax.ShapeDtypeStruct((1, 1), v.dtype)),
+        interpret=interpret,
+    )(idx, probs, rewards, v, v_old)
+    return tv, norm[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("gamma", "block_s", "interpret"))
 def bellman(idx: jax.Array, probs: jax.Array, rewards: jax.Array,
             v: jax.Array, *, gamma: float, block_s: int = 128,

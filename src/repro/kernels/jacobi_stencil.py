@@ -40,6 +40,50 @@ def _jacobi_kernel(x_prev_ref, x_cur_ref, x_next_ref, b_ref, o_ref, *, g: int):
     o_ref[...] = (b_ref[...] + up_fixed + down_fixed + left + right) * 0.25
 
 
+def _halo_kernel(x_ref, top_ref, bot_ref, b_ref, o_ref, n_ref, *,
+                 sweeps: int):
+    """Fused row-block update: ``sweeps`` Jacobi sweeps with a FROZEN halo
+    (rows r0-1 / r1 held fixed, the asynchronous block-update semantics)
+    plus the block-local squared residual norm, in one dispatch."""
+    blk0 = x_ref[...]  # (rows, g)
+    top = top_ref[...]  # (1, g) — row r0-1, or Dirichlet zeros
+    bot = bot_ref[...]  # (1, g) — row r1, or Dirichlet zeros
+    bg = b_ref[...]
+
+    def one(_, blk):
+        p = jnp.concatenate([top, blk, bot], axis=0)
+        p = jnp.pad(p, ((0, 0), (1, 1)))
+        nb = p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+        return (bg + nb) / 4.0
+
+    new = jax.lax.fori_loop(0, sweeps, one, blk0)
+    o_ref[...] = new
+    d = new - blk0
+    n_ref[0, 0] = jnp.sum(d * d)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
+def jacobi_halo_sweeps(xb: jax.Array, top: jax.Array, bot: jax.Array,
+                       b: jax.Array, *, sweeps: int,
+                       interpret: bool = True):
+    """``sweeps`` frozen-halo Jacobi sweeps on a (rows, g) row block.
+
+    The block (plus its two g-length halo rows) stays resident in VMEM for
+    the whole dispatch — this is the device-resident data plane's unit of
+    work.  Returns ``(new_block, local_sq_norm)`` where the second output
+    is ``sum((new - old)**2)`` over the block, so the caller gets a local
+    residual contribution for free with the update.
+    """
+    rows, g = xb.shape
+    out, norm = pl.pallas_call(
+        functools.partial(_halo_kernel, sweeps=sweeps),
+        out_shape=(jax.ShapeDtypeStruct((rows, g), xb.dtype),
+                   jax.ShapeDtypeStruct((1, 1), xb.dtype)),
+        interpret=interpret,
+    )(xb, top.reshape(1, g), bot.reshape(1, g), b)
+    return out, norm[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("g", "block_rows", "interpret"))
 def jacobi_sweep(x: jax.Array, b: jax.Array, g: int, *,
                  block_rows: int = 8, interpret: bool = True) -> jax.Array:

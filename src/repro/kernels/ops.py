@@ -48,6 +48,34 @@ def jacobi_sweep(x, b, g: int, *, block_rows: int = 8,
                                 interpret=interp)
 
 
+def jacobi_halo_sweeps(xb, top, bot, b, *, sweeps: int,
+                       interpret: Optional[bool] = None):
+    """Fused frozen-halo row-block sweeps + block-local residual norm."""
+    if xb.ndim != 2 or b.shape != xb.shape:
+        raise ValueError(f"expected matching (rows, g) blocks, got "
+                         f"{xb.shape} vs {b.shape}")
+    g = xb.shape[1]
+    if top.shape != (g,) or bot.shape != (g,):
+        raise ValueError(f"expected ({g},) halo rows")
+    if sweeps < 1:
+        raise ValueError("sweeps must be >= 1")
+    interp = _interpret_default() if interpret is None else interpret
+    return _jacobi.jacobi_halo_sweeps(xb, top, bot, b, sweeps=sweeps,
+                                      interpret=interp)
+
+
+def bellman_block(idx, probs, rewards, v, v_old, *, gamma: float,
+                  interpret: Optional[bool] = None):
+    """Fused state-block Bellman backup + block-local residual norm."""
+    rows, A, b = idx.shape
+    if (probs.shape != (rows, A, b) or rewards.shape != (rows, A)
+            or v.ndim != 1 or v_old.shape != (rows,)):
+        raise ValueError("inconsistent MDP block shapes")
+    interp = _interpret_default() if interpret is None else interpret
+    return _bellman.bellman_block(idx, probs, rewards, v, v_old,
+                                  gamma=gamma, interpret=interp)
+
+
 def bellman(idx, probs, rewards, v, *, gamma: float, block_s: int = 128,
             interpret: Optional[bool] = None):
     S, A, b = idx.shape

@@ -50,6 +50,28 @@ def ref_bellman(idx, probs, rewards, v, *, gamma: float):
     return jnp.max(rewards + gamma * ev, axis=-1)
 
 
+def ref_jacobi_halo_sweeps(xb, top, bot, b, *, sweeps: int):
+    """Frozen-halo row-block sweeps + local squared residual (numpy)."""
+    blk0 = np.asarray(xb, dtype=np.float64)
+    top = np.asarray(top, dtype=np.float64)
+    bot = np.asarray(bot, dtype=np.float64)
+    bg = np.asarray(b, dtype=np.float64)
+    blk = blk0
+    for _ in range(sweeps):
+        p = np.concatenate([top[None], blk, bot[None]], axis=0)
+        p = np.pad(p, ((0, 0), (1, 1)))
+        nb = p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+        blk = (bg + nb) / 4.0
+    return blk, float(np.sum((blk - blk0) ** 2))
+
+
+def ref_bellman_block(idx, probs, rewards, v, v_old, *, gamma: float):
+    """State-block Bellman backup + local inf-norm residual (numpy)."""
+    ev = np.einsum("sab,sab->sa", np.asarray(probs), np.asarray(v)[idx])
+    tv = np.max(np.asarray(rewards) + gamma * ev, axis=-1)
+    return tv, float(np.max(np.abs(tv - np.asarray(v_old))))
+
+
 def ref_anderson_mix(X, G, alpha, *, beta: float = 1.0):
     combined = (1.0 - beta) * X + beta * G
     return jnp.einsum("h,hn->n", alpha.astype(combined.dtype), combined)

@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fixedpoint import FixedPointProblem, restrict
+from repro.core.fixedpoint import (
+    DeviceBlockPlan,
+    FixedPointProblem,
+    as_block_slice,
+    restrict,
+)
 
 __all__ = [
     "GarnetMDP",
@@ -55,14 +60,27 @@ class GarnetMDP:
     """Garnet(S, A, b) random MDP (Archibald/McKinnon/Thomas 1995)."""
 
     def __init__(self, S: int = 500, A: int = 4, b: int = 5, gamma: float = 0.95,
-                 seed: int = 0):
+                 seed: int = 0, sample: str = "exact"):
         self.S, self.A, self.b, self.gamma = S, A, b, gamma
-        self._ctor = dict(S=S, A=A, b=b, gamma=gamma, seed=seed)
+        self._ctor = dict(S=S, A=A, b=b, gamma=gamma, seed=seed,
+                          sample=sample)
         rng = np.random.default_rng(seed)
-        idx = np.empty((S, A, b), dtype=np.int32)
-        for s in range(S):
-            for a in range(A):
-                idx[s, a] = rng.choice(S, size=b, replace=False)
+        if sample == "fast":
+            # Vectorized successor draw for large-S benchmarks: one
+            # rng.integers call instead of S*A rng.choice calls.  Unlike
+            # the exact recipe the b successors per (s, a) may repeat
+            # (probability O(b^2/S) — negligible at benchmark scales);
+            # the default "exact" path is untouched so every fixed-seed
+            # trajectory stays bit-identical.
+            idx = rng.integers(0, S, size=(S, A, b), dtype=np.int64)
+            idx = idx.astype(np.int32)
+        elif sample == "exact":
+            idx = np.empty((S, A, b), dtype=np.int32)
+            for s in range(S):
+                for a in range(A):
+                    idx[s, a] = rng.choice(S, size=b, replace=False)
+        else:
+            raise ValueError(f"unknown sample mode {sample!r}")
         # Stick-breaking transition probabilities (standard Garnet recipe).
         cuts = np.sort(rng.uniform(size=(S, A, b - 1)), axis=-1)
         probs = np.diff(np.concatenate(
@@ -122,6 +140,78 @@ class GridWorldMDP(GarnetMDP):
         return V
 
 
+@jax.jit
+def _vi_block_step(v, vold, idx, probs, R, gamma):
+    """Fused state-block Bellman backup + block-local inf-norm residual.
+
+    ``v`` is the (possibly remapped) successor-value vector — the block's
+    dependency closure when the device plane ships dependency slices, or
+    the full iterate.  Same einsum/max arithmetic as :func:`_bellman`.
+    """
+    ev = jnp.einsum("sab,sab->sa", probs, v[idx])
+    tv = jnp.max(R + gamma * ev, axis=1)
+    return tv, jnp.max(jnp.abs(tv - vold))
+
+
+class _VIDevicePlan(DeviceBlockPlan):
+    """Device-resident VI state block.
+
+    The block's transition rows (idx, probs, R) stay resident; per
+    dispatch the plan consumes the block's *dependency closure* — the
+    unique successor states its backups read, remapped once at build time
+    via ``searchsorted`` — instead of the full iterate.  Garnet blocks
+    whose closure approaches the full state space (dep > n/2) fall back
+    to shipping all of x; the fused kernel still saves the full-map
+    restriction (the host path evaluates T V at every state and throws
+    away all but the block).
+    """
+
+    def __init__(self, problem: "ValueIterationProblem", s0: int, s1: int,
+                 mode: str):
+        mdp = problem.mdp
+        self._mode = mode
+        self._gamma = mdp.gamma
+        idx_blk = np.asarray(mdp.idx)[s0:s1]
+        dep = np.unique(idx_blk)
+        if dep.size > problem.n // 2:
+            self.needs = [slice(0, problem.n)]
+            self._remap = mdp.idx[s0:s1]
+        else:
+            self.needs = [dep.astype(np.int64)]
+            self._remap = jnp.asarray(
+                np.searchsorted(dep, idx_blk).astype(np.int32))
+        self._probs = mdp.probs[s0:s1]
+        self._R = mdp.R[s0:s1]
+        self._blk = None
+
+    def refresh(self, block_values: np.ndarray) -> None:
+        self._blk = jnp.asarray(np.asarray(block_values, dtype=np.float64))
+
+    def step(self, *need_vals: np.ndarray):
+        v = jnp.asarray(need_vals[0])
+        if self._mode == "jnp":
+            tv, norm = _vi_block_step(v, self._blk, self._remap,
+                                      self._probs, self._R, self._gamma)
+        elif self._mode in ("pallas", "interpret"):
+            from repro.kernels import kernel_ops
+
+            tv, norm = kernel_ops.bellman_block(
+                self._remap, self._probs, self._R, v, self._blk,
+                gamma=self._gamma, interpret=self._mode == "interpret")
+        elif self._mode == "ref":
+            from repro.kernels.ref import ref_bellman_block
+
+            tv, norm = ref_bellman_block(
+                np.asarray(self._remap), np.asarray(self._probs),
+                np.asarray(self._R), np.asarray(v), np.asarray(self._blk),
+                gamma=self._gamma)
+            tv = jnp.asarray(tv)
+        else:
+            raise ValueError(f"unknown device_plane mode {self._mode!r}")
+        self._blk = tv
+        return np.asarray(tv), float(norm)
+
+
 def _rebuild_vi(mdp_cls, mdp_kwargs):
     """Factory for multi-interpreter executors (see ``factory_spec``)."""
     return ValueIterationProblem(mdp_cls(**mdp_kwargs))
@@ -167,6 +257,12 @@ class ValueIterationProblem(FixedPointProblem):
             self._sol = V
         return self._sol
 
+    def device_block_plan(self, indices, mode: str):
+        sl = as_block_slice(indices)
+        if sl is None:
+            return None  # scattered selection: host path
+        return _VIDevicePlan(self, sl.start, sl.stop, mode)
+
     def factory_spec(self):
         ctor = getattr(self.mdp, "_ctor", None)
         if ctor is None:
@@ -211,6 +307,11 @@ class PolicyEvaluationProblem(ValueIterationProblem):
         return np.asarray(_bellman_policy(
             jnp.asarray(x), self.mdp.idx, self.mdp.probs, self.mdp.R,
             self.mdp.gamma, self.policy))
+
+    def device_block_plan(self, indices, mode: str):
+        # The fused kernel computes the max backup; the policy backup is a
+        # different operator — host path only.
+        return None
 
     def exact_solution(self) -> np.ndarray:
         if self._sol is None:

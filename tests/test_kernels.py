@@ -243,3 +243,137 @@ class TestAndersonMixKernel:
         assert out is not None
         np.testing.assert_allclose(out, want, rtol=1e-10, atol=1e-10)
         np.testing.assert_allclose(kern.last_alpha, ref_st.last_alpha)
+
+
+# --------------------------------------------------------------------- #
+# fused frozen-halo jacobi block sweeps (device plane)
+# --------------------------------------------------------------------- #
+class TestJacobiHaloKernel:
+    @pytest.mark.parametrize("rows,g,sweeps", [
+        (4, 8, 1),     # minimal
+        (5, 33, 3),    # odd grid size, odd block
+        (7, 16, 4),    # rows not a divisor of g
+        (1, 64, 2),    # single-row block
+        (16, 128, 10), # paper-scale sweeps
+    ])
+    def test_matches_numpy_reference(self, rows, g, sweeps):
+        """Fused kernel values bitwise-match the numpy oracle; the norm is
+        a reduction so it only has to agree to the last few ULPs."""
+        jax.config.update("jax_enable_x64", True)
+        blk = RNG.standard_normal((rows, g))
+        top = RNG.standard_normal(g)
+        bot = RNG.standard_normal(g)
+        bg = RNG.standard_normal((rows, g))
+        out, norm = ops.jacobi_halo_sweeps(
+            jnp.asarray(blk), jnp.asarray(top), jnp.asarray(bot),
+            jnp.asarray(bg), sweeps=sweeps, interpret=True)
+        want, wnorm = ref.ref_jacobi_halo_sweeps(blk, top, bot, bg,
+                                                 sweeps=sweeps)
+        np.testing.assert_array_equal(np.asarray(out), want)
+        np.testing.assert_allclose(float(norm), wnorm, rtol=1e-12)
+
+    @pytest.mark.parametrize("edge", ["top", "bot", "both"])
+    def test_dirichlet_boundary_rows(self, edge):
+        """Blocks touching the grid edge freeze zeros (r0=0 / r1=g)."""
+        jax.config.update("jax_enable_x64", True)
+        rows, g, sweeps = 6, 17, 3
+        blk = RNG.standard_normal((rows, g))
+        bg = RNG.standard_normal((rows, g))
+        z = np.zeros(g)
+        top = z if edge in ("top", "both") else RNG.standard_normal(g)
+        bot = z if edge in ("bot", "both") else RNG.standard_normal(g)
+        out, norm = ops.jacobi_halo_sweeps(
+            jnp.asarray(blk), jnp.asarray(top), jnp.asarray(bot),
+            jnp.asarray(bg), sweeps=sweeps, interpret=True)
+        want, wnorm = ref.ref_jacobi_halo_sweeps(blk, top, bot, bg,
+                                                 sweeps=sweeps)
+        np.testing.assert_array_equal(np.asarray(out), want)
+        np.testing.assert_allclose(float(norm), wnorm, rtol=1e-12)
+
+    def test_matches_host_block_update(self):
+        """One fused dispatch == the host-path _block_sweeps slice for the
+        same whole-rows block (the device plane's bit-compat contract)."""
+        import repro.problems  # noqa: F401  (enables jax x64)
+        from repro.problems.jacobi import JacobiProblem
+
+        p = JacobiProblem(grid=24, sweeps=4)
+        r0, r1 = 5, 12
+        x = RNG.standard_normal(p.n)
+        idx = np.arange(r0 * p.g, r1 * p.g)
+        want = p.block_update(x, idx)
+        xg = x.reshape(p.g, p.g)
+        out, _ = ops.jacobi_halo_sweeps(
+            jnp.asarray(xg[r0:r1]), jnp.asarray(xg[r0 - 1]),
+            jnp.asarray(xg[r1]), jnp.asarray(p._b.reshape(p.g, p.g)[r0:r1]),
+            sweeps=p.sweeps, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out).ravel(), want)
+
+    def test_rejects_bad_shapes(self):
+        blk = jnp.zeros((4, 8))
+        with pytest.raises(ValueError):
+            ops.jacobi_halo_sweeps(blk, jnp.zeros(7), jnp.zeros(8),
+                                   jnp.zeros((4, 8)), sweeps=1)
+        with pytest.raises(ValueError):
+            ops.jacobi_halo_sweeps(blk, jnp.zeros(8), jnp.zeros(8),
+                                   jnp.zeros((3, 8)), sweeps=1)
+        with pytest.raises(ValueError):
+            ops.jacobi_halo_sweeps(blk, jnp.zeros(8), jnp.zeros(8),
+                                   jnp.zeros((4, 8)), sweeps=0)
+
+
+# --------------------------------------------------------------------- #
+# fused bellman state-block backup (device plane)
+# --------------------------------------------------------------------- #
+class TestBellmanBlockKernel:
+    def _mdp_block(self, rows, A, b, D, seed):
+        r = np.random.default_rng(seed)
+        idx = r.integers(0, D, size=(rows, A, b)).astype(np.int32)
+        probs = r.random((rows, A, b))
+        probs /= probs.sum(axis=-1, keepdims=True)
+        rewards = r.standard_normal((rows, A))
+        v = r.standard_normal(D)
+        v_old = r.standard_normal(rows)
+        return idx, probs, rewards, v, v_old
+
+    @pytest.mark.parametrize("rows,A,b,D", [
+        (8, 4, 3, 64),
+        (13, 5, 2, 100),  # odd block size
+        (1, 2, 4, 16),    # single state
+        (50, 8, 5, 50),   # D == rows (dense closure)
+    ])
+    def test_matches_numpy_reference(self, rows, A, b, D):
+        jax.config.update("jax_enable_x64", True)
+        idx, probs, rewards, v, v_old = self._mdp_block(rows, A, b, D, rows)
+        tv, norm = ops.bellman_block(
+            jnp.asarray(idx), jnp.asarray(probs), jnp.asarray(rewards),
+            jnp.asarray(v), jnp.asarray(v_old), gamma=0.95, interpret=True)
+        want, wnorm = ref.ref_bellman_block(idx, probs, rewards, v, v_old,
+                                            gamma=0.95)
+        np.testing.assert_allclose(np.asarray(tv), want, rtol=1e-14,
+                                   atol=1e-14)
+        np.testing.assert_allclose(float(norm), wnorm, rtol=1e-12)
+
+    def test_remapped_dependency_closure(self):
+        """Gathering from a dependency-closure slice of v (remapped idx)
+        gives the same backup as gathering from the full vector."""
+        jax.config.update("jax_enable_x64", True)
+        idx, probs, rewards, v, v_old = self._mdp_block(6, 3, 4, 200, 7)
+        closure = np.unique(idx)
+        remap = np.searchsorted(closure, idx).astype(np.int32)
+        full, _ = ops.bellman_block(
+            jnp.asarray(idx), jnp.asarray(probs), jnp.asarray(rewards),
+            jnp.asarray(v), jnp.asarray(v_old), gamma=0.9, interpret=True)
+        sliced, _ = ops.bellman_block(
+            jnp.asarray(remap), jnp.asarray(probs), jnp.asarray(rewards),
+            jnp.asarray(v[closure]), jnp.asarray(v_old), gamma=0.9,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(sliced))
+
+    def test_rejects_bad_shapes(self):
+        idx = jnp.zeros((4, 2, 3), jnp.int32)
+        with pytest.raises(ValueError):
+            ops.bellman_block(idx, jnp.zeros((4, 2, 2)), jnp.zeros((4, 2)),
+                              jnp.zeros(10), jnp.zeros(4), gamma=0.9)
+        with pytest.raises(ValueError):
+            ops.bellman_block(idx, jnp.zeros((4, 2, 3)), jnp.zeros((4, 2)),
+                              jnp.zeros(10), jnp.zeros(5), gamma=0.9)

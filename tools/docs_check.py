@@ -47,7 +47,13 @@ Fails when:
 - the recovery-knob table in README.md (after
   ``<!-- recovery-knobs -->``) names a knob that exists on neither
   ``RunConfig`` nor ``FaultProfile``, or omits the load-bearing trio
-  (checkpoint_every / checkpoint_dir / corrupt_prob).
+  (checkpoint_every / checkpoint_dir / corrupt_prob);
+- the device-resident data plane is undocumented: README.md lacks a
+  ``device_plane`` knob row or docs/architecture.md lacks the
+  "Device-resident data plane" section, or ``BENCH_hotpath.json`` lost
+  its ``device_dispatch_sec`` rows;
+- a ``__pycache__`` directory is tracked by git, or ``.gitignore`` does
+  not cover ``__pycache__/`` (bytecode must never land in the tree).
 
 Run directly:  PYTHONPATH=src python tools/docs_check.py
 """
@@ -134,6 +140,17 @@ def check_bench_trajectory(errors: list) -> None:
             if key not in data.get(section, {}):
                 errors.append(
                     f"BENCH_hotpath.json: missing {section}.{key}")
+    # device-plane rows (PR 9+; no pre-PR baseline — the path is new)
+    dev = data.get("current", {}).get("device_dispatch_sec")
+    if dev is None:
+        errors.append("BENCH_hotpath.json: missing current.device_dispatch_sec")
+    else:
+        for case, entry in dev.items():
+            for key in ("off", "on", "speedup"):
+                if key not in entry:
+                    errors.append(
+                        f"BENCH_hotpath.json: device_dispatch_sec.{case} "
+                        f"missing {key}")
 
 
 def check_offload_trajectory(errors: list) -> None:
@@ -417,6 +434,36 @@ def check_recovery_knobs(errors: list) -> None:
             f"{sorted(missing)}")
 
 
+def check_device_plane_docs(errors: list) -> None:
+    """The device-resident data plane must stay documented: a README knob
+    row for ``device_plane`` and an architecture section describing the
+    resident-block protocol."""
+    readme = (ROOT / "README.md").read_text()
+    if "`device_plane`" not in readme:
+        errors.append("README.md: no `device_plane` knob row")
+    arch = ROOT / "docs" / "architecture.md"
+    if "device-resident-data-plane" not in _anchors(arch):
+        errors.append("docs/architecture.md: missing 'Device-resident "
+                      "data plane' section")
+
+
+def check_pycache(errors: list) -> None:
+    """Bytecode hygiene: nothing under ``__pycache__`` may be tracked, and
+    ``.gitignore`` must cover it so it never gets added."""
+    import subprocess
+
+    out = subprocess.run(["git", "ls-files"], cwd=ROOT, text=True,
+                         capture_output=True)
+    if out.returncode != 0:  # not a git checkout (tarball): nothing to do
+        return
+    tracked = [f for f in out.stdout.splitlines() if "__pycache__" in f]
+    if tracked:
+        errors.append(f"git tracks __pycache__ files: {tracked[:5]}")
+    gi = ROOT / ".gitignore"
+    if not gi.exists() or "__pycache__" not in gi.read_text():
+        errors.append(".gitignore does not cover __pycache__/")
+
+
 def check_executor_table(errors: list) -> None:
     from repro.core import known_executors
 
@@ -447,6 +494,8 @@ def main() -> None:
     check_policy_table(errors)
     check_recovery_trajectory(errors)
     check_recovery_knobs(errors)
+    check_device_plane_docs(errors)
+    check_pycache(errors)
     if errors:
         print("docs-check: FAIL")
         for e in errors:
@@ -457,7 +506,8 @@ def main() -> None:
           "recovery-knob tables match their registries, "
           "BENCH_hotpath.json / BENCH_offload.json / BENCH_serve.json / "
           "BENCH_chaos.json / BENCH_autoscale.json / BENCH_recovery.json "
-          "schemas intact)")
+          "schemas intact, device-plane docs present, no tracked "
+          "__pycache__)")
 
 
 if __name__ == "__main__":
