@@ -57,9 +57,17 @@
 #                     fails (benchmarks/recovery.py --smoke; the measured
 #                     process-backend resume-vs-redo gate +
 #                     BENCH_recovery.json rewrite rides in `make perf`).
+# `make telemetry-smoke` — fast telemetry-plane sanity (~10 s, virtual
+#                     backend only): enabling RunConfig.telemetry keeps
+#                     the virtual goldens byte-identical, a spot_wave
+#                     capture renders a schema-valid Chrome trace with
+#                     per-incarnation lanes, and the run_report CLI round
+#                     trips (benchmarks/telemetry_bench.py --smoke; the
+#                     measured process-backend overhead gate +
+#                     BENCH_telemetry.json rewrite rides in `make perf`).
 # `make smoke`      — docs-check + perf gate + chaos-smoke + serve-smoke
 #                     + autoscale-smoke + recovery-smoke + kernels-smoke
-#                     + ~2 min
+#                     + telemetry-smoke + ~2 min
 #                     real-concurrency benchmark: sync-vs-async under a
 #                     100 ms straggler measured on the thread AND process
 #                     backends (asserts the paper's >1.5x async speedup
@@ -70,7 +78,7 @@
 PYTHON ?= python
 
 .PHONY: test smoke bench docs-check perf chaos-smoke chaos-bench serve-smoke \
-	autoscale-smoke recovery-smoke kernels-smoke
+	autoscale-smoke recovery-smoke kernels-smoke telemetry-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -84,6 +92,7 @@ perf:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.autoscale --check
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recovery --check
+	PYTHONPATH=src $(PYTHON) -m benchmarks.telemetry_bench --check
 
 serve-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.solver_serve --smoke
@@ -100,6 +109,9 @@ autoscale-smoke:
 recovery-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recovery --smoke
 
+telemetry-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.telemetry_bench --smoke
+
 kernels-smoke:
 	PYTHONPATH=src $(PYTHON) -m pytest -q \
 		"tests/test_kernels.py::TestJacobiHaloKernel" \
@@ -109,7 +121,7 @@ kernels-smoke:
 		"tests/test_device_plane.py::TestPinModes"
 
 smoke: docs-check perf chaos-smoke serve-smoke autoscale-smoke \
-	recovery-smoke kernels-smoke
+	recovery-smoke kernels-smoke telemetry-smoke
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run --smoke
 
 bench:

@@ -25,6 +25,13 @@ def result_row(name: str, res, extra: str = "") -> dict:
     artifacts stay in one place (``RunResult.to_dict``/``from_dict``)."""
     d = res.to_dict(include_history=False)
     us = d["wall_time"] * 1e6 / max(d["worker_updates"], 1)
+    ts = d.get("telemetry_summary")
+    if ts:
+        # Telemetry-on runs carry their applied-staleness digest into the
+        # row, so sweep artifacts expose the paper's staleness story
+        # without re-parsing full captures.
+        extra += (f";st_p50={ts.get('staleness_p50', 0):g}"
+                  f";st_p95={ts.get('staleness_p95', 0):g}")
     return row(name, us,
                f"WU={d['worker_updates']};T={d['wall_time']:.2f}s" + extra)
 

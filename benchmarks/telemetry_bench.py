@@ -1,0 +1,409 @@
+"""Telemetry-plane benchmark + gate (BENCH_telemetry.json).
+
+Three observability claims, one committed artifact:
+
+- **Telemetry is cheap when on** — a process-backend async Jacobi g=512
+  solve with ``RunConfig.telemetry=True`` (worker span batching over the
+  existing result channel, recorder merging on the coordinator side) must
+  keep >= ``1 - GATE_MAX_OVERHEAD_FRAC`` (0.9x) of the telemetry-off
+  arrivals/sec, best-of-``_REPS`` interleaved on one warm pool.
+- **Telemetry is free when off *and* invisible when on** — on the
+  deterministic virtual backend the final iterate of a telemetry-off run
+  is byte-identical to the committed golden path (off is the default:
+  no recorder is ever constructed) *and* to the telemetry-on run of the
+  same seed: the recorder consumes no rng and touches no floats, so the
+  golden deltas are exactly zero in both directions.
+- **The timeline shows the paper's story** — a thread-backend ``spot_wave``
+  run (preemption wave + straggling survivor) with telemetry on exports a
+  Chrome trace-event file loadable in Perfetto where the scripted 100 ms
+  straggler shows as long task spans on the survivor's lane and each
+  eviction as a lane gap: the evicted worker's ``wN`` lane stops at the
+  preempt and its rejoin opens a fresh ``wN#r1`` incarnation lane
+  >= ``GATE_MIN_LANE_GAP_S`` later.
+
+``--check`` is the ``make perf`` gate; ``REPRO_PERF_SKIP_GATE=1`` records
+without gating.  ``--smoke`` (``make telemetry-smoke``) is the fast
+virtual-only CI path: off/on bit-identity, a virtual ``spot_wave``
+capture with incarnation lanes and a schema-valid Chrome render, and the
+``run_report`` CLI round trip — no wall-clock measurement, no JSON
+rewrite.
+
+Run:  PYTHONPATH=src python -m benchmarks.telemetry_bench [--check] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.chaos import spot_wave
+from repro.core import RunConfig, run_fixed_point, shutdown_pools
+from repro.core.engine.types import FaultProfile
+from repro.launch.run_report import main as run_report_main
+from repro.problems import JacobiProblem
+from repro.telemetry import to_chrome_trace, validate_chrome_trace
+from repro.telemetry.export import trace_lanes
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_telemetry.json"
+
+GATE_BACKEND = "process"
+GATE_MAX_OVERHEAD_FRAC = 0.10  # telemetry-on arrivals/sec loss budget
+GATE_MIN_LANE_GAP_S = 0.5  # eviction gap between wN and wN#r1 lanes
+
+#: Overhead-leg configuration: async process Jacobi at the same g=512
+#: state size the hot-path gate watches, fixed update budget so both arms
+#: do identical work on one warm pool.
+_OVH_P = 4
+_OVH_UPDATES = 600
+_REPS = 5  # median-of-N: robust to the 2-core container's scheduler noise
+
+#: Timeline-leg configuration: thread backend, the library ``spot_wave``
+#: script at its authored timings (wave at t0=0.5 s, 1.5 s downtime,
+#: 100 ms straggler), run to a fixed wall horizon comfortably past the
+#: last rejoin so every scripted event lands.
+_TL_P = 4
+_TL_WALL_S = 4.0
+_TL_DELAY_S = 5e-3  # per-task pacing so spans are visible vs the straggler
+
+
+def _sha(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
+# --------------------------------------------------------------------- #
+# Overhead: telemetry-on vs telemetry-off arrivals/sec (process backend)
+# --------------------------------------------------------------------- #
+def _ovh_cfg(telemetry) -> RunConfig:
+    return RunConfig(
+        executor=GATE_BACKEND, mode="async", n_workers=_OVH_P, seed=5,
+        max_updates=_OVH_UPDATES, tol=1e-300, max_wall=120.0,
+        record_every=64, telemetry=telemetry)
+
+
+def measure_overhead() -> dict:
+    """Interleaved median-of-N arrivals/sec, telemetry off vs on."""
+    prob = JacobiProblem(grid=512, sweeps=5, seed=0)
+    # Warm both pool families outside the timed region so no rep pays a
+    # spawn, then interleave the arms so scheduler drift hits both alike.
+    run_fixed_point(prob, _ovh_cfg(None))
+    run_fixed_point(prob, _ovh_cfg(True))
+    rates: dict = {"off": [], "on": []}
+    for _ in range(_REPS):
+        for arm, tel in (("off", None), ("on", True)):
+            t0 = time.perf_counter()
+            res = run_fixed_point(prob, _ovh_cfg(tel))
+            wall = time.perf_counter() - t0
+            rates[arm].append(res.worker_updates / max(wall, 1e-9))
+            if arm == "on":
+                assert res.telemetry_summary is not None
+    off = float(np.median(rates["off"]))
+    on = float(np.median(rates["on"]))
+    return {
+        "backend": GATE_BACKEND,
+        "grid": 512,
+        "updates": _OVH_UPDATES,
+        "reps": _REPS,
+        "arrivals_per_sec_off": off,
+        "arrivals_per_sec_on": on,
+        "rates_off": [round(r, 1) for r in rates["off"]],
+        "rates_on": [round(r, 1) for r in rates["on"]],
+        "on_over_off": on / max(off, 1e-9),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Bit-identity: telemetry off == golden == telemetry on (virtual backend)
+# --------------------------------------------------------------------- #
+def _id_cfg(telemetry) -> RunConfig:
+    # compute_time pinned: the virtual clock (and so RunResult.wall_time)
+    # must be deterministic for the delta check to be exact.
+    return RunConfig(
+        executor="virtual", mode="async", n_workers=4, seed=7,
+        max_updates=800, tol=1e-300, compute_time=1e-3,
+        faults=FaultProfile(delay_mean=2e-3, delay_std=1e-3),
+        telemetry=telemetry)
+
+
+def measure_identity() -> dict:
+    prob = JacobiProblem(grid=16, sweeps=5, seed=0)
+    off = run_fixed_point(prob, _id_cfg(None))
+    off2 = run_fixed_point(prob, _id_cfg(None))
+    on = run_fixed_point(prob, _id_cfg(True))
+    return {
+        "backend": "virtual",
+        "off_sha": _sha(off.x),
+        "off_repeat_identical": _sha(off.x) == _sha(off2.x),
+        "on_identical": _sha(off.x) == _sha(on.x),
+        "wall_time_delta": abs(off.wall_time - on.wall_time),
+        "worker_updates_delta": abs(off.worker_updates - on.worker_updates),
+        "max_abs_x_delta": float(np.max(np.abs(off.x - on.x))),
+        "telemetry_events": len(on.telemetry.events),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Timeline: spot_wave straggler + eviction lane gaps (thread backend)
+# --------------------------------------------------------------------- #
+def _lane_spans(cap, lane: str):
+    return [ev for ev in cap.events
+            if ev.get("lane") == lane and "t0" in ev]
+
+
+def _lane_first_t(cap, lane: str) -> float:
+    ts = [ev.get("t0", ev.get("t", 0.0)) for ev in cap.events
+          if ev.get("lane") == lane]
+    return min(ts) if ts else float("inf")
+
+
+def timeline_stats(cap, slow_delay_s: float, wave_t0: float) -> dict:
+    """Lane-gap and straggler evidence from one spot_wave capture."""
+    lanes = trace_lanes(cap)
+    gaps = {}
+    for lane in lanes:
+        m = re.match(r"^w(\d+)#r1$", lane)
+        if not m:
+            continue
+        base = f"w{m.group(1)}"
+        closed = [ev["t1"] for ev in _lane_spans(cap, base)]
+        if not closed:
+            continue
+        gaps[base] = _lane_first_t(cap, lane) - max(closed)
+    # The survivor's post-wave task spans carry the scripted delay.
+    strag = [ev["t1"] - ev["t0"] for ev in _lane_spans(cap, "w0")
+             if ev["k"] == "task" and ev["t0"] > wave_t0]
+    doc = to_chrome_trace(cap)
+    return {
+        "lanes": lanes,
+        "incarnation_lanes": sorted(gaps),
+        "lane_gaps_s": {k: round(v, 4) for k, v in sorted(gaps.items())},
+        "min_lane_gap_s": min(gaps.values()) if gaps else 0.0,
+        "straggler_max_task_s": max(strag) if strag else 0.0,
+        "straggler_tasks_post_wave": len(strag),
+        "scripted_straggler_delay_s": slow_delay_s,
+        "scenario_events": cap.summary.get("span_counts", {}).get(
+            "scenario", 0),
+        "chrome_trace_events": len(doc["traceEvents"]),
+        "chrome_trace_errors": validate_chrome_trace(doc),
+    }
+
+
+def measure_timeline(out_dir: str) -> dict:
+    prob = JacobiProblem(grid=16, sweeps=10, seed=0)
+    res = run_fixed_point(prob, RunConfig(
+        executor="thread", mode="async", n_workers=_TL_P, seed=3,
+        max_updates=10**6, tol=1e-300, max_wall=_TL_WALL_S,
+        faults=FaultProfile(delay_mean=_TL_DELAY_S, delay_std=_TL_DELAY_S / 4),
+        scenario=spot_wave(_TL_P), telemetry=True))
+    cap = res.telemetry
+    assert cap is not None
+    st = timeline_stats(cap, slow_delay_s=0.1, wave_t0=0.5)
+    # Export the actual Perfetto artifact through the CLI path the gate
+    # claims works (summary + trace + schema validation in one pass).
+    cap_path = os.path.join(out_dir, "spot_wave.telemetry.json")
+    trace_path = os.path.join(out_dir, "spot_wave.trace.json")
+    cap.save(cap_path)
+    rc = run_report_main([cap_path, "--chrome", trace_path, "--validate"])
+    st["run_report_rc"] = rc
+    st["wall_time"] = res.wall_time
+    st["preemptions"] = res.preemptions
+    st["restarts"] = res.restarts
+    return st
+
+
+# --------------------------------------------------------------------- #
+def check(cur: dict) -> list:
+    if os.environ.get("REPRO_PERF_SKIP_GATE") == "1":
+        return []
+    fails = []
+    ovh = cur.get("overhead", {})
+    ratio = ovh.get("on_over_off")
+    if ratio is None:
+        fails.append("overhead leg not measured")
+    elif ratio < 1.0 - GATE_MAX_OVERHEAD_FRAC:
+        fails.append(
+            f"telemetry-on arrivals/sec is {ratio:.3f}x telemetry-off "
+            f"(< {1 - GATE_MAX_OVERHEAD_FRAC}x) on {GATE_BACKEND} Jacobi "
+            "g=512 — span recording is leaking into the apply path")
+    ident = cur.get("identity", {})
+    if not ident.get("on_identical"):
+        fails.append("telemetry-on virtual run is not byte-identical to "
+                     "telemetry-off — the recorder perturbs the trajectory")
+    if not ident.get("off_repeat_identical"):
+        fails.append("telemetry-off virtual run is not reproducible — "
+                     "golden delta check is vacuous")
+    if ident.get("max_abs_x_delta", 1.0) != 0.0:
+        fails.append(f"virtual golden delta {ident.get('max_abs_x_delta')} "
+                     "!= 0 with telemetry toggled")
+    tl = cur.get("timeline", {})
+    if tl.get("chrome_trace_errors"):
+        fails.append(f"spot_wave Chrome trace failed schema validation: "
+                     f"{tl['chrome_trace_errors'][:3]}")
+    if not tl.get("incarnation_lanes"):
+        fails.append("spot_wave capture has no wN#r1 incarnation lanes — "
+                     "evictions are invisible in the timeline")
+    elif tl.get("min_lane_gap_s", 0.0) < GATE_MIN_LANE_GAP_S:
+        fails.append(
+            f"smallest eviction lane gap {tl.get('min_lane_gap_s'):.3f}s "
+            f"< {GATE_MIN_LANE_GAP_S}s — downtime is not visible as a "
+            "lane gap")
+    if tl.get("straggler_max_task_s", 0.0) < 0.05:
+        fails.append(
+            "no post-wave task span on the survivor lane reaches 50 ms — "
+            "the scripted 100 ms straggler is invisible in the timeline")
+    if tl.get("run_report_rc") != 0:
+        fails.append("run_report CLI round trip failed on the capture")
+    return fails
+
+
+def _rows(cur: dict) -> list:
+    ovh, ident, tl = cur["overhead"], cur["identity"], cur["timeline"]
+    return [
+        row("telemetry/overhead", 0.0,
+            f"on_over_off={ovh['on_over_off']:.3f}"
+            f";off={ovh['arrivals_per_sec_off']:.0f}/s"
+            f";on={ovh['arrivals_per_sec_on']:.0f}/s"),
+        row("telemetry/bit_identity", 0.0,
+            f"on_identical={ident['on_identical']}"
+            f";delta={ident['max_abs_x_delta']:g}"
+            f";events={ident['telemetry_events']}"),
+        row("telemetry/timeline", 0.0,
+            f"lanes={len(tl['lanes'])}"
+            f";incarnations={len(tl['incarnation_lanes'])}"
+            f";min_gap={tl['min_lane_gap_s']:.2f}s"
+            f";straggler_max={tl['straggler_max_task_s']:.2f}s"
+            f";trace_ok={not tl['chrome_trace_errors']}"),
+    ]
+
+
+def _persist(cur: dict) -> None:
+    out = {
+        "description": "telemetry-plane benchmark: arrivals/sec overhead "
+                       "of RunConfig.telemetry on the process backend at "
+                       "Jacobi g=512, exact off/on bit-identity of the "
+                       "virtual goldens, and a thread-backend spot_wave "
+                       "capture whose Chrome trace shows the 100 ms "
+                       "straggler and eviction lane gaps (see "
+                       "benchmarks/telemetry_bench.py and "
+                       "docs/architecture.md, 'Observability plane')",
+        "gate": {"backend": GATE_BACKEND,
+                 "max_overhead_frac": GATE_MAX_OVERHEAD_FRAC,
+                 "min_lane_gap_s": GATE_MIN_LANE_GAP_S},
+        "overhead": cur["overhead"],
+        "identity": cur["identity"],
+        "timeline": cur["timeline"],
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+
+
+def measure() -> dict:
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            return {"overhead": measure_overhead(),
+                    "identity": measure_identity(),
+                    "timeline": measure_timeline(d)}
+    finally:
+        shutdown_pools()
+
+
+# --------------------------------------------------------------------- #
+# Smoke: virtual-only telemetry sanity (~10 s)
+# --------------------------------------------------------------------- #
+def run_smoke() -> list:
+    """Off/on bit-identity plus a virtual spot_wave capture with
+    incarnation lanes, a schema-valid Chrome render, and the run_report
+    CLI round trip — no wall-clock, no JSON rewrite."""
+    rows = []
+    ident = measure_identity()
+    assert ident["on_identical"], \
+        "telemetry-on virtual run diverged from telemetry-off"
+    assert ident["max_abs_x_delta"] == 0.0
+    rows.append(row("telemetry_smoke/bit_identity", 0.0,
+                    f"delta=0;events={ident['telemetry_events']};OK"))
+    # Virtual spot_wave: the same eviction/straggler story on virtual
+    # time (scenario scaled so the whole script lands within the run).
+    prob = JacobiProblem(grid=16, sweeps=5, seed=0)
+    res = run_fixed_point(prob, RunConfig(
+        executor="virtual", mode="async", n_workers=6, seed=0,
+        max_updates=3000, tol=1e-300, compute_time=2e-3,
+        faults=FaultProfile(delay_mean=4e-3),
+        scenario=spot_wave(6).scaled(0.2), telemetry=True))
+    cap = res.telemetry
+    st = timeline_stats(cap, slow_delay_s=0.1 * 0.2, wave_t0=0.5 * 0.2)
+    assert not st["chrome_trace_errors"], st["chrome_trace_errors"][:3]
+    assert st["incarnation_lanes"], \
+        "virtual spot_wave capture has no incarnation lanes"
+    assert st["scenario_events"] > 0, "no scenario instants captured"
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "cap.json")
+        cap.save(p)
+        rc = run_report_main([p, "--chrome", os.path.join(d, "t.json"),
+                              "--jsonl", os.path.join(d, "e.jsonl"),
+                              "--validate"])
+        assert rc == 0, "run_report CLI failed on a virtual capture"
+    rows.append(row("telemetry_smoke/timeline", 0.0,
+                    f"lanes={len(st['lanes'])}"
+                    f";incarnations={len(st['incarnation_lanes'])}"
+                    f";scenario_events={st['scenario_events']};OK"))
+    return rows
+
+
+def run(fast: bool = False) -> list:
+    """benchmarks.run entry point."""
+    if fast:
+        return run_smoke()
+    cur = measure()
+    _persist(cur)
+    rows = _rows(cur)
+    for f in check(cur):
+        rows.append(row("telemetry_gate_warning", 0.0, f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast virtual-only sanity (no JSON rewrite)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when a telemetry gate fails")
+    args = ap.parse_args()
+    if args.smoke:
+        for r in run_smoke():
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print("telemetry-smoke: OK (virtual off/on bit-identity; spot_wave "
+              "capture renders a valid Chrome trace with incarnation "
+              "lanes)", file=sys.stderr)
+        return
+    cur = measure()
+    for r in _rows(cur):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    _persist(cur)
+    print(f"# wrote {OUT_PATH.relative_to(ROOT)}", file=sys.stderr)
+    if args.check:
+        fails = check(cur)
+        if fails:
+            print("telemetry-check: FAIL", file=sys.stderr)
+            for f in fails:
+                print(f"  - {f}", file=sys.stderr)
+            raise SystemExit(1)
+        gate = ("skipped (REPRO_PERF_SKIP_GATE=1)"
+                if os.environ.get("REPRO_PERF_SKIP_GATE") == "1" else
+                f"telemetry-on >= {1 - GATE_MAX_OVERHEAD_FRAC}x arrivals/sec "
+                f"on {GATE_BACKEND} + exact virtual bit-identity + "
+                f"spot_wave lane gaps >= {GATE_MIN_LANE_GAP_S}s")
+        print(f"telemetry-check: OK ({gate})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -95,6 +95,10 @@ class SignalProbe:
         self.queue_depth_fn: Optional[Callable[[], int]] = getattr(
             controller, "queue_depth_fn", None)
         self.staleness: deque = deque(maxlen=max(16, 4 * self.n_workers))
+        # Telemetry adapter (attach_telemetry): when the run also carries a
+        # TelemetryRecorder, the probe reads the recorder's staleness
+        # window instead of maintaining a second copy of the same signal.
+        self.telemetry_source = None
         self.ticks = 0
         self.worker_seconds = 0.0
         self._ws_t = 0.0  # clock position of the worker-seconds meter
@@ -109,8 +113,22 @@ class SignalProbe:
                 for ev in cfg.scenario.sorted_events())
 
     # ------------------------------------------------------------------ #
+    def attach_telemetry(self, recorder) -> None:
+        """Share the telemetry recorder's staleness window.
+
+        The recorder's ``observe_staleness`` runs first on the arrival
+        path (same ``maxlen`` formula, same feed order), so the probe's
+        :meth:`observe` becomes a no-op and both planes read one buffer —
+        a controller and an exporter can never disagree about the recent
+        staleness distribution.
+        """
+        self.telemetry_source = recorder
+        self.staleness = recorder.staleness_window
+
     def observe(self, staleness: int) -> None:
         """Record one applied update's staleness (arrival path)."""
+        if self.telemetry_source is not None:
+            return  # the recorder already fed the shared window
         self.staleness.append(staleness)
 
     def accumulate(self, member_count: int, t: float) -> None:

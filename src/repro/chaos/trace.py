@@ -49,9 +49,17 @@ from ..core.engine.coordinator import Coordinator, worker_eval
 from ..core.engine.types import FaultProfile, RunConfig, RunResult
 from .scenario import ScenarioEvent
 
-__all__ = ["TraceRecorder", "RunTrace", "replay_trace", "trace_agreement"]
+__all__ = ["TraceRecorder", "RunTrace", "replay_trace", "trace_agreement",
+           "TRACE_EVENT_KINDS"]
 
 TRACE_VERSION = 1
+
+#: Every event kind a :class:`TraceRecorder` can emit.  The telemetry
+#: plane keys its ``TRACE_SPAN_MAP`` on this tuple and
+#: ``tools/docs_check.py`` asserts the two stay in sync, so adding a
+#: trace kind without a telemetry mapping fails the docs gate.
+TRACE_EVENT_KINDS = ("dispatch", "arrival", "restart", "fire", "record",
+                     "offload", "scenario")
 
 
 @dataclass

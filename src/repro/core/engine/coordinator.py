@@ -225,13 +225,14 @@ class AccelPlan:
 
     __slots__ = ("x_pin", "wu_begin", "t_begin", "mver", "stage", "g", "cand",
                  "cur_res", "verdict", "done", "_item", "_pin_lazy",
-                 "_pin_saves")
+                 "_pin_saves", "_tel_t0")
 
     def __init__(self, x_pin: np.ndarray, wu_begin: int, t_begin: float,
                  mver: int = 0):
         self.x_pin = x_pin
         self.wu_begin = wu_begin
         self.t_begin = t_begin
+        self._tel_t0 = t_begin  # telemetry fire-span open (recorder clock)
         self.mver = mver  # membership version at begin (reassignment guard)
         # Copy-on-write pin (accel_begin(pin="lazy")): while True, x_pin is
         # the *live* iterate and _pin_saves holds the (indices, old values)
@@ -489,6 +490,26 @@ class Coordinator:
             cfg.controller.reset(cfg)
             self.probe = SignalProbe(cfg, p, self._accel_stale_limit,
                                      cfg.controller)
+        # --- unified telemetry plane (repro.telemetry) ------------------ #
+        # Span/series recorder, None by default: every hook below is one
+        # `is not None` guard, and the recorder consumes no rng and never
+        # touches iterate floats, so runs are bit-identical off *or* on.
+        self.telemetry = None
+        if cfg.telemetry:
+            from ...telemetry import (  # lazy: keep the default import light
+                TelemetryRecorder, as_telemetry_config)
+
+            self.telemetry = TelemetryRecorder(
+                as_telemetry_config(cfg.telemetry),
+                meta={"executor": cfg.executor, "mode": cfg.mode,
+                      "n_workers": p, "seed": cfg.seed,
+                      "accel": cfg.accel is not None,
+                      "accel_eval": cfg.accel_eval},
+                n_workers=p)
+            if self.probe is not None:
+                # One staleness window for both planes: the probe reads
+                # the recorder's buffer instead of keeping its own.
+                self.probe.attach_telemetry(self.telemetry)
 
     # ----------------------------------------------------------------- #
     def busy(self):
@@ -627,6 +648,11 @@ class Coordinator:
             raise ValueError(f"unknown scenario event kind {ev.kind!r}")
         if self.tracer is not None:
             self.tracer.scenario_event(t, ev)
+        if self.telemetry is not None:
+            # (A coordinator_crash raises above and so never lands here —
+            # the post-restore "restore" instant marks it instead.)
+            self.telemetry.instant("scenario", "coord", t, ev=ev.kind,
+                                   worker=ev.worker, src=source)
 
     # ----------------------------------------------------------------- #
     # Closed-loop autoscaling (repro.autoscale)
@@ -799,6 +825,9 @@ class Coordinator:
         if cfg.sdc_guard:
             if not self._sdc_admit(ind, values):
                 self.sdc_rejects += 1
+                if self.telemetry is not None:
+                    self.telemetry.instant("sdc_screen", "coord",
+                                           worker=worker)
                 if worker is not None and cfg.sdc_strikes > 0:
                     s = self._sdc_strikes.get(worker, 0) + 1
                     self._sdc_strikes[worker] = s
@@ -841,6 +870,8 @@ class Coordinator:
             self.fire_window_arrivals += 1
         self.staleness_sum += staleness
         self.staleness_n += 1
+        if self.telemetry is not None:
+            self.telemetry.observe_staleness(staleness)
         if self.probe is not None:  # autoscale signal window; off => free
             self.probe.observe(staleness)
         if worker is not None:
@@ -929,10 +960,15 @@ class Coordinator:
             return False
         from ...recover.checkpoint import write_checkpoint  # lazy: no cycle
 
+        t_h0 = time.perf_counter()
         write_checkpoint(self, t,
                          loop_state() if callable(loop_state) else loop_state)
         self._last_ckpt_wu = self.wu
         self.checkpoints_written += 1
+        if self.telemetry is not None:
+            self.telemetry.span(
+                "checkpoint", "coord", t, t, wu=self.wu,
+                host_dur_s=time.perf_counter() - t_h0)
         return True
 
     # ----------------------------------------------------------------- #
@@ -980,6 +1016,11 @@ class Coordinator:
         else:
             x_pin = self.x
         plan = AccelPlan(x_pin, self.wu, t, self._membership_version)
+        if self.telemetry is not None:
+            # Recorder clock, not the caller's t: inline fires pass the
+            # t=0.0 default, and the recorder's clock matches t anyway on
+            # the paths that do pass one.
+            plan._tel_t0 = self.telemetry.now()
         if pin == "ref":
             self.pin_copies_avoided += 1
         elif pin == "lazy":
@@ -1113,6 +1154,10 @@ class Coordinator:
             self.accel.record_reject()
             if self.tracer is not None:
                 self.tracer.fire("discard", t)
+            if self.telemetry is not None:
+                t1 = t if t is not None else self.telemetry.now()
+                self.telemetry.fire_span(plan._tel_t0, t1, "discard",
+                                         stale=stale, moved=len(moved))
             return "discard"
         # A commit rewrites x wholesale; any *other* lazy pin still watching
         # must snapshot first (its saves only cover block writes, not the
@@ -1154,6 +1199,10 @@ class Coordinator:
         self.commit_version += 1
         if self.tracer is not None:
             self.tracer.fire(plan.verdict, t)
+        if self.telemetry is not None:
+            t1 = t if t is not None else self.telemetry.now()
+            self.telemetry.fire_span(plan._tel_t0, t1, plan.verdict,
+                                     stale=stale, moved=len(moved))
         return plan.verdict
 
     def maybe_fire_accel(self) -> Optional[str]:
@@ -1182,6 +1231,16 @@ class Coordinator:
             item = plan.next_item()
         if self.measure_fire_windows:
             self.fire_window_s += time.perf_counter() - t0
+        tel = self.telemetry
+        if tel is not None:
+            # Close the inline observability gap: offloaded fires count
+            # the arrivals applied inside the begin->commit window via
+            # apply_return, but an inline fire blocks the loop, so the
+            # overlapping work is exactly what is still in flight — count
+            # the open dispatches.  Host busy accounting rides along for
+            # backends whose metered busy_s is zero (virtual inline).
+            tel.host_busy_s += time.perf_counter() - t0
+            self.fire_window_arrivals += tel.open_tasks
         return self.accel_commit(plan)
 
     # ----------------------------------------------------------------- #
@@ -1245,6 +1304,8 @@ class Coordinator:
         copy to preserve bit-identical golden runs.)"""
         self.arrivals += 1
         self.since_record += 1
+        if self.telemetry is not None:
+            self.telemetry.maybe_sample_busy(t, self.busy_s)
         stop = self.arrivals >= self.max_arrivals
         if self.since_record >= self.record_every:
             res = self.record(t)
@@ -1270,6 +1331,8 @@ class Coordinator:
         """
         self.arrivals += 1
         self.since_record += 1
+        if self.telemetry is not None:
+            self.telemetry.maybe_sample_busy(t, self.busy_s)
         stop = self.arrivals >= self.max_arrivals
         record_due = False
         if self.since_record >= self.record_every:
@@ -1282,11 +1345,18 @@ class Coordinator:
         return stop, record_due
 
     def record(self, t: float) -> float:
+        tel = self.telemetry
+        t_h0 = time.perf_counter() if tel is not None else 0.0
         self.res_norm = self.problem.residual_norm(self.x)
         self._res_version = self._x_version
         self.history.append((t, self.wu, self.res_norm))
         if self.tracer is not None:
             self.tracer.record(t, self.res_norm)
+        if tel is not None:
+            tel.host_busy_s += time.perf_counter() - t_h0
+            tel.span("record", "coord", t, t, res=self.res_norm, wu=self.wu)
+            tel.series_point("residual", t, self.res_norm)
+            tel.maybe_sample_busy(t, self.busy_s)
         return self.res_norm
 
     def record_begin(self, t: float) -> RecordPlan:
@@ -1307,6 +1377,11 @@ class Coordinator:
         self.history.append((plan.t, plan.wu, self.res_norm))
         if self.tracer is not None:
             self.tracer.record(plan.t, self.res_norm)
+        if self.telemetry is not None:
+            tel = self.telemetry
+            tel.span("record", "coord", plan.t, plan.t,
+                     res=self.res_norm, wu=plan.wu, offloaded=offloaded)
+            tel.series_point("residual", plan.t, self.res_norm)
         return self.res_norm
 
     def converged(self) -> bool:
@@ -1328,6 +1403,18 @@ class Coordinator:
             res = self.res_norm
         else:
             res = self.problem.residual_norm(self.x)
+        busy_frac = min(1.0, self.busy_s / t) if t > 0 else 0.0
+        tel = self.telemetry
+        tel_capture = tel_summary = None
+        if tel is not None:
+            if self.busy_s == 0.0:
+                # Inline virtual runs never meter busy_s (coordinator work
+                # is free in virtual time); the recorder's host-clock
+                # fraction closes the inline observability gap.
+                busy_frac = tel.host_busy_frac()
+            tel.finalize(t, self.busy_s)
+            tel_capture = tel.to_capture()
+            tel_summary = tel_capture.summary
         return RunResult(
             x=self.x,
             converged=converged,
@@ -1349,8 +1436,7 @@ class Coordinator:
             offloaded_evals=self.offloaded_evals,
             accel_discards=self.accel_discards,
             accel_partial_commits=self.accel_partial_commits,
-            coordinator_busy_frac=(
-                min(1.0, self.busy_s / t) if t > 0 else 0.0),
+            coordinator_busy_frac=busy_frac,
             fire_window_s=self.fire_window_s,
             fire_window_arrivals=self.fire_window_arrivals,
             preemptions=self.preemptions,
@@ -1373,4 +1459,6 @@ class Coordinator:
             device_refreshes=self.device_refreshes,
             trace=(self.tracer.to_trace() if self.tracer is not None
                    else None),
+            telemetry=tel_capture,
+            telemetry_summary=tel_summary,
         )

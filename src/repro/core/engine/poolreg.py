@@ -121,6 +121,9 @@ class PoolRegistry:
         # families proceed in parallel; of the same family, one factory
         # call runs and the others reuse its pool.
         self._creating: dict = {}
+        # Telemetry: how many times each key's pool was built from scratch
+        # (respawns = created_count - 1; 0 respawns = pure warm reuse).
+        self._created: dict = {}
 
     def __len__(self) -> int:
         with self._lock:
@@ -135,6 +138,11 @@ class PoolRegistry:
         with self._lock:
             e = self._entries.get(key)
             return 0 if e is None else e.leases
+
+    def created_count(self, key) -> int:
+        """Times a pool was built for ``key`` (0 for never-seen keys)."""
+        with self._lock:
+            return self._created.get(key, 0)
 
     # ------------------------------------------------------------------ #
     def acquire(self, key, factory: Callable) -> PoolLease:
@@ -188,6 +196,7 @@ class PoolRegistry:
                 # but inside the per-key lock (one boot per family).
                 pool = factory()
                 with self._lock:
+                    self._created[key] = self._created.get(key, 0) + 1
                     entry = _Entry(pool)
                     if leased:
                         entry.leases += 1

@@ -160,9 +160,16 @@ def _worker_main(
 
     Messages out (``result_q``): ``(w, kind, data, snap_wu)`` with kind in
     {"boot", "ready", "ok", "crash", "rejoin", "eval_ok", "eval_crash",
-    "error"}; for "ok" the values are in the shared result slot and
+    "tel", "error"}; for "ok" the values are in the shared result slot and
     ``data`` is their length; for "eval_ok" the full-map result is in the
     slot (``data`` = its length) or ``data`` is the residual-norm scalar.
+    With ``cfg.telemetry`` set, the worker times its own evaluations with
+    a local ``perf_counter`` and ships them as ``("tel", [(age_s, dur_s,
+    kind), ...])`` batches over the same channel (flushed just before a
+    result once ``worker_batch`` spans accumulate; the parent re-anchors
+    them on its clock via ``TelemetryRecorder.merge_worker_batch``).  An
+    unflushed tail at run end is dropped — span batches are best-effort
+    observability, never part of the numeric protocol.
     An async restartable crash reports "crash" with ``data=True`` (it will
     rejoin), sleeps out its downtime, then reports "rejoin" — so the
     parent counts the restart when the downtime *ends*, the same
@@ -177,6 +184,26 @@ def _worker_main(
         slot_view = np.ndarray(n, dtype=np.float64, buffer=slot.buf)
         result_q.put((w, "boot", None, 0))
         cfg = prof = rng = my_block = dplan = my_read = None
+        tel_buf: List[Tuple[float, float, str]] = []  # (end_perf, dur, kind)
+        tel_bs = 0  # telemetry batch size; 0 = telemetry off
+
+        def tel_note(kind: str, start_perf: float) -> None:
+            if tel_bs:
+                end = time.perf_counter()
+                tel_buf.append((end, end - start_perf, kind))
+
+        def tel_flush() -> None:
+            # Ship a full batch just before a result message, so the
+            # parent only ever sees "tel" adjacent to real traffic (the
+            # pre-run _await / post-run drain can discard strays safely).
+            if tel_bs and len(tel_buf) >= tel_bs:
+                now = time.perf_counter()
+                result_q.put(
+                    (w, "tel",
+                     [(now - end, dur, kind) for end, dur, kind in tel_buf],
+                     0))
+                tel_buf.clear()
+
         while True:
             task = task_q.get()
             if task is None:
@@ -184,6 +211,9 @@ def _worker_main(
             kind = task[0]
             if kind == "run":
                 _, cfg, seed_seq, my_block = task
+                tel_bs = (int(getattr(cfg.telemetry, "worker_batch", 32))
+                          if cfg.telemetry else 0)
+                tel_buf.clear()  # a previous run's unflushed tail
                 # First run pays the jit compiles; later runs hit the
                 # per-interpreter jit cache and this is near-free.
                 warm_problem(problem, cfg, worker=0, blocks=[my_block])
@@ -218,22 +248,30 @@ def _worker_main(
                 xin = slot_view[:n].copy()
                 if (prof.eval_crash_prob > 0.0
                         and rng.random() < prof.eval_crash_prob):
+                    tel_flush()
                     result_q.put((w, "eval_crash", None, 0))
                     continue
+                e0 = time.perf_counter()
                 if ekind == "full_map":
                     g = np.asarray(problem.full_map(xin), dtype=np.float64)
                     slot_view[:n] = g
+                    tel_note("eval", e0)
+                    tel_flush()
                     result_q.put((w, "eval_ok", n, 0))
                 else:
-                    result_q.put(
-                        (w, "eval_ok", float(problem.residual_norm(xin)), 0))
+                    rnorm = float(problem.residual_norm(xin))
+                    tel_note("eval", e0)
+                    tel_flush()
+                    result_q.put((w, "eval_ok", rnorm, 0))
                 continue
             if kind == "sync":
                 _, idx, delay, crashed = task
                 idx = my_block if idx is None else idx
                 with shm_lock:
                     snap = view.copy()
+                c0 = time.perf_counter()
                 vals = worker_eval(problem, cfg, snap[1:], idx)
+                tel_note("compute", c0)
                 if delay > 0.0:
                     time.sleep(delay)
                 if crashed:
@@ -241,9 +279,11 @@ def _worker_main(
                     # its in-flight result is lost either way.
                     if prof.restart_after is not None:
                         time.sleep(prof.restart_after)
+                    tel_flush()
                     result_q.put((w, "crash", None, int(snap[0])))
                 else:
                     slot_view[:len(vals)] = vals
+                    tel_flush()
                     result_q.put((w, "ok", len(vals), int(snap[0])))
                 continue
             if kind == "device":
@@ -256,16 +296,20 @@ def _worker_main(
                     snap_wu = int(view[0])
                     blk = None if fresh else np.copy(view[1:][my_read])
                     needs = [np.copy(view[1:][s]) for s in dplan.needs]
+                c0 = time.perf_counter()
                 if blk is not None:
                     dplan.refresh(blk)
                 vals, dnorm = dplan.step(*needs)
+                tel_note("compute", c0)
             else:
                 _, idx = task
                 idx = my_block if idx is None else idx
                 with shm_lock:
                     snap = view.copy()
                 snap_wu = int(snap[0])
+                c0 = time.perf_counter()
                 vals = worker_eval(problem, cfg, snap[1:], idx)
+                tel_note("compute", c0)
                 dnorm = None
             if cfg.async_overhead > 0.0:
                 time.sleep(cfg.async_overhead)
@@ -274,6 +318,7 @@ def _worker_main(
                 time.sleep(delay)
             if prof.sample_crash(rng):
                 will_rejoin = prof.restart_after is not None
+                tel_flush()
                 result_q.put((w, "crash", will_rejoin, snap_wu))
                 if not will_rejoin:
                     # Simulated permanent crash: dead for the rest of THIS
@@ -286,6 +331,7 @@ def _worker_main(
                 result_q.put((w, "rejoin", None, 0))
                 continue
             slot_view[:len(vals)] = vals
+            tel_flush()
             if dnorm is None:
                 result_q.put((w, "ok", len(vals), snap_wu))
             else:
@@ -376,6 +422,8 @@ class _WorkerPool:
             w, kind, data, _ = self.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed during startup: {data}")
+            if kind == "tel":
+                continue  # stray telemetry batch from a stopped run
             assert kind in kinds, f"unexpected pre-run message {kind!r}"
             seen.add(w)
 
@@ -394,6 +442,8 @@ class _WorkerPool:
         owed = set(rejoins)
         while outstanding or owed:
             w, kind, data, _ = self.get_result(deadline)
+            if kind == "tel":
+                continue  # drained telemetry batch: observability only
             if kind == "rejoin":
                 owed.discard(w)
             else:
@@ -547,6 +597,17 @@ class ProcessPoolExecutor(Executor):
             # here and pipeline over the one warm pool, zero respawns.
             with lease.run_lock:
                 pool = lease.pool
+                if coord.telemetry is not None:
+                    # Pool-plane counters at acquire time: how contended
+                    # the warm pool is and whether this family ever had to
+                    # respawn a fleet (0 respawns = pure warm reuse).
+                    coord.telemetry.series_point(
+                        "pool_leases", 0.0, _POOLS.lease_count(lease.key))
+                    coord.telemetry.series_point(
+                        "pool_respawns", 0.0,
+                        max(0, _POOLS.created_count(lease.key) - 1))
+                    coord.telemetry.meta["pool_runs_served"] = (
+                        pool.runs_served)
                 try:
                     pool.setup_run(cfg, coord.blocks)
                     pool.write_x(coord)
@@ -589,6 +650,9 @@ class ProcessPoolExecutor(Executor):
         t0 = time.perf_counter()
         rounds = 0
         alive = set(range(cfg.n_workers))
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(lambda: time.perf_counter() - t0)
         coord.record(0.0)
         while (coord.wu < cfg.max_updates and alive
                and coord.arrivals < coord.max_arrivals):
@@ -596,22 +660,36 @@ class ProcessPoolExecutor(Executor):
             pool.write_x(coord)
             plans = coord.plan_round(alive, coord.select_round_indices())
             by_worker: Dict[int, Tuple] = {}
+            rs = time.perf_counter() - t0  # round dispatch time
             for w, prof, idx, delay, crashed in plans:
                 by_worker[w] = (prof, idx, crashed)
                 wire_idx = None if idx is coord.blocks[w] else idx
                 pool.task_qs[w].put(("sync", wire_idx, delay, crashed))
             deadline = time.monotonic() + _READY_TIMEOUT_S
-            for _ in range(len(plans)):
+            remaining = len(plans)
+            while remaining:
                 w, kind, data, _snap = pool.get_result(deadline)
                 if kind == "error":
                     raise RuntimeError(f"worker {w} failed: {data}")
+                if kind == "tel":
+                    if tel is not None:
+                        tel.merge_worker_batch(
+                            w, data, time.perf_counter() - t0)
+                    continue
+                remaining -= 1
                 coord.arrivals += 1
                 prof, idx, crashed = by_worker[w]
                 if crashed:
                     coord.note_sync_crash(prof, w, alive)
+                    if tel is not None:
+                        tel.task_open(w, rs)
+                        tel.task_close(w, disp="crash")
                     continue
                 coord.apply_return(idx, pool.slot_views[w][:data], prof,
                                    staleness=0)
+                if tel is not None:
+                    tel.task_open(w, rs)
+                    tel.task_close(w, disp="applied")
             t, verdict = coord.sync_round_tick(
                 rounds, lambda: time.perf_counter() - t0)
             if verdict in ("diverged", "converged"):
@@ -654,6 +732,9 @@ class ProcessPoolExecutor(Executor):
         else:
             t0 = time.perf_counter()
             coord.record(0.0)
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(lambda: time.perf_counter() - t0)
         pending: Dict[int, np.ndarray] = {}  # worker -> dispatched indices
         rejoin_owed: Set[int] = set()  # restartable crashes mid-downtime
         stop = False
@@ -681,6 +762,8 @@ class ProcessPoolExecutor(Executor):
         def dispatch(w: int) -> None:
             idx = coord.select_indices(w)
             pending[w] = idx
+            if tel is not None:
+                tel.task_open(w, time.perf_counter() - t0)
             if w in dev_workers:
                 fresh = (dev_fresh[w]
                          and coord.commit_version == dev_cver[w])
@@ -699,11 +782,18 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "tel":
+                if tel is not None:
+                    tel.merge_worker_batch(w, data, time.perf_counter() - t0)
+                continue
             if kind == "rejoin":
                 # Downtime over: count the restart now (the same
                 # downtime-end convention as thread/ray/virtual).
                 coord.restarts += 1
                 rejoin_owed.discard(w)
+                if tel is not None:
+                    tel.instant("restart", f"w{w}",
+                                time.perf_counter() - t0)
                 continue
             with coord.busy():
                 prof = _fault_for(cfg, w)
@@ -711,6 +801,8 @@ class ProcessPoolExecutor(Executor):
                 redispatch = True
                 if kind == "crash":
                     coord.crashes += 1
+                    if tel is not None:
+                        tel.task_close(w, disp="crash")
                     if w in dev_workers:
                         # The resident block advanced past the lost
                         # return; it no longer mirrors x.
@@ -729,9 +821,16 @@ class ProcessPoolExecutor(Executor):
                         coord.device_local_norms[w] = float(dnorm)
                     else:
                         vlen = data
+                    staleness = coord.wu - snap_wu
                     applied = coord.apply_return(
                         idx, pool.slot_views[w][:vlen], prof,
-                        staleness=coord.wu - snap_wu, worker=w)
+                        staleness=staleness, worker=w)
+                    if tel is not None:
+                        # Close before any inline fire below, so its
+                        # open-task count covers only the *other* workers.
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness)
                     if w in dev_workers:
                         # Freshness granted before any commit below: a
                         # fire bumps commit_version and invalidates.
@@ -783,10 +882,13 @@ class ProcessPoolExecutor(Executor):
         t0 = time.perf_counter()
         rounds = 0
         alive = set(range(cfg.n_workers))
-        coord.record(0.0)
-
         def elapsed() -> float:
             return time.perf_counter() - t0
+
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+        coord.record(0.0)
 
         def apply_event(ev, now: float) -> None:
             coord.apply_scenario_event(ev, now)
@@ -831,22 +933,37 @@ class ProcessPoolExecutor(Executor):
             round_idx = {w: coord.round_assignment(w) for w in parts}
             plans = coord.plan_round(set(parts), round_idx)
             by_worker: Dict[int, Tuple] = {}
+            rs = elapsed()  # round dispatch time
             for w, prof, idx, delay, crashed in plans:
                 by_worker[w] = (prof, idx, crashed)
                 wire_idx = None if idx is coord.blocks[w] else idx
                 pool.task_qs[w].put(("sync", wire_idx, delay, crashed))
             deadline = time.monotonic() + _READY_TIMEOUT_S
-            for _ in range(len(plans)):
+            remaining = len(plans)
+            while remaining:
                 w, kind, data, _snap = pool.get_result(deadline)
                 if kind == "error":
                     raise RuntimeError(f"worker {w} failed: {data}")
+                if kind == "tel":
+                    if tel is not None:
+                        tel.merge_worker_batch(w, data, elapsed())
+                    continue
+                remaining -= 1
                 coord.arrivals += 1
                 prof, idx, crashed = by_worker[w]
                 if crashed:
                     coord.note_sync_crash(prof, w, alive)
+                    if tel is not None:
+                        tel.task_open(w, rs, gen=coord.preempt_gen[w])
+                        tel.task_close(w, disp="crash",
+                                       gen=coord.preempt_gen[w])
                     continue
                 coord.apply_return(idx, pool.slot_views[w][:data], prof,
                                    staleness=0, worker=w)
+                if tel is not None:
+                    tel.task_open(w, rs, gen=coord.preempt_gen[w])
+                    tel.task_close(w, disp="applied",
+                                   gen=coord.preempt_gen[w])
             t, verdict = coord.sync_round_tick(rounds, elapsed)
             if verdict in ("diverged", "converged"):
                 return coord.result(t, rounds, verdict == "converged")
@@ -899,6 +1016,10 @@ class ProcessPoolExecutor(Executor):
         def elapsed() -> float:
             return time.perf_counter() - t0
 
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+
         def _loop_state():
             # Chaos-loop checkpoints resume on the *default* process loop
             # (the script's remaining events die with the control plane).
@@ -912,6 +1033,8 @@ class ProcessPoolExecutor(Executor):
             wire_idx = None if idx is coord.blocks[w] else idx
             if coord.tracer is not None:
                 coord.tracer.dispatch(elapsed(), w, bid, gen)
+            if tel is not None:
+                tel.task_open(w, elapsed(), gen=gen, block=bid)
             pool.task_qs[w].put(("async", wire_idx))
 
         def service_eval(w: int) -> bool:
@@ -1056,6 +1179,10 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = res
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "tel":
+                if tel is not None:
+                    tel.merge_worker_batch(w, data, elapsed())
+                continue
             if kind == "rejoin":
                 rejoin_owed.discard(w)
                 if rejoin_gen.pop(w, -1) == coord.preempt_gen[w]:
@@ -1065,6 +1192,11 @@ class ProcessPoolExecutor(Executor):
                     coord.restarts += 1
                     if coord.tracer is not None:
                         coord.tracer.restart(elapsed(), w)
+                    if tel is not None:
+                        g = coord.preempt_gen[w]
+                        tel.instant(
+                            "restart",
+                            f"w{w}" if g == 0 else f"w{w}#r{g}", elapsed())
                 continue
             if kind in ("eval_ok", "eval_crash"):
                 with coord.busy():
@@ -1116,6 +1248,9 @@ class ProcessPoolExecutor(Executor):
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w,
                                                  "preempt_discard", gen=gen)
+                        if tel is not None:
+                            tel.task_close(w, disp="preempt_discard",
+                                           gen=gen)
                         # A rejoined worker must get fresh work even though
                         # this (doomed) result was a crash report — its
                         # queued task just waits out the downtime.
@@ -1124,6 +1259,8 @@ class ProcessPoolExecutor(Executor):
                     coord.crashes += 1
                     if coord.tracer is not None:
                         coord.tracer.arrival(elapsed(), w, "crash", gen=gen)
+                    if tel is not None:
+                        tel.task_close(w, disp="crash", gen=gen)
                     stop = arrival_tick_either()
                     if not data:
                         alive.discard(w)
@@ -1141,6 +1278,8 @@ class ProcessPoolExecutor(Executor):
                     if coord.tracer is not None:
                         coord.tracer.arrival(elapsed(), w, "preempt_discard",
                                              gen=gen)
+                    if tel is not None:
+                        tel.task_close(w, disp="preempt_discard", gen=gen)
                     idle_or_park(w)
                     continue
                 staleness = coord.wu - snap_wu
@@ -1152,6 +1291,12 @@ class ProcessPoolExecutor(Executor):
                         elapsed(), w,
                         "applied" if applied else "filtered", staleness,
                         gen=gen)
+                if tel is not None:
+                    # Close before any fire below: open-task count then
+                    # covers only the *other* workers' in-flight work.
+                    tel.task_close(
+                        w, disp="applied" if applied else "filtered",
+                        staleness=staleness, gen=gen)
                 if applied:
                     since_fire += 1
                     if (coord.accel is not None
@@ -1210,12 +1355,18 @@ class ProcessPoolExecutor(Executor):
         def elapsed() -> float:
             return time.perf_counter() - t0
 
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+
         def dispatch(w: int) -> None:
             bid, idx = coord.next_dispatch(w)
             pending[w] = idx
             wire_idx = None if idx is coord.blocks[w] else idx
             if coord.tracer is not None:
                 coord.tracer.dispatch(elapsed(), w, bid)
+            if tel is not None:
+                tel.task_open(w, elapsed(), block=bid)
             pool.task_qs[w].put(("async", wire_idx))
 
         def service_eval(w: int) -> bool:
@@ -1253,11 +1404,17 @@ class ProcessPoolExecutor(Executor):
             w, kind, data, snap_wu = pool.get_result(deadline)
             if kind == "error":
                 raise RuntimeError(f"worker {w} failed: {data}")
+            if kind == "tel":
+                if tel is not None:
+                    tel.merge_worker_batch(w, data, elapsed())
+                continue
             if kind == "rejoin":
                 coord.restarts += 1
                 rejoin_owed.discard(w)
                 if coord.tracer is not None:
                     coord.tracer.restart(elapsed(), w)
+                if tel is not None:
+                    tel.instant("restart", f"w{w}", elapsed())
                 continue
             if kind in ("eval_ok", "eval_crash"):
                 with coord.busy():
@@ -1307,6 +1464,8 @@ class ProcessPoolExecutor(Executor):
                     coord.crashes += 1
                     if coord.tracer is not None:
                         coord.tracer.arrival(elapsed(), w, "crash")
+                    if tel is not None:
+                        tel.task_close(w, disp="crash")
                     if not data:  # data=True iff the worker will rejoin
                         alive.discard(w)
                         redispatch = False
@@ -1321,6 +1480,10 @@ class ProcessPoolExecutor(Executor):
                         coord.tracer.arrival(
                             elapsed(), w,
                             "applied" if applied else "filtered", staleness)
+                    if tel is not None:
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness)
                     if applied:
                         since_fire += 1
                         if (coord.accel is not None

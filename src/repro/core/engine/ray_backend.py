@@ -311,12 +311,16 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             t0 = time.perf_counter()
             rounds = 0
             alive: Set[int] = set(range(cfg.n_workers))
+            tel = coord.telemetry
+            if tel is not None:
+                tel.install_clock(lambda: time.perf_counter() - t0)
             coord.record(0.0)
             while (coord.wu < cfg.max_updates and alive
                    and coord.arrivals < coord.max_arrivals):
                 rounds += 1
                 x_ref = ray.put(np.asarray(coord.x))
                 plans = coord.plan_round(alive, coord.select_round_indices())
+                rs = time.perf_counter() - t0  # round dispatch time
                 futs = [
                     actors[w].eval_sync.remote(x_ref, idx, delay, crashed)
                     for w, _, idx, delay, crashed in plans
@@ -324,6 +328,10 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 for (w, prof, idx, _, crashed), fut in zip(plans, futs):
                     kind, vals = ray.get(fut)
                     coord.arrivals += 1
+                    if tel is not None:
+                        tel.task_open(w, rs)
+                        tel.task_close(
+                            w, disp="crash" if crashed else "applied")
                     if crashed:
                         coord.note_sync_crash(prof, w, alive)
                         continue
@@ -352,9 +360,15 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             def elapsed() -> float:
                 return time.perf_counter() - t0
 
+            tel = coord.telemetry
+            if tel is not None:
+                tel.install_clock(elapsed)
+
             def dispatch(w: int) -> None:
                 idx = coord.select_indices(w)
                 x_ref = ray.put(np.asarray(coord.x))  # object-store snapshot
+                if tel is not None:
+                    tel.task_open(w, elapsed())
                 fut = actors[w].eval_async.remote(x_ref, idx)
                 futures[fut] = (w, idx, coord.wu)
 
@@ -365,6 +379,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 while rejoin and rejoin[0][0] <= now:
                     _, w = heapq.heappop(rejoin)
                     coord.restarts += 1
+                    if tel is not None:
+                        tel.instant("restart", f"w{w}", now)
                     dispatch(w)
                 if not futures:  # every live worker is in downtime
                     time.sleep(max(0.0, rejoin[0][0] - now))
@@ -382,6 +398,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                     redispatch = True
                     if kind == "crash":
                         coord.crashes += 1
+                        if tel is not None:
+                            tel.task_close(w, disp="crash")
                         redispatch = False
                         if prof.restart_after is None:
                             alive.discard(w)
@@ -389,9 +407,17 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                             heapq.heappush(
                                 rejoin, (elapsed() + prof.restart_after, w))
                     else:
+                        staleness = coord.wu - launch_wu
                         applied = coord.apply_return(
-                            idx, vals, prof, staleness=coord.wu - launch_wu,
+                            idx, vals, prof, staleness=staleness,
                             worker=w)
+                        if tel is not None:
+                            # Close before the fire below: the open-task
+                            # count covers only the *other* workers.
+                            tel.task_close(
+                                w,
+                                disp="applied" if applied else "filtered",
+                                staleness=staleness)
                         if applied:
                             since_fire += 1
                             if (coord.accel is not None
@@ -418,10 +444,13 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             t0 = time.perf_counter()
             rounds = 0
             alive: Set[int] = set(range(cfg.n_workers))
-            coord.record(0.0)
-
             def elapsed() -> float:
                 return time.perf_counter() - t0
+
+            tel = coord.telemetry
+            if tel is not None:
+                tel.install_clock(elapsed)
+            coord.record(0.0)
 
             def apply_event(ev, now: float) -> None:
                 coord.apply_scenario_event(ev, now)
@@ -447,6 +476,7 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 x_ref = ray.put(np.asarray(coord.x))
                 round_idx = {w: coord.round_assignment(w) for w in parts}
                 plans = coord.plan_round(set(parts), round_idx)
+                rs = elapsed()  # round dispatch time
                 futs = [
                     actors[w].eval_sync.remote(x_ref, idx, delay, crashed)
                     for w, _, idx, delay, crashed in plans
@@ -454,6 +484,11 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 for (w, prof, idx, _, crashed), fut in zip(plans, futs):
                     kind, vals = ray.get(fut)
                     coord.arrivals += 1
+                    if tel is not None:
+                        g = coord.preempt_gen[w]
+                        tel.task_open(w, rs, gen=g)
+                        tel.task_close(
+                            w, disp="crash" if crashed else "applied", gen=g)
                     if crashed:
                         coord.note_sync_crash(prof, w, alive)
                         continue
@@ -506,12 +541,18 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             def elapsed() -> float:
                 return time.perf_counter() - t0
 
+            tel = coord.telemetry
+            if tel is not None:
+                tel.install_clock(elapsed)
+
             def dispatch(w: int) -> None:
                 gen = coord.preempt_gen[w]
                 bid, idx = coord.next_dispatch(w)
                 x_ref = ray.put(np.asarray(coord.x))
                 if coord.tracer is not None:
                     coord.tracer.dispatch(elapsed(), w, bid, gen)
+                if tel is not None:
+                    tel.task_open(w, elapsed(), gen=gen, block=bid)
                 fut = actors[w].eval_async.remote(x_ref, idx)
                 futures[fut] = ("block", w, idx, coord.wu, gen)
 
@@ -602,6 +643,11 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                     coord.restarts += 1
                     if coord.tracer is not None:
                         coord.tracer.restart(now, w)
+                    if tel is not None:
+                        g = coord.preempt_gen[w]
+                        tel.instant(
+                            "restart",
+                            f"w{w}" if g == 0 else f"w{w}#r{g}", now)
                     idle_or_park(w)
                 if not futures and not rejoin:
                     nt = clock.next_time()
@@ -669,6 +715,9 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w,
                                                  "preempt_discard", gen=gen)
+                        if tel is not None:
+                            tel.task_close(w, disp="preempt_discard",
+                                           gen=gen)
                         idle_or_park(w)
                         continue
                     if kind == "crash":
@@ -676,6 +725,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w, "crash",
                                                  gen=gen)
+                        if tel is not None:
+                            tel.task_close(w, disp="crash", gen=gen)
                         if prof.restart_after is None:
                             alive.discard(w)
                         else:
@@ -692,6 +743,12 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                             elapsed(), w,
                             "applied" if applied else "filtered", staleness,
                             gen=gen)
+                    if tel is not None:
+                        # Close before any fire below (open-task count
+                        # then covers only the other workers).
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness, gen=gen)
                     if applied:
                         since_fire += 1
                         if (coord.accel is not None
@@ -736,9 +793,15 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
             def elapsed() -> float:
                 return time.perf_counter() - t0
 
+            tel = coord.telemetry
+            if tel is not None:
+                tel.install_clock(elapsed)
+
             def dispatch(w: int) -> None:
                 idx = coord.select_indices(w)
                 x_ref = ray.put(np.asarray(coord.x))
+                if tel is not None:
+                    tel.task_open(w, elapsed())
                 fut = actors[w].eval_async.remote(x_ref, idx)
                 futures[fut] = ("block", w, idx, coord.wu)
 
@@ -765,6 +828,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                 while rejoin and rejoin[0][0] <= now:
                     _, w = heapq.heappop(rejoin)
                     coord.restarts += 1
+                    if tel is not None:
+                        tel.instant("restart", f"w{w}", now)
                     dispatch(w)
                 if not futures:
                     time.sleep(max(0.0, rejoin[0][0] - now))
@@ -814,6 +879,8 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                     redispatch = True
                     if kind == "crash":
                         coord.crashes += 1
+                        if tel is not None:
+                            tel.task_close(w, disp="crash")
                         redispatch = False
                         if prof.restart_after is None:
                             alive.discard(w)
@@ -821,9 +888,15 @@ else:  # pragma: no cover - this environment has no ray; tested on clusters
                             heapq.heappush(
                                 rejoin, (elapsed() + prof.restart_after, w))
                     else:
+                        staleness = coord.wu - launch_wu
                         applied = coord.apply_return(
-                            idx, vals, prof, staleness=coord.wu - launch_wu,
+                            idx, vals, prof, staleness=staleness,
                             worker=w)
+                        if tel is not None:
+                            tel.task_close(
+                                w,
+                                disp="applied" if applied else "filtered",
+                                staleness=staleness)
                         if applied:
                             since_fire += 1
                             if (coord.accel is not None

@@ -128,12 +128,16 @@ class ThreadPoolExecutor(Executor):
         t0 = time.perf_counter()
         rounds = 0
         alive = set(range(cfg.n_workers))
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(lambda: time.perf_counter() - t0)
         coord.record(0.0)
         with _Pool(max_workers=cfg.n_workers) as pool:
             while (coord.wu < cfg.max_updates and alive
                    and coord.arrivals < coord.max_arrivals):
                 rounds += 1
                 x_snap = coord.x.copy()
+                rs = time.perf_counter() - t0
                 plans = coord.plan_round(alive, coord.select_round_indices())
                 futs = [
                     pool.submit(self._sync_task, problem, cfg, x_snap, idx,
@@ -143,6 +147,10 @@ class ThreadPoolExecutor(Executor):
                 for (w, prof, idx, _, crashed), fut in zip(plans, futs):
                     vals = fut.result()
                     coord.arrivals += 1
+                    if tel is not None:
+                        tel.task_open(w, rs)
+                        tel.task_close(
+                            w, disp="crash" if crashed else "applied")
                     if crashed:
                         coord.note_sync_crash(prof, w, alive)
                         continue
@@ -195,6 +203,10 @@ class ThreadPoolExecutor(Executor):
         def elapsed() -> float:
             return time.perf_counter() - t0
 
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+
         def _loop_state():
             return ({"kind": "thread_async",
                      "since_fire": state["since_fire"]}, {})
@@ -239,6 +251,8 @@ class ThreadPoolExecutor(Executor):
                         return
                     launch_wu = coord.wu
                     idx = coord.select_indices(w)
+                    if tel is not None:
+                        tel.task_open(w, elapsed())
                     if dp is not None:
                         # Fresh resident block: ship only the halo slices
                         # (O(needs)); stale: re-ship the block (O(block)).
@@ -270,6 +284,8 @@ class ThreadPoolExecutor(Executor):
                     dev_fresh = False
                     with lock:
                         coord.crashes += 1
+                        if tel is not None:
+                            tel.task_close(w, disp="crash")
                         if coord.arrival_tick(elapsed()):
                             stop.set()
                     if prof.restart_after is None or stop.is_set():
@@ -279,14 +295,22 @@ class ThreadPoolExecutor(Executor):
                         if stop.is_set():
                             return  # run ended mid-downtime: never rejoined
                         coord.restarts += 1
+                        if tel is not None:
+                            tel.instant("restart", f"w{w}")
                     continue
                 with lock, coord.busy():
                     if stop.is_set():
                         return
+                    staleness = coord.wu - launch_wu
                     applied = coord.apply_return(
-                        idx, vals, prof, staleness=coord.wu - launch_wu,
-                        worker=w
+                        idx, vals, prof, staleness=staleness, worker=w
                     )
+                    if tel is not None:
+                        # Before any inline fire below: its open-task count
+                        # must cover only the *other* workers in flight.
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness)
                     if dp is not None:
                         coord.device_dispatches += 1
                         if blk_vals is not None:
@@ -337,10 +361,14 @@ class ThreadPoolExecutor(Executor):
         rounds = 0
         idle_since = 0.0  # last time a round actually ran (stall window)
         alive = set(range(cfg.n_workers))
-        coord.record(0.0)
 
         def elapsed() -> float:
             return time.perf_counter() - t0
+
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+        coord.record(0.0)
 
         with _Pool(max_workers=cfg.n_workers) as pool:
             while (coord.wu < cfg.max_updates and alive
@@ -373,6 +401,7 @@ class ThreadPoolExecutor(Executor):
                 idle_since = elapsed()
                 rounds += 1
                 x_snap = coord.x.copy()
+                rs = elapsed()
                 round_idx = {w: coord.round_assignment(w) for w in parts}
                 plans = coord.plan_round(set(parts), round_idx)
                 futs = [
@@ -383,6 +412,11 @@ class ThreadPoolExecutor(Executor):
                 for (w, prof, idx, _, crashed), fut in zip(plans, futs):
                     vals = fut.result()
                     coord.arrivals += 1
+                    if tel is not None:
+                        tel.task_open(w, rs, gen=coord.preempt_gen[w])
+                        tel.task_close(
+                            w, disp="crash" if crashed else "applied",
+                            gen=coord.preempt_gen[w])
                     if crashed:
                         coord.note_sync_crash(prof, w, alive)
                         continue
@@ -443,11 +477,20 @@ class ThreadPoolExecutor(Executor):
         def elapsed() -> float:
             return time.perf_counter() - t0
 
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+
         def eval_one(item, prof: FaultProfile):
+            e0 = elapsed()
             if (prof.eval_crash_prob > 0.0
                     and eval_rng.random() < prof.eval_crash_prob):
-                return coord.eval_item(item), False
-            return coord.eval_item(item), True
+                val, offloaded = coord.eval_item(item), False
+            else:
+                val, offloaded = coord.eval_item(item), True
+            if tel is not None:
+                tel.span("eval", "eval", e0, elapsed(), offload=offloaded)
+            return val, offloaded
 
         def run_fire(plan, prof: FaultProfile) -> None:
             if plan._pin_lazy:
@@ -590,6 +633,8 @@ class ThreadPoolExecutor(Executor):
                     prof = coord.fault_for(w)
                     if coord.tracer is not None:
                         coord.tracer.dispatch(elapsed(), w, bid, gen)
+                    if tel is not None:
+                        tel.task_open(w, elapsed(), gen=gen, block=bid)
                 vals = worker_eval(problem, cfg, x_snap, idx)
                 if cfg.async_overhead > 0.0:
                     time.sleep(cfg.async_overhead)
@@ -606,11 +651,16 @@ class ThreadPoolExecutor(Executor):
                                 coord.tracer.arrival(elapsed(), w,
                                                      "preempt_discard",
                                                      gen=gen)
+                            if tel is not None:
+                                tel.task_close(w, disp="preempt_discard",
+                                               gen=gen)
                             continue  # park at loop top until join
                         coord.crashes += 1
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w, "crash",
                                                  gen=gen)
+                        if tel is not None:
+                            tel.task_close(w, disp="crash", gen=gen)
                         if arrival_tick_either(prof):
                             stop.set()
                             cond.notify_all()
@@ -628,6 +678,10 @@ class ThreadPoolExecutor(Executor):
                             coord.restarts += 1
                             if coord.tracer is not None:
                                 coord.tracer.restart(elapsed(), w)
+                            if tel is not None:
+                                tel.instant(
+                                    "restart",
+                                    f"w{w}" if gen == 0 else f"w{w}#r{gen}")
                     continue
                 with cond, coord.busy():
                     if stop.is_set():
@@ -637,6 +691,9 @@ class ThreadPoolExecutor(Executor):
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w,
                                                  "preempt_discard", gen=gen)
+                        if tel is not None:
+                            tel.task_close(w, disp="preempt_discard",
+                                           gen=gen)
                         continue
                     staleness = coord.wu - launch_wu
                     applied = coord.apply_return(
@@ -647,6 +704,10 @@ class ThreadPoolExecutor(Executor):
                             elapsed(), w,
                             "applied" if applied else "filtered", staleness,
                             gen=gen)
+                    if tel is not None:
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness, gen=gen)
                     if applied:
                         state["since_fire"] += 1
                         if (coord.accel is not None
@@ -733,16 +794,25 @@ class ThreadPoolExecutor(Executor):
         def elapsed() -> float:
             return time.perf_counter() - t0
 
+        tel = coord.telemetry
+        if tel is not None:
+            tel.install_clock(elapsed)
+
         def eval_one(item, prof: FaultProfile):
             """Evaluate one pipeline item, simulating eval-service loss.
 
             Returns ``(value, offloaded)``: a crashed evaluation falls
             back to coordinator-side evaluation of the same item.
             """
+            e0 = elapsed()
             if (prof.eval_crash_prob > 0.0
                     and eval_rng.random() < prof.eval_crash_prob):
-                return coord.eval_item(item), False
-            return coord.eval_item(item), True
+                val, offloaded = coord.eval_item(item), False
+            else:
+                val, offloaded = coord.eval_item(item), True
+            if tel is not None:
+                tel.span("eval", "eval", e0, elapsed(), offload=offloaded)
+            return val, offloaded
 
         def run_fire(plan, prof: FaultProfile) -> None:
             if plan._pin_lazy:
@@ -797,6 +867,8 @@ class ThreadPoolExecutor(Executor):
                     bid, idx = coord.next_dispatch(w)
                     if coord.tracer is not None:
                         coord.tracer.dispatch(elapsed(), w, bid)
+                    if tel is not None:
+                        tel.task_open(w, elapsed(), block=bid)
                 vals = worker_eval(problem, cfg, x_snap, idx)
                 if cfg.async_overhead > 0.0:
                     time.sleep(cfg.async_overhead)
@@ -808,6 +880,8 @@ class ThreadPoolExecutor(Executor):
                         coord.crashes += 1
                         if coord.tracer is not None:
                             coord.tracer.arrival(elapsed(), w, "crash")
+                        if tel is not None:
+                            tel.task_close(w, disp="crash")
                         tick_stop, record_due = coord.arrival_tick_offload(
                             elapsed())
                         if record_due and state["rec_plan"] is None:
@@ -825,6 +899,8 @@ class ThreadPoolExecutor(Executor):
                         coord.restarts += 1
                         if coord.tracer is not None:
                             coord.tracer.restart(elapsed(), w)
+                        if tel is not None:
+                            tel.instant("restart", f"w{w}")
                     continue
                 with lock, coord.busy():
                     if stop.is_set():
@@ -837,6 +913,10 @@ class ThreadPoolExecutor(Executor):
                         coord.tracer.arrival(
                             elapsed(), w,
                             "applied" if applied else "filtered", staleness)
+                    if tel is not None:
+                        tel.task_close(
+                            w, disp="applied" if applied else "filtered",
+                            staleness=staleness)
                     if applied:
                         state["since_fire"] += 1
                         if (coord.accel is not None

@@ -236,6 +236,14 @@ class RunConfig:
     # The virtual backend always ignores this knob — fixed-seed virtual
     # runs stay bit-identical to the goldens whatever it is set to.
     device_plane: str = "auto"
+    # Unified telemetry plane (repro.telemetry): None (default, zero-cost
+    # — no recorder is ever constructed), True, or a TelemetryConfig.
+    # When set, the coordinator owns a TelemetryRecorder collecting typed
+    # spans + metric series; the full capture lands on RunResult.telemetry
+    # and a compact digest on RunResult.telemetry_summary.  The recorder
+    # consumes no rng and touches no iterate floats, so enabling it never
+    # changes a trajectory on any backend.
+    telemetry: Optional[object] = None
 
 
 @dataclass
@@ -306,15 +314,20 @@ class RunResult:
     device_refreshes: int = 0  # device blocks re-synced from the host iterate
     # --- trace capture (cfg.capture_trace) -------------------------------- #
     trace: Optional[object] = None  # repro.chaos.RunTrace
+    # --- telemetry plane (cfg.telemetry) ----------------------------------- #
+    telemetry: Optional[object] = None  # repro.telemetry.TelemetryCapture
+    # Compact digest (staleness p50/p95, busy-frac series tail, span
+    # counts, fire ledger) — small enough to ride every benchmark row.
+    telemetry_summary: Optional[dict] = None
 
     # ------------------------------------------------------------------ #
     def to_dict(self, include_history: bool = True,
                 include_x: bool = False) -> dict:
         """JSON-safe dict of this result (the one benchmark row schema).
 
-        ``x`` is omitted unless ``include_x`` (it is O(n)); the trace, when
-        present, serializes through its own ``to_dict``.  Round-trips
-        through :meth:`from_dict`.
+        ``x`` is omitted unless ``include_x`` (it is O(n)); the trace and
+        telemetry capture, when present, serialize through their own
+        ``to_dict``.  Round-trips through :meth:`from_dict`.
         """
         out: dict = {}
         for f in dataclasses.fields(self):
@@ -326,9 +339,12 @@ class RunResult:
                 if include_history:
                     out["history"] = [[float(t), int(wu), float(r)]
                                       for t, wu, r in v]
-            elif f.name == "trace":
+            elif f.name in ("trace", "telemetry"):
                 if v is not None:
-                    out["trace"] = v.to_dict() if hasattr(v, "to_dict") else v
+                    out[f.name] = v.to_dict() if hasattr(v, "to_dict") else v
+            elif f.name == "telemetry_summary":
+                if v is not None:
+                    out["telemetry_summary"] = dict(v)
             elif f.name == "service_fractions":
                 out["service_fractions"] = {
                     str(k): float(sv) for k, sv in (v or {}).items()}

@@ -102,6 +102,7 @@ class VirtualTimeExecutor(Executor):
         rounds = 0
         arrivals = 0
         alive = set(range(cfg.n_workers))
+        tel = coord.telemetry  # None by default: loop below is untouched
         coord.record(t)
         while (coord.wu < cfg.max_updates and alive
                and arrivals < coord.max_arrivals):
@@ -125,10 +126,18 @@ class VirtualTimeExecutor(Executor):
                         coord.restarts += 1
                         cost += prof.restart_after
                     round_time = max(round_time, cost)
+                    if tel is not None:
+                        tel.task_open(w, t)
+                        tel.task_close(w, t + cost, disp="crash")
                     continue
                 round_time = max(round_time, cost)
                 updates.append((idx, vals, prof))
+                if tel is not None:
+                    tel.task_open(w, t)
+                    tel.task_close(w, t + cost)
             t += round_time + cfg.sync_overhead
+            if tel is not None:
+                tel.set_time(t)
             for idx, vals, prof in updates:  # barrier: all computed on same x
                 coord.apply_return(idx, vals, prof, staleness=0)
             if coord.accel is not None and rounds % cfg.fire_every == 0:
@@ -154,6 +163,7 @@ class VirtualTimeExecutor(Executor):
         # semantics as the thread backend's sleep-then-resnapshot.
         heap: List[Tuple[float, int, int, int, object, object]] = []
         seq = 0
+        tel = coord.telemetry  # None by default: loop below is untouched
 
         def launch(worker: int, now: float) -> None:
             nonlocal seq
@@ -163,6 +173,8 @@ class VirtualTimeExecutor(Executor):
             done = now + compute + cfg.async_overhead + prof.sample_delay(coord.rng)
             heapq.heappush(heap, (done, seq, worker, coord.wu, idx, vals))
             seq += 1
+            if tel is not None:
+                tel.task_open(worker, now)
 
         def schedule_restart(worker: int, at: float) -> None:
             nonlocal seq
@@ -242,9 +254,13 @@ class VirtualTimeExecutor(Executor):
         while (heap and coord.wu < cfg.max_updates
                and arrivals < coord.max_arrivals):
             t, _, worker, launch_wu, idx, vals = heapq.heappop(heap)
+            if tel is not None:
+                tel.set_time(t)
             prof = _fault_for(cfg, worker)
             if idx is None:  # restart marker: worker rejoins now
                 coord.restarts += 1
+                if tel is not None:
+                    tel.instant("restart", f"w{worker}", t)
                 if coord.dispatchable(worker):
                     launch(worker, t)
                 continue
@@ -252,16 +268,27 @@ class VirtualTimeExecutor(Executor):
                 # In-flight result of a worker the k-strikes policy already
                 # quarantined: discard, same as a preempted incarnation.
                 coord.preempt_discards += 1
+                if tel is not None:
+                    tel.task_close(worker, t, disp="preempt_discard")
                 continue
             arrivals += 1
             crashed = prof.sample_crash(coord.rng)
             if crashed:
                 coord.crashes += 1
+                if tel is not None:
+                    tel.task_close(worker, t, disp="crash")
             else:
+                staleness = coord.wu - launch_wu
                 applied = coord.apply_return(
-                    idx, vals, prof, staleness=coord.wu - launch_wu,
+                    idx, vals, prof, staleness=staleness,
                     worker=worker if cfg.sdc_guard else None,
                 )
+                if tel is not None:
+                    # Close before any fire below, so an inline fire's
+                    # open-task count covers only the *other* workers.
+                    tel.task_close(
+                        worker, t, disp="applied" if applied else "filtered",
+                        staleness=staleness)
                 if applied:
                     since_fire += 1
                     if coord.accel is not None and since_fire >= cfg.fire_every:
@@ -308,9 +335,12 @@ class VirtualTimeExecutor(Executor):
         rounds = 0
         arrivals = 0
         alive = set(range(cfg.n_workers))
+        tel = coord.telemetry
         coord.record(t)
         while (coord.wu < cfg.max_updates
                and arrivals < coord.max_arrivals):
+            if tel is not None:
+                tel.set_time(t)
             for ev in clock.due(t):
                 coord.apply_scenario_event(ev, t)
             # Controller decisions land at round boundaries — the BSP
@@ -343,10 +373,19 @@ class VirtualTimeExecutor(Executor):
                         coord.restarts += 1
                         cost += prof.restart_after
                     round_time = max(round_time, cost)
+                    if tel is not None:
+                        tel.task_open(w, t, gen=coord.preempt_gen[w])
+                        tel.task_close(w, t + cost, disp="crash",
+                                       gen=coord.preempt_gen[w])
                     continue
                 round_time = max(round_time, cost)
                 updates.append((w, idx, vals, prof))
+                if tel is not None:
+                    tel.task_open(w, t, gen=coord.preempt_gen[w])
+                    tel.task_close(w, t + cost, gen=coord.preempt_gen[w])
             t += round_time + cfg.sync_overhead
+            if tel is not None:
+                tel.set_time(t)
             for w, idx, vals, prof in updates:
                 coord.apply_return(idx, vals, prof, staleness=0, worker=w)
             if coord.accel is not None and rounds % cfg.fire_every == 0:
@@ -383,6 +422,7 @@ class VirtualTimeExecutor(Executor):
             coord.tracer = TraceRecorder(cfg, self.name, problem)
         clock = ScenarioClock(cfg.scenario)
         t = 0.0
+        tel = coord.telemetry
         # Events before the first dispatch (flash_crowd's t=0 preempts)
         # shape the initial membership.
         for ev in clock.due(0.0):
@@ -407,6 +447,8 @@ class VirtualTimeExecutor(Executor):
                     + prof.sample_delay(coord.rng))
             if coord.tracer is not None:
                 coord.tracer.dispatch(now, worker, bid, gen)
+            if tel is not None:
+                tel.task_open(worker, now, gen=gen, block=bid)
             push(done, "work", (worker, gen, coord.wu, idx, vals))
 
         def plumb_controller(actions, now: float) -> None:
@@ -483,6 +525,8 @@ class VirtualTimeExecutor(Executor):
                and arrivals < coord.max_arrivals):
             t, _, tag, data = heapq.heappop(heap)
             t_now = t
+            if tel is not None:
+                tel.set_time(t)
             if tag == "chaos":
                 (ev,) = data
                 was_paused = set(coord.paused)
@@ -509,6 +553,9 @@ class VirtualTimeExecutor(Executor):
                 coord.restarts += 1
                 if coord.tracer is not None:
                     coord.tracer.restart(t, worker)
+                if tel is not None:
+                    tel.instant("restart", f"w{worker}" if gen == 0
+                                else f"w{worker}#r{gen}", t)
                 if coord.dispatchable(worker):
                     launch(worker, t)
                 elif worker in coord.active:  # rejoined into a pause
@@ -523,6 +570,9 @@ class VirtualTimeExecutor(Executor):
                 if coord.tracer is not None:
                     coord.tracer.arrival(t, worker, "preempt_discard",
                                          gen=gen)
+                if tel is not None:
+                    tel.task_close(worker, t, disp="preempt_discard",
+                                   gen=gen)
                 continue
             prof = coord.fault_for(worker)
             arrivals += 1
@@ -531,6 +581,8 @@ class VirtualTimeExecutor(Executor):
                 coord.crashes += 1
                 if coord.tracer is not None:
                     coord.tracer.arrival(t, worker, "crash", gen=gen)
+                if tel is not None:
+                    tel.task_close(worker, t, disp="crash", gen=gen)
             else:
                 staleness = coord.wu - launch_wu
                 applied = coord.apply_return(
@@ -540,6 +592,10 @@ class VirtualTimeExecutor(Executor):
                     coord.tracer.arrival(
                         t, worker, "applied" if applied else "filtered",
                         staleness, gen=gen)
+                if tel is not None:
+                    tel.task_close(
+                        worker, t, disp="applied" if applied else "filtered",
+                        staleness=staleness, gen=gen)
                 if applied:
                     since_fire += 1
                     if coord.accel is not None and since_fire >= cfg.fire_every:
@@ -590,6 +646,7 @@ class VirtualTimeExecutor(Executor):
         eval_cost = cfg.eval_time if cfg.eval_time is not None else compute
         worker_eval_mode = cfg.accel_eval == "worker"
         t = 0.0
+        tel = coord.telemetry
         coord.record(0.0)
         heap: List[Tuple[float, int, str, tuple]] = []
         seq = 0
@@ -609,6 +666,8 @@ class VirtualTimeExecutor(Executor):
             vals = worker_eval(problem, cfg, coord.x, idx)
             done = (now + compute + cfg.async_overhead
                     + prof.sample_delay(coord.rng))
+            if tel is not None:
+                tel.task_open(worker, now)
             push(done, "work", (worker, coord.wu, idx, vals))
 
         def submit_next_eval(now: float) -> None:
@@ -663,9 +722,14 @@ class VirtualTimeExecutor(Executor):
         while (heap and coord.wu < cfg.max_updates
                and arrivals < coord.max_arrivals):
             te, _, tag, data = heapq.heappop(heap)
+            if tel is not None:
+                tel.set_time(te)
             if tag == "eval":
                 # One eval-server item finished (worker placement only).
                 t = te
+                if tel is not None:
+                    tel.span("eval", "eval", te - eval_cost, te,
+                             offload=True)
                 plan = plans[0]
                 value = coord.eval_item(plan.next_item())
                 if isinstance(plan, AccelPlan):
@@ -690,6 +754,8 @@ class VirtualTimeExecutor(Executor):
                 (worker,) = data
                 t = te
                 coord.restarts += 1
+                if tel is not None:
+                    tel.instant("restart", f"w{worker}", te)
                 launch(worker, te)
                 continue
             worker, launch_wu, idx, vals = data
@@ -698,14 +764,24 @@ class VirtualTimeExecutor(Executor):
             # a result landing inside the busy window waits it out.
             t_eff = max(te, coord_free) if not worker_eval_mode else te
             t = t_eff
+            if tel is not None:
+                tel.set_time(t_eff)
             arrivals += 1
             crashed = prof.sample_crash(coord.rng)
             if crashed:
                 coord.crashes += 1
+                if tel is not None:
+                    tel.task_close(worker, t_eff, disp="crash")
             else:
+                staleness = coord.wu - launch_wu
                 applied = coord.apply_return(
-                    idx, vals, prof, staleness=coord.wu - launch_wu
+                    idx, vals, prof, staleness=staleness
                 )
+                if tel is not None:
+                    tel.task_close(
+                        worker, t_eff,
+                        disp="applied" if applied else "filtered",
+                        staleness=staleness)
                 if applied:
                     since_fire += 1
                     if coord.accel is not None and since_fire >= cfg.fire_every:

@@ -61,6 +61,12 @@ class ServiceConfig:
     # checkpoints are written at arrival boundaries, so work applied after
     # the snapshot is redone by the resumed run, never double-counted.
     crash_retries: int = 0
+    # Service-plane telemetry: a recorder on the service itself collecting
+    # one "serve" span per request (admission -> dispatch -> finish, with
+    # tenant and queueing delay) and a queue-depth series.  Feeds
+    # repro.telemetry.export.to_prometheus; independent of any per-run
+    # RunConfig.telemetry the requests may carry.
+    telemetry: bool = False
 
     def __post_init__(self) -> None:
         if self.max_active < 1:
@@ -170,6 +176,16 @@ class SolverService:
         self._failed = 0
         self._rejected = 0
         self._crash_resumes = 0  # coordinator crashes resumed from checkpoint
+        self.telemetry = None
+        self._tel_t0 = time.monotonic()
+        if self.config.telemetry:
+            from ..telemetry import TelemetryRecorder
+
+            self.telemetry = TelemetryRecorder(
+                meta={"service": True,
+                      "max_active": self.config.max_active})
+            self.telemetry.install_clock(
+                lambda: time.monotonic() - self._tel_t0)
         self._dispatchers = [
             threading.Thread(target=self._dispatch_loop, args=(i,),
                              name=f"solver-serve-{i}", daemon=True)
@@ -201,8 +217,29 @@ class SolverService:
                     f"pending queue full ({self.config.max_pending}); "
                     "request rejected")
             self._scheduler.push(req)
+            if self.telemetry is not None:
+                self.telemetry.series_point(
+                    "queue_depth", self.telemetry.now(),
+                    len(self._scheduler))
             self._cond.notify()
         return ticket
+
+    def _tel_finish(self, req, ok: bool) -> None:
+        """Emit the request's serve span (caller holds ``_cond``).
+
+        Ticket stamps are ``time.monotonic``; the span rebases them onto
+        the service clock so every request shares one timeline origin.
+        """
+        tel = self.telemetry
+        if tel is None:
+            return
+        tk = req.ticket
+        t1 = tk.finished_s if tk.finished_s is not None else time.monotonic()
+        tel.span("serve", f"tenant:{tk.tenant}",
+                 tk.queued_s - self._tel_t0, t1 - self._tel_t0,
+                 tenant=tk.tenant, ok=ok,
+                 wait_s=tk.wait_s if tk.wait_s is not None else 0.0)
+        tel.series_point("queue_depth", tel.now(), len(self._scheduler))
 
     def _dispatch_loop(self, i: int) -> None:
         last_family = None
@@ -234,6 +271,7 @@ class SolverService:
                     self._active -= 1
                     self._failed += 1
                     req.ticket._finish(exception=e)
+                    self._tel_finish(req, ok=False)
                     self._cond.notify_all()
             else:
                 with self._cond:
@@ -241,6 +279,7 @@ class SolverService:
                     self._served[req.tenant] = (
                         self._served.get(req.tenant, 0) + 1)
                     req.ticket._finish(result=result)
+                    self._tel_finish(req, ok=True)
                     self._cond.notify_all()
             last_family = req.family
 

@@ -52,6 +52,18 @@ Fails when:
   ``device_plane`` knob row or docs/architecture.md lacks the
   "Device-resident data plane" section, or ``BENCH_hotpath.json`` lost
   its ``device_dispatch_sec`` rows;
+- ``BENCH_telemetry.json`` (the telemetry-plane benchmark, rewritten by
+  ``make perf``) is missing, lacks its gate spec (backend /
+  max_overhead_frac / min_lane_gap_s), or its overhead / identity /
+  timeline sections lack the measured off/on rates, the exact-zero
+  golden delta, or the lane-gap record;
+- the telemetry metric table in README.md (after
+  ``<!-- telemetry-table -->``) does not list exactly the registered
+  metric series (``repro.telemetry.METRICS``);
+- a scenario event kind (``repro.chaos.scenario.EVENT_KINDS``) or trace
+  event kind (``repro.chaos.trace.TRACE_EVENT_KINDS``) has no telemetry
+  span mapping, or a mapping targets an unregistered span kind — an
+  event class can never be silently uninstrumented;
 - a ``__pycache__`` directory is tracked by git, or ``.gitignore`` does
   not cover ``__pycache__/`` (bytecode must never land in the tree).
 
@@ -76,6 +88,7 @@ SCENARIO_MARKER = "<!-- scenario-table -->"
 SERVICE_MARKER = "<!-- service-table -->"
 POLICY_MARKER = "<!-- policy-table -->"
 RECOVERY_MARKER = "<!-- recovery-knobs -->"
+TELEMETRY_MARKER = "<!-- telemetry-table -->"
 
 
 def _slug(heading: str) -> str:
@@ -434,6 +447,81 @@ def check_recovery_knobs(errors: list) -> None:
             f"{sorted(missing)}")
 
 
+def check_telemetry_trajectory(errors: list) -> None:
+    """BENCH_telemetry.json must exist and keep its documented shape."""
+    path = ROOT / "BENCH_telemetry.json"
+    if not path.exists():
+        errors.append("BENCH_telemetry.json missing "
+                      "(run `python -m benchmarks.telemetry_bench`)")
+        return
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        errors.append(f"BENCH_telemetry.json unparseable: {e}")
+        return
+    gate = data.get("gate", {})
+    for key in ("backend", "max_overhead_frac", "min_lane_gap_s"):
+        if key not in gate:
+            errors.append(f"BENCH_telemetry.json: missing gate.{key}")
+    ovh = data.get("overhead", {})
+    for key in ("arrivals_per_sec_off", "arrivals_per_sec_on",
+                "on_over_off"):
+        if key not in ovh:
+            errors.append(f"BENCH_telemetry.json: missing overhead.{key}")
+    ident = data.get("identity", {})
+    for key in ("on_identical", "off_repeat_identical", "max_abs_x_delta"):
+        if key not in ident:
+            errors.append(f"BENCH_telemetry.json: missing identity.{key}")
+    tl = data.get("timeline", {})
+    for key in ("incarnation_lanes", "min_lane_gap_s",
+                "straggler_max_task_s", "chrome_trace_errors"):
+        if key not in tl:
+            errors.append(f"BENCH_telemetry.json: missing timeline.{key}")
+
+
+def check_telemetry_table(errors: list) -> None:
+    """The README telemetry table must list exactly the registered metric
+    series — the recorder's METRICS dict is the single source of truth."""
+    from repro.telemetry import METRICS
+
+    text = (ROOT / "README.md").read_text()
+    if TELEMETRY_MARKER not in text:
+        errors.append(f"README.md: missing {TELEMETRY_MARKER} marker")
+        return
+    names = _marker_table_names(text, TELEMETRY_MARKER)
+    registered = set(METRICS)
+    if names != registered:
+        errors.append(
+            "README.md telemetry table does not match the metric registry "
+            f"(repro.telemetry.METRICS): table={sorted(names)} "
+            f"registry={sorted(registered)}")
+
+
+def check_telemetry_mappings(errors: list) -> None:
+    """Every scenario/trace event kind must map into the span taxonomy, so
+    an event class can never be silently uninstrumented."""
+    from repro.chaos.scenario import EVENT_KINDS
+    from repro.chaos.trace import TRACE_EVENT_KINDS
+    from repro.telemetry import SCENARIO_SPAN_MAP, SPAN_KINDS, TRACE_SPAN_MAP
+
+    unmapped = set(EVENT_KINDS) - set(SCENARIO_SPAN_MAP)
+    if unmapped:
+        errors.append(
+            "scenario event kinds without a telemetry span mapping "
+            f"(SCENARIO_SPAN_MAP): {sorted(unmapped)}")
+    unmapped = set(TRACE_EVENT_KINDS) - set(TRACE_SPAN_MAP)
+    if unmapped:
+        errors.append(
+            "trace event kinds without a telemetry span mapping "
+            f"(TRACE_SPAN_MAP): {sorted(unmapped)}")
+    bad = (set(SCENARIO_SPAN_MAP.values())
+           | set(TRACE_SPAN_MAP.values())) - set(SPAN_KINDS)
+    if bad:
+        errors.append(
+            f"telemetry span mappings target unregistered span kinds: "
+            f"{sorted(bad)}")
+
+
 def check_device_plane_docs(errors: list) -> None:
     """The device-resident data plane must stay documented: a README knob
     row for ``device_plane`` and an architecture section describing the
@@ -494,6 +582,9 @@ def main() -> None:
     check_policy_table(errors)
     check_recovery_trajectory(errors)
     check_recovery_knobs(errors)
+    check_telemetry_trajectory(errors)
+    check_telemetry_table(errors)
+    check_telemetry_mappings(errors)
     check_device_plane_docs(errors)
     check_pycache(errors)
     if errors:
@@ -503,10 +594,11 @@ def main() -> None:
         raise SystemExit(1)
     print(f"docs-check: OK ({len(DOCS)} files, {n_links} intra-repo links "
           "and anchors, executor + scenario + service + policy + "
-          "recovery-knob tables match their registries, "
+          "recovery-knob + telemetry tables match their registries, "
           "BENCH_hotpath.json / BENCH_offload.json / BENCH_serve.json / "
-          "BENCH_chaos.json / BENCH_autoscale.json / BENCH_recovery.json "
-          "schemas intact, device-plane docs present, no tracked "
+          "BENCH_chaos.json / BENCH_autoscale.json / BENCH_recovery.json / "
+          "BENCH_telemetry.json schemas intact, every event kind has a "
+          "telemetry mapping, device-plane docs present, no tracked "
           "__pycache__)")
 
 
